@@ -1,0 +1,36 @@
+"""Multiplier zoo fidelity table: measured MAE/MRE per multiplier (EvoApprox
+convention) + low-rank error-factorization fidelity per rank.
+
+Emits CSV: multiplier,bits,mae_pct,mre_pct,wce  then  multiplier,rank,
+exact_frac,energy,max_abs_err.
+"""
+from __future__ import annotations
+
+from repro.core import error_stats, factorize_error, get_multiplier
+from repro.core.multipliers import REGISTRY
+
+NAMED = ["mul8s_1L2H", "mul12s_2KM", "mul8s_trunc2", "mul8s_trunc3",
+         "mul8s_bam5", "mul8s_bam6", "mul8s_mitchell", "mul8s_drum6",
+         "mul12s_trunc2", "mul12s_mitchell"]
+
+
+def main():
+    print("multiplier,bits,mae_pct,mre_pct,worst_case_err")
+    for name in NAMED:
+        if name not in REGISTRY:
+            continue
+        m = get_multiplier(name)
+        s = error_stats(m)
+        print(f"{name},{s['bits']},{s['mae_pct']:.6g},{s['mre_pct']:.6g},"
+              f"{s['worst_case_err']:.0f}")
+    print()
+    print("multiplier,rank,exact_frac,energy,max_abs_err")
+    for name in ("mul8s_1L2H", "mul8s_mitchell", "mul8s_drum6"):
+        for rank in (2, 4, 8, 16, 32):
+            lr = factorize_error(get_multiplier(name), rank)
+            print(f"{name},{rank},{lr.exact_frac:.4f},{lr.energy:.6f},"
+                  f"{lr.max_abs_err:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Render dry-run result JSONs into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report results_pod.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(path: str) -> None:
+    recs = json.load(open(path))
+    print(f"### {path}")
+    print("| arch | shape | variant | bottleneck | T_comp | T_mem | T_coll | "
+          "MODEL/HLO | roofline | args/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if "skipped" in r:
+            print(f"| {r['arch']} | {r['shape']} | — | SKIP | — | — | — | — | — | — |")
+            continue
+        if "error" in r:
+            print(f"| {r['arch']} | {r['shape']} | — | ERROR | — | — | — | — | — | — |")
+            continue
+        ma = r["memory_analysis"]
+        print(f"| {r['arch']} | {r['shape']} | {r.get('variant', 'baseline')}"
+              f"{'+' + r['acu'] if r.get('acu') else ''} | {r['bottleneck']} | "
+              f"{r['t_compute']*1e3:.1f}ms | {r['t_memory']*1e3:.1f}ms | "
+              f"{r['t_collective']*1e3:.1f}ms | {r['useful_ratio']:.3f} | "
+              f"{r['roofline_frac']*100:.2f}% | "
+              f"{ma['argument_bytes']/2**30:.2f}GiB |")
+    n_ok = sum(1 for r in recs if "t_compute" in r)
+    n_skip = sum(1 for r in recs if "skipped" in r)
+    n_err = sum(1 for r in recs if "error" in r)
+    print(f"\n{n_ok} compiled / {n_skip} skipped / {n_err} errors\n")
+
+
+def main():
+    paths = sys.argv[1:] or ["results_pod.json", "results_multipod.json",
+                             "results_pod_optimized.json"]
+    for p in paths:
+        try:
+            render(p)
+        except FileNotFoundError:
+            print(f"(missing {p})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Benchmark driver: one function per paper table (+ kernel microbench).
+
+``python -m benchmarks.run [--fast]`` prints CSV sections:
+  [table2]  accuracy: fp32/quant/approx/retrained per DNN x ACU   (paper Tab.2)
+  [table4]  emulation wall-clock speedups per mode                (paper Tab.4)
+  [fidelity] multiplier MAE/MRE + low-rank factorization fidelity (paper Tab.2 header)
+  [kernels] Pallas kernel micro-shape timings (interpret mode, CPU)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def section(name):
+    print(f"\n[{name}]", flush=True)
+
+
+def kernel_micro():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import build_lut, factorize_error, get_multiplier
+    from repro.kernels.err_matmul.ops import err_matmul
+    from repro.kernels.lut_matmul.ops import lut_matmul
+
+    mult = get_multiplier("mul8s_1L2H")
+    lut = jnp.asarray(build_lut(mult))
+    lr = factorize_error(mult, 8)
+    f, g = jnp.asarray(lr.f), jnp.asarray(lr.g)
+    rng = np.random.default_rng(0)
+    print("kernel,M,K,N,us_per_call,derived")
+    for (M, K, N) in [(128, 128, 128), (256, 256, 256)]:
+        a = jnp.asarray(rng.integers(-128, 128, (M, K)), jnp.int32)
+        w = jnp.asarray(rng.integers(-128, 128, (K, N)), jnp.int32)
+        for name, fn in [
+            ("lut_matmul", lambda: lut_matmul(a, w, lut, 128, interpret=True)),
+            ("err_matmul", lambda: err_matmul(a, w, f, g, 128, interpret=True)),
+        ]:
+            jax.block_until_ready(fn())
+            t0 = time.monotonic()
+            jax.block_until_ready(fn())
+            us = (time.monotonic() - t0) * 1e6
+            flops = 2 * M * K * N
+            print(f"{name},{M},{K},{N},{us:.0f},{flops/1e6:.1f}MFLOP-equiv")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the accuracy table (slowest section)")
+    args = ap.parse_args(argv)
+
+    section("fidelity")
+    from benchmarks import multiplier_fidelity
+    multiplier_fidelity.main()
+
+    section("table4")
+    from benchmarks import table4_speedup
+    table4_speedup.main()
+
+    if not args.fast:
+        section("table2")
+        from benchmarks import table2_accuracy
+        table2_accuracy.main()
+
+    section("kernels")
+    kernel_micro()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""Paper Table 4 analogue: emulation wall-clock per mode.
+
+Ladder (same structure as the paper's Native / Baseline / AdaPT columns):
+  native     — fp32 exact (no emulation)
+  baseline   — FUNCTIONAL elementwise ACU (the paper's unoptimized baseline;
+               76.5 min ResNet50 regime)
+  adapt_lut  — vectorized LUT-gather GEMM (the paper's optimized engine,
+               TPU-adapted; 1.7 min regime)
+  lowrank    — beyond-paper error-factorized MXU GEMM (DESIGN.md §3)
+  quantonly  — exact int GEMM (emulation lower bound)
+
+Run on this container's CPU; the TPU-side projection of the same ladder is
+EXPERIMENTS.md §Perf hillclimb #3. Emits CSV:
+model,mode,ms_per_batch,speedup_vs_baseline
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_acu
+from repro.core.acu import AcuMode
+from repro.core.approx_ops import ApproxConfig
+from repro.models.vision import cnn_forward, init_cnn, init_resnet, resnet_forward
+
+KEY = jax.random.PRNGKey(0)
+
+import dataclasses
+
+_LUT_ACU = make_acu("mul8s_1L2H", AcuMode.LUT)
+MODES = {
+    "native": None,
+    # paper's "Baseline Approx.": LUTs, no vectorization/chunking optimization
+    "baseline_lut": ApproxConfig(acu=dataclasses.replace(_LUT_ACU, lut_chunk=0)),
+    # paper's AdaPT engine, TPU/XLA adaptation: chunked vectorized gathers
+    "adapt_lut": ApproxConfig(acu=_LUT_ACU),
+    "functional": ApproxConfig(acu=make_acu("mul8s_1L2H", AcuMode.FUNCTIONAL)),
+    # beyond-paper: low-rank error-corrected exact GEMM
+    "lowrank_r8": ApproxConfig(acu=make_acu("mul8s_1L2H", AcuMode.LOWRANK, rank=8)),
+    "quant_only": ApproxConfig(acu=make_acu("mul8s_exact", AcuMode.EXACT)),
+}
+
+
+def timeit(fn, *args, reps: int = 3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))  # warmup/compile
+    t0 = time.monotonic()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.monotonic() - t0) / reps * 1e3
+
+
+def bench_model(name, init, fwd, x):
+    p = init(KEY)
+    rows = []
+    times = {}
+    for mode, acfg in MODES.items():
+        f = jax.jit(lambda p, x, acfg=acfg: fwd(p, x, acfg))
+        times[mode] = timeit(f, p, x)
+    base = times["baseline_lut"]
+    for mode, ms in times.items():
+        rows.append(f"{name},{mode},{ms:.1f},{base / ms:.1f}x")
+    return rows
+
+
+def main():
+    print("model,mode,ms_per_batch,speedup_vs_baseline")
+    x = jax.random.normal(KEY, (16, 3, 32, 32))
+    for row in bench_model("CNN-vgg32", lambda k: init_cnn(k, width=24),
+                           cnn_forward, x):
+        print(row)
+    for row in bench_model("ResNet-mini",
+                           lambda k: init_resnet(k, width=16, n_blocks=2),
+                           lambda p, x, a: resnet_forward(p, x, a, n_blocks=2), x):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

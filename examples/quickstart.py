@@ -1,0 +1,67 @@
+"""Quickstart: emulate an approximate multiplier inside a CNN in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Mirrors the paper's Fig. 2 flow: pick a DNN -> pick an ACU -> calibrate ->
+evaluate approximately -> (optionally) fine-tune. Runs in <1 min on CPU.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import error_stats, get_multiplier, make_acu
+from repro.core.acu import AcuMode
+from repro.core.approx_ops import ApproxConfig
+from repro.data.pipeline import image_task
+from repro.models.vision import cnn_forward, init_cnn
+
+# 1. the DNN (a small VGG-style CNN) and a synthetic classification task
+key = jax.random.PRNGKey(0)
+params = init_cnn(key, n_classes=4, width=8, img=16)
+task = image_task(n_classes=4, size=16)
+
+# 2. the approximate compute unit: the paper's lossy 8-bit multiplier role,
+#    emulated bit-exactly through its VMEM look-up table
+print("multiplier stats:", error_stats(get_multiplier("mul8s_1L2H")))
+acfg = ApproxConfig(acu=make_acu("mul8s_1L2H", AcuMode.LUT))
+
+# 3. quick training (exact fp32), then accuracy under exact vs approx compute
+def accuracy(p, acfg=None, n=3):
+    it = iter(task(64, seed=99))
+    hits = tot = 0
+    for _ in range(n):
+        b = next(it)
+        pred = jnp.argmax(cnn_forward(p, jnp.asarray(b["image"]), acfg), -1)
+        hits += int((pred == jnp.asarray(b["label"])).sum())
+        tot += 64
+    return hits / tot
+
+def xent(p, img, lab, acfg=None):
+    logits = cnn_forward(p, img, acfg)
+    return (jax.nn.logsumexp(logits, -1) -
+            jnp.take_along_axis(logits, lab[:, None], -1)[:, 0]).mean()
+
+@jax.jit
+def sgd(p, img, lab):
+    return jax.tree.map(lambda w, g: w - 3e-3 * g, p,
+                        jax.grad(xent)(p, img, lab))
+
+it = iter(task(64, seed=1))
+for _ in range(60):
+    b = next(it)
+    params = sgd(params, jnp.asarray(b["image"]), jnp.asarray(b["label"]))
+
+print(f"fp32 accuracy:        {accuracy(params):.3f}")
+print(f"approx (mul8s_1L2H):  {accuracy(params, acfg):.3f}")
+
+# 4. approximation-aware fine-tuning (approx forward, STE backward)
+@jax.jit
+def qat_step(p, img, lab):
+    return jax.tree.map(lambda w, g: w - 1e-3 * g, p,
+                        jax.grad(lambda p: xent(p, img, lab, acfg))(p))
+
+it = iter(task(64, seed=2))
+for _ in range(30):
+    b = next(it)
+    params = qat_step(params, jnp.asarray(b["image"]), jnp.asarray(b["label"]))
+
+print(f"after QAT recovery:   {accuracy(params, acfg):.3f}")

@@ -1,0 +1,128 @@
+"""Paper Table-2 flow as a script: quantize -> evaluate approx -> retrain.
+
+    PYTHONPATH=src python examples/retrain_recovery.py [--acu mul8s_1L2H]
+
+Shows calibration (percentile histogram observer), post-training
+quantization, the accuracy drop under a lossy ACU, and QAT recovery —
+the full Fig. 1 pipeline on a CNN + an LSTM.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_acu
+from repro.core.acu import AcuMode
+from repro.core.approx_ops import ApproxConfig
+from repro.core.calibration import HistogramObserver, calibrate_activation
+from repro.data.pipeline import image_task, text_cls_task
+from repro.models.rnn import init_lstm, lstm
+from repro.models.vision import cnn_forward, init_cnn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def cnn_flow(acu_name: str):
+    print(f"\n=== CNN x {acu_name} ===")
+    task = image_task(n_classes=4, size=16)
+    params = init_cnn(KEY, n_classes=4, width=8, img=16)
+
+    def xent(p, img, lab, acfg=None):
+        logits = cnn_forward(p, img, acfg)
+        return (jax.nn.logsumexp(logits, -1) -
+                jnp.take_along_axis(logits, lab[:, None], -1)[:, 0]).mean()
+
+    def train(p, steps, lr, acfg=None, seed=1):
+        step = jax.jit(lambda p, i, l: jax.tree.map(
+            lambda w, g: w - lr * g, p,
+            jax.grad(lambda p: xent(p, i, l, acfg))(p)))
+        it = iter(task(64, seed=seed))
+        for _ in range(steps):
+            b = next(it)
+            p = step(p, jnp.asarray(b["image"]), jnp.asarray(b["label"]))
+        return p
+
+    def acc(p, acfg=None):
+        it = iter(task(64, seed=99))
+        hits = 0
+        for _ in range(3):
+            b = next(it)
+            pred = jnp.argmax(cnn_forward(p, jnp.asarray(b["image"]), acfg), -1)
+            hits += int((pred == jnp.asarray(b["label"])).sum())
+        return hits / 192
+
+    params = train(params, 60, 3e-3)
+    print(f"FP32:            {acc(params):.3f}")
+
+    # calibration demo: observe activations on a representative subset
+    # (the paper: "only a representative subset ... ~10% of training data")
+    obs = HistogramObserver()
+    it = iter(task(64, seed=5))
+    for _ in range(2):  # two batches, like the paper §5.1
+        obs.update(next(it)["image"])
+    qp = calibrate_activation(obs, 8, method="percentile")
+    print(f"calibrated activation scale: {float(qp.scale):.5f} "
+          f"(99.9% percentile histogram)")
+
+    quant = ApproxConfig(acu=make_acu("mul8s_exact", AcuMode.EXACT))
+    print(f"8-bit quantized: {acc(params, quant):.3f}")
+
+    bits = 12 if "12" in acu_name else 8
+    mode = AcuMode.FUNCTIONAL if bits > 10 else AcuMode.LUT
+    apx = ApproxConfig(acu=make_acu(acu_name, mode), a_bits=bits, w_bits=bits)
+    print(f"{bits}-bit approx:   {acc(params, apx):.3f}")
+
+    params = train(params, 30, 1e-3, acfg=apx, seed=2)
+    print(f"after retrain:   {acc(params, apx):.3f}")
+
+
+def lstm_flow(acu_name: str):
+    print(f"\n=== LSTM x {acu_name} ===")
+    task = text_cls_task(vocab=200, n_classes=2)
+    emb = jax.random.normal(KEY, (200, 16)) * 0.3
+    p = {"lstm": init_lstm(KEY, 16, 32),
+         "head": jax.random.normal(KEY, (32, 2)) * 0.2}
+
+    def fwd(p, toks, acfg=None):
+        return lstm(emb[toks], p["lstm"], acfg) @ p["head"]
+
+    def xent(p, toks, lab, acfg=None):
+        logits = fwd(p, toks, acfg)
+        return (jax.nn.logsumexp(logits, -1) -
+                jnp.take_along_axis(logits, lab[:, None], -1)[:, 0]).mean()
+
+    def train(p, steps, lr, acfg=None, seed=3):
+        step = jax.jit(lambda p, t, l: jax.tree.map(
+            lambda w, g: w - lr * g, p,
+            jax.grad(lambda p: xent(p, t, l, acfg))(p)))
+        it = iter(task(32, seq=24, seed=seed))
+        for _ in range(steps):
+            b = next(it)
+            p = step(p, jnp.asarray(b["tokens"]), jnp.asarray(b["label"]))
+        return p
+
+    def acc(p, acfg=None):
+        it = iter(task(64, seq=24, seed=99))
+        hits = 0
+        for _ in range(3):
+            b = next(it)
+            pred = jnp.argmax(fwd(p, jnp.asarray(b["tokens"]), acfg), -1)
+            hits += int((pred == jnp.asarray(b["label"])).sum())
+        return hits / 192
+
+    p = train(p, 60, 1e-2)
+    print(f"FP32:            {acc(p):.3f}")
+    bits = 12 if "12" in acu_name else 8
+    mode = AcuMode.FUNCTIONAL if bits > 10 else AcuMode.LUT
+    apx = ApproxConfig(acu=make_acu(acu_name, mode), a_bits=bits, w_bits=bits)
+    print(f"{bits}-bit approx:   {acc(p, apx):.3f}")
+    p = train(p, 20, 1e-3, acfg=apx, seed=4)
+    print(f"after retrain:   {acc(p, apx):.3f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--acu", default="mul8s_1L2H")
+    args = ap.parse_args()
+    cnn_flow(args.acu)
+    lstm_flow(args.acu)

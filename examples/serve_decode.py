@@ -1,0 +1,44 @@
+"""Batched serving demo: prefill + KV-cache greedy decode through the
+ServeEngine (wave batching), optionally through an approximate ACU.
+
+    PYTHONPATH=src python examples/serve_decode.py [--approx mul8s_1L2H]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core import make_acu
+from repro.core.acu import AcuMode
+from repro.core.approx_ops import ApproxConfig
+from repro.models.transformer import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--approx", default=None)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    acfg = (ApproxConfig(acu=make_acu(args.approx, AcuMode.LUT))
+            if args.approx else None)
+
+    eng = ServeEngine(params, cfg, slots=4, max_seq=128, acfg=acfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(1, cfg.vocab_size,
+                                        rng.integers(3, 10)).astype(np.int32),
+                    max_new_tokens=args.new_tokens)
+            for _ in range(args.requests)]
+    done = eng.run(reqs)
+    for i, r in enumerate(done):
+        print(f"req{i}: prompt={list(r.prompt)} -> out={list(r.out)}")
+
+
+if __name__ == "__main__":
+    main()

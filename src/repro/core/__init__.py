@@ -1,0 +1,17 @@
+"""AdaPT-JAX core: the paper's contribution as composable JAX modules."""
+from .acu import Acu, AcuMode, make_acu
+from .approx_ops import ApproxConfig, approx_dense, approx_matmul, conv2d, separable_conv2d
+from .calibration import HistogramObserver, calibrate_activation, calibrate_weight
+from .lut import build_error_table, build_lut, factorize_error, rank_for_fidelity
+from .multipliers import REGISTRY, Multiplier, error_stats, get_multiplier
+from .quantization import (QParams, acu_operand, affine_qparams, dequantize,
+                           fake_quantize, quantize, symmetric_qparams)
+
+__all__ = [
+    "Acu", "AcuMode", "make_acu", "ApproxConfig", "approx_dense", "approx_matmul",
+    "conv2d", "separable_conv2d", "HistogramObserver", "calibrate_activation",
+    "calibrate_weight", "build_error_table", "build_lut", "factorize_error",
+    "rank_for_fidelity", "REGISTRY", "Multiplier", "error_stats", "get_multiplier",
+    "QParams", "acu_operand", "affine_qparams", "dequantize", "fake_quantize",
+    "quantize", "symmetric_qparams",
+]

@@ -1,0 +1,215 @@
+"""Approximate Compute Units (paper §3.3 / §3.4).
+
+An :class:`Acu` packages one approximate multiplier with an emulation *mode*:
+
+* ``FUNCTIONAL`` — evaluate the multiplier's closed form per scalar product and
+  reduce. This is the paper's *unoptimized baseline* regime (the 76.5-min
+  ResNet50 row): it materializes (or streams) the full (M, K, N) product
+  tensor. Kept as the oracle and the speedup denominator.
+* ``LUT`` — the paper's optimized engine, adapted to TPU: the (2^b, 2^b)
+  product table lives in VMEM; each GEMM tile does vectorized gathers
+  (``kernels/lut_matmul``). Bit-exact.
+* ``LOWRANK`` — beyond-paper: exact int MXU matmul + rank-r SVD error
+  correction (DESIGN.md §3). Near-exact, with fidelity measured offline.
+* ``FACTORED`` — algebraically exact fast path for the truncation family:
+  ``M[a,w] = (a & m)(w & m)`` is a single masked int matmul.
+* ``EXACT`` — no approximation (quantization-only reference).
+
+All modes consume *shifted-code* integer operands (``code - zero_point``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lut import LowRankError, build_lut, factorize_error, trunc_masks
+from .multipliers import Multiplier, get_multiplier
+
+Array = jnp.ndarray
+
+
+class AcuMode(enum.Enum):
+    FUNCTIONAL = "functional"
+    LUT = "lut"
+    LOWRANK = "lowrank"
+    FACTORED = "factored"
+    EXACT = "exact"
+
+
+@dataclasses.dataclass(frozen=True)
+class Acu:
+    multiplier: Multiplier
+    mode: AcuMode
+    lut: Optional[np.ndarray] = None          # (2^b, 2^b) int32
+    lowrank: Optional[LowRankError] = None
+    mask: Optional[int] = None                # FACTORED path
+    use_pallas: bool = False                  # route GEMMs through Pallas kernels
+    interpret: bool = True                    # CPU container: interpret kernels
+    lut_chunk: int = 256                      # K-chunk for LUT gathers; 0 = the
+                                              # paper's unoptimized baseline
+                                              # (full (M,K,N) materialization)
+
+    @property
+    def bits(self) -> int:
+        return self.multiplier.bits
+
+    @property
+    def offset(self) -> int:
+        return -self.multiplier.lo  # code shift into table index space
+
+    # ------------------------------------------------------------------
+    # elementwise multiply (used by tests and conv inner loops)
+    # ------------------------------------------------------------------
+    def mul(self, a: Array, w: Array) -> Array:
+        if self.mode == AcuMode.EXACT:
+            return a.astype(jnp.int32) * w.astype(jnp.int32)
+        if self.mode == AcuMode.FACTORED:
+            return (a & self.mask) * (w & self.mask)
+        if self.mode == AcuMode.LUT:
+            tab = jnp.asarray(self.lut)
+            return tab[a + self.offset, w + self.offset]
+        if self.mode == AcuMode.LOWRANK:
+            exact = a.astype(jnp.float32) * w.astype(jnp.float32)
+            f = jnp.asarray(self.lowrank.f)[a + self.offset]
+            g = jnp.asarray(self.lowrank.g)[w + self.offset]
+            return exact + (f * g).sum(-1)
+        return self.multiplier(a, w)
+
+    # ------------------------------------------------------------------
+    # GEMM: out[m, n] = sum_k M[a[m, k], w[k, n]]
+    # ------------------------------------------------------------------
+    def matmul(self, a: Array, w: Array) -> Array:
+        """Approximate GEMM on integer operands. Returns int32 (exact modes)
+        or float32 (LOWRANK — the SVD correction is real-valued)."""
+        if self.mode == AcuMode.EXACT:
+            return jax.lax.dot(a.astype(jnp.int8 if self.bits <= 8 else jnp.int32),
+                               w.astype(jnp.int8 if self.bits <= 8 else jnp.int32),
+                               preferred_element_type=jnp.int32) \
+                if self.bits <= 8 else a.astype(jnp.int32) @ w.astype(jnp.int32)
+        if self.mode == AcuMode.FACTORED:
+            am = (a & self.mask).astype(jnp.int32)
+            wm = (w & self.mask).astype(jnp.int32)
+            return am @ wm
+        if self.mode == AcuMode.LUT:
+            if self.use_pallas:
+                from repro.kernels.lut_matmul import ops as lops
+                return lops.lut_matmul(a, w, jnp.asarray(self.lut),
+                                       self.offset, interpret=self.interpret)
+            if self.lut_chunk == 0:
+                # paper's "baseline approximate": LUTs without the
+                # vectorization/chunking optimizations — one (M, K, N) gather
+                from repro.kernels.lut_matmul.ref import lut_matmul_ref
+                return lut_matmul_ref(a, w, jnp.asarray(self.lut).reshape(-1),
+                                      self.offset, self.multiplier.n_codes)
+            return self._lut_matmul_jnp(a, w, k_chunk=self.lut_chunk)
+        if self.mode == AcuMode.LOWRANK:
+            if self.use_pallas:
+                from repro.kernels.err_matmul import ops as eops
+                return eops.err_matmul(a, w, jnp.asarray(self.lowrank.f),
+                                       jnp.asarray(self.lowrank.g),
+                                       self.offset, interpret=self.interpret)
+            return self._lowrank_matmul_jnp(a, w)
+        # FUNCTIONAL: stream over K chunks to bound the (M, Kc, N) intermediate
+        return self._functional_matmul_jnp(a, w)
+
+    # -- pure-jnp implementations (portable; Pallas kernels mirror these) --
+
+    def _lut_matmul_jnp(self, a: Array, w: Array, k_chunk: int = 256) -> Array:
+        tab = jnp.asarray(self.lut).reshape(-1)
+        n_codes = self.multiplier.n_codes
+        M, K = a.shape
+        _, N = w.shape
+        ai = (a + self.offset).astype(jnp.int32)
+        wi = (w + self.offset).astype(jnp.int32)
+        k_chunk = min(k_chunk, K)
+        pad = (-K) % k_chunk
+        if pad:
+            ai = jnp.pad(ai, ((0, 0), (0, pad)), constant_values=self.offset)
+            wi = jnp.pad(wi, ((0, pad), (0, 0)), constant_values=self.offset)
+        nk = ai.shape[1] // k_chunk
+        ai = ai.reshape(M, nk, k_chunk)
+        wi = wi.reshape(nk, k_chunk, N)
+
+        def body(acc, inputs):
+            ac, wc = inputs  # (M, kc), (kc, N)
+            idx = ac[:, :, None] * n_codes + wc[None, :, :]
+            acc = acc + jnp.take(tab, idx.reshape(-1)).reshape(M, k_chunk, N).sum(axis=1)
+            return acc, None
+
+        init = jnp.zeros((M, N), jnp.int32)
+        acc, _ = jax.lax.scan(body, init, (ai.transpose(1, 0, 2), wi))
+        if pad:  # padded entries contribute LUT[off, off] = M[0, 0]
+            zz = jnp.asarray(self.lut)[self.offset, self.offset].astype(jnp.int32)
+            acc = acc - pad * zz
+        return acc
+
+    def _lowrank_matmul_jnp(self, a: Array, w: Array) -> Array:
+        r = self.lowrank.rank
+        K = a.shape[-1]
+        exact = jax.lax.dot(
+            a.astype(jnp.int8 if self.bits <= 8 else jnp.bfloat16),
+            w.astype(jnp.int8 if self.bits <= 8 else jnp.bfloat16),
+            preferred_element_type=jnp.int32 if self.bits <= 8 else jnp.float32,
+        ).astype(jnp.float32)
+        f = jnp.take(jnp.asarray(self.lowrank.f), a + self.offset, axis=0)  # (M,K,r)
+        g = jnp.take(jnp.asarray(self.lowrank.g), w + self.offset, axis=0)  # (K,N,r)
+        M = a.shape[0]
+        N = w.shape[1]
+        corr = f.reshape(M, K * r) @ g.transpose(0, 2, 1).reshape(K * r, N)
+        return exact + corr
+
+    def _functional_matmul_jnp(self, a: Array, w: Array, k_chunk: int = 32) -> Array:
+        M, K = a.shape
+        _, N = w.shape
+        k_chunk = min(k_chunk, K)
+        pad = (-K) % k_chunk
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad)))
+            w = jnp.pad(w, ((0, pad), (0, 0)))
+        nk = a.shape[1] // k_chunk
+        ar = a.reshape(M, nk, k_chunk).transpose(1, 0, 2)
+        wr = w.reshape(nk, k_chunk, N)
+
+        def body(acc, inputs):
+            ac, wc = inputs
+            prods = self.multiplier(ac[:, :, None], wc[None, :, :])
+            return acc + prods.sum(axis=1).astype(jnp.int64), None
+
+        acc, _ = jax.lax.scan(body, jnp.zeros((M, N), jnp.int64), (ar, wr))
+        if pad:
+            z0 = self.multiplier(jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+            acc = acc - pad * z0.astype(jnp.int64)
+        return acc.astype(jnp.int32)
+
+
+def make_acu(name: str, mode: AcuMode | str = AcuMode.LUT, rank: int = 8,
+             use_pallas: bool = False, interpret: bool = True) -> Acu:
+    """Build an ACU from a registered multiplier name.
+
+    Large-bitwidth LUT requests fall back to FUNCTIONAL per the paper §3.4
+    ("In case of large bitwidth ... substitute the LUT-based multiplication
+    with functional-based multiplication").
+    """
+    mult = get_multiplier(name)
+    mode = AcuMode(mode) if isinstance(mode, str) else mode
+    lut = lowrank = None
+    mask = None
+    if mode == AcuMode.LUT:
+        if mult.bits > 10:
+            mode = AcuMode.FUNCTIONAL  # LUT would exceed VMEM; paper's fallback
+        else:
+            lut = build_lut(mult)
+    if mode == AcuMode.LOWRANK:
+        lowrank = factorize_error(mult, rank)
+    if mode == AcuMode.FACTORED:
+        mask = trunc_masks(mult)
+        if mask is None:
+            raise ValueError(f"{name} has no algebraic factorization; "
+                             f"use LUT or LOWRANK")
+    return Acu(multiplier=mult, mode=mode, lut=lut, lowrank=lowrank,
+               mask=mask, use_pallas=use_pallas, interpret=interpret)

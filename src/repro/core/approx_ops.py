@@ -1,0 +1,221 @@
+"""Approximate layer operations (paper §3.3): quantize -> ACU GEMM -> dequant.
+
+This is the "graph re-transform" equivalent: model code calls
+:func:`approx_dense` / :func:`approx_conv2d` at its matmul sites, and an
+:class:`ApproxConfig` (threaded through the model, or None for exact fp)
+decides whether and how approximation happens. Conv2D is lowered to GEMM by
+im2col exactly as in the paper (§3.3.1, Fig. 3); separable conv is depthwise +
+pointwise (§3.3.2); RNN cells reuse the approximate Linear (§3.3.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .acu import Acu, AcuMode
+from .quantization import QParams, acu_operand, dequantize, fake_quantize, quantize
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxConfig:
+    """Per-model approximation configuration (the paper's "user sets the
+    desired DNN model with the quantization parameters + approximate module")."""
+
+    acu: Acu
+    a_bits: int = 8
+    w_bits: int = 8
+    fake_quant_only: bool = False   # QAT fake-quant path (no integer GEMM)
+
+    def __post_init__(self):
+        if max(self.a_bits, self.w_bits) > self.acu.bits:
+            raise ValueError(
+                f"quantization bits ({self.a_bits}/{self.w_bits}) exceed the "
+                f"ACU's operand width ({self.acu.bits}-bit "
+                f"{self.acu.multiplier.name}); codes would overflow")
+
+    def replace(self, **kw) -> "ApproxConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _affine_matmul_dequant(acc: Array, xqp: QParams, wqp: QParams) -> Array:
+    """Dequantize an integer GEMM accumulator (paper eq. 2).
+
+    Operands were shifted codes (code - zp), so the accumulator is directly
+    ``sum (q1-z1)(q2-z2)`` and the dequant is a pure scale product.
+    Weight scale may be per-output-channel (axis 0 of w^T layout handled by
+    caller passing wqp with axis=1 on the (K, N) matrix).
+    """
+    s1 = xqp.scale  # per-tensor
+    s2 = wqp.scale  # scalar or (N,)
+    if wqp.axis is not None:
+        s2 = jnp.reshape(s2, (1, -1))
+    return acc.astype(jnp.float32) * s1 * s2
+
+
+_STE_CACHE: dict = {}
+
+
+def _get_ste_fn(acu: Acu, a_bits: int, w_bits: int):
+    """Per-ACU custom_vjp GEMM: approximate forward, exact STE backward
+    (the paper's "approximate backward engine" — gradients flow through the
+    fake-quantized values with exact arithmetic)."""
+    key = (id(acu), a_bits, w_bits)
+    if key in _STE_CACHE:
+        return _STE_CACHE[key]
+
+    @jax.custom_vjp
+    def ste_matmul(x, w, xs, xz, ws, wz):
+        xqp = QParams(scale=xs, zero_point=xz, bits=a_bits)
+        wqp = QParams(scale=ws, zero_point=wz, bits=w_bits, axis=1)
+        xq = quantize(x, xqp)
+        wq = quantize(w, wqp)
+        acc = acu.matmul(acu_operand(xq, xqp), acu_operand(wq, wqp))
+        return _affine_matmul_dequant(acc, xqp, wqp)
+
+    def fwd(x, w, xs, xz, ws, wz):
+        y = ste_matmul(x, w, xs, xz, ws, wz)
+        xqp = QParams(scale=xs, zero_point=xz, bits=a_bits)
+        wqp = QParams(scale=ws, zero_point=wz, bits=w_bits, axis=1)
+        xf = fake_quantize(x, xqp).astype(x.dtype)
+        wf = fake_quantize(w, wqp).astype(w.dtype)
+        return y, (xf, wf)
+
+    def bwd(res, g):
+        xf, wf = res
+        g = g.astype(jnp.float32)
+        gx = (g @ wf.astype(jnp.float32).T).astype(xf.dtype)
+        gw = (xf.astype(jnp.float32).T @ g).astype(wf.dtype)
+        return (gx, gw, None, None, None, None)
+
+    ste_matmul.defvjp(fwd, bwd)
+    _STE_CACHE[key] = ste_matmul
+    return ste_matmul
+
+
+def approx_matmul(x: Array, w: Array, cfg: ApproxConfig,
+                  xqp: QParams, wqp: QParams) -> Array:
+    """2-D approximate GEMM with STE backward. ``x``: (M, K) float,
+    ``w``: (K, N) float; ``wqp.axis`` must be 1 (per-out-channel) or None."""
+    if cfg.fake_quant_only:
+        return fake_quantize(x, xqp) @ fake_quantize(w, wqp)
+    fn = _get_ste_fn(cfg.acu, cfg.a_bits, cfg.w_bits)
+    return fn(x, w, xqp.scale, xqp.zero_point, wqp.scale, wqp.zero_point)
+
+
+def approx_dense(x: Array, w: Array, b: Optional[Array], cfg: Optional[ApproxConfig],
+                 xqp: Optional[QParams] = None, wqp: Optional[QParams] = None) -> Array:
+    """Linear layer y = x @ w + b, optionally through the ACU.
+
+    ``x``: (..., K), ``w``: (K, N). With ``cfg=None`` this is an exact matmul
+    (the substrate path used by the LM stack unless emulation is enabled).
+    """
+    if cfg is None:
+        y = x @ w
+    else:
+        lead = x.shape[:-1]
+        K = x.shape[-1]
+        x2 = x.reshape(-1, K)
+        if xqp is None:
+            amax = jnp.maximum(jnp.max(jnp.abs(x2)), 1e-6)
+            from .quantization import symmetric_qparams
+            xqp = symmetric_qparams(amax, cfg.a_bits)
+        if wqp is None:
+            from .quantization import symmetric_qparams
+            wqp = symmetric_qparams(jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-9),
+                                    cfg.w_bits, axis=1)
+        y = approx_matmul(x2, w, cfg, xqp, wqp).reshape(*lead, w.shape[1])
+        y = y.astype(x.dtype)   # dequant is f32; keep the model's dtype
+    if b is not None:
+        y = y + b
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Conv2D via im2col (paper §3.3.1) and separable conv (§3.3.2)
+# ---------------------------------------------------------------------------
+
+def _im2col(x: Array, kh: int, kw: int, stride: Sequence[int],
+            padding: str | Sequence[tuple[int, int]], dilation: Sequence[int]) -> Array:
+    """Extract conv patches: (N, C, H, W) -> (N, Ho*Wo, C*kh*kw)."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), tuple(stride), padding,
+        rhs_dilation=tuple(dilation),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C*kh*kw, Ho, Wo)
+    n, ckk, ho, wo = patches.shape
+    return patches.reshape(n, ckk, ho * wo).transpose(0, 2, 1), (ho, wo)
+
+
+def conv2d(x: Array, w: Array, b: Optional[Array] = None, *,
+           stride: Sequence[int] = (1, 1), padding="SAME",
+           dilation: Sequence[int] = (1, 1), groups: int = 1,
+           cfg: Optional[ApproxConfig] = None) -> Array:
+    """2-D convolution with the full vanilla-PyTorch parameter surface
+    (stride/padding/dilation/groups), computed as im2col + (approx) GEMM.
+
+    ``x``: (N, Cin, H, W); ``w``: (Cout, Cin/groups, kh, kw).
+    """
+    n, cin, _, _ = x.shape
+    cout, cin_g, kh, kw = w.shape
+    assert cin == cin_g * groups, (cin, cin_g, groups)
+    pad = padding if isinstance(padding, str) else tuple(padding)
+
+    if cfg is None:
+        # exact substrate path: native conv (XLA picks the fast algorithm)
+        y = jax.lax.conv_general_dilated(
+            x, w, tuple(stride), pad, rhs_dilation=tuple(dilation),
+            feature_group_count=groups,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    elif groups == 1:
+        cols, (ho, wo) = _im2col(x, kh, kw, stride, pad, dilation)
+        wmat = w.reshape(cout, -1).T                       # (C*kh*kw, Cout)
+        m = cols.reshape(-1, cols.shape[-1])               # (N*Ho*Wo, C*kh*kw)
+        y = approx_dense(m, wmat, None, cfg)
+        y = y.reshape(n, ho, wo, cout).transpose(0, 3, 1, 2)
+    elif groups == cin and cin_g == 1:
+        # depthwise through the ACU: single GEMM against a block-diagonal
+        # weight. M[0, x] == 0 for every multiplier family here, so the
+        # structural zeros are exact through the ACU.
+        cols, (ho, wo) = _im2col(x, kh, kw, stride, pad, dilation)
+        m = cols.reshape(-1, cols.shape[-1])               # (N*P, C*kh*kw)
+        kk = kh * kw
+        wblk = jnp.zeros((cin * kk, cout), x.dtype)
+        ch = jnp.repeat(jnp.arange(cin), kk)
+        rows = jnp.arange(cin * kk)
+        mult = cout // cin
+        wflat = w.reshape(cout, kk)  # channel c output o uses its own kernel
+        for o_in_c in range(mult):
+            cols_idx = ch * mult + o_in_c
+            wblk = wblk.at[rows, cols_idx].set(
+                wflat[ch * mult + o_in_c, jnp.tile(jnp.arange(kk), cin)])
+        y = approx_dense(m, wblk, None, cfg)
+        y = y.reshape(n, ho, wo, cout).transpose(0, 3, 1, 2)
+    else:
+        outs = []
+        cpg_in, cpg_out = cin // groups, cout // groups
+        for g in range(groups):
+            xg = x[:, g * cpg_in:(g + 1) * cpg_in]
+            wg = w[g * cpg_out:(g + 1) * cpg_out]
+            cols, (ho, wo) = _im2col(xg, kh, kw, stride, pad, dilation)
+            wmat = wg.reshape(cpg_out, -1).T
+            m = cols.reshape(-1, cols.shape[-1])
+            yg = approx_dense(m, wmat, None, cfg)
+            outs.append(yg.reshape(n, ho, wo, cpg_out).transpose(0, 3, 1, 2))
+        y = jnp.concatenate(outs, axis=1)
+    if b is not None:
+        y = y + b.reshape(1, -1, 1, 1)
+    return y
+
+
+def separable_conv2d(x: Array, w_dw: Array, w_pw: Array,
+                     b: Optional[Array] = None, *, stride=(1, 1), padding="SAME",
+                     cfg: Optional[ApproxConfig] = None) -> Array:
+    """Depthwise (groups=Cin) + pointwise (1x1) conv — paper eq. (3)."""
+    cin = x.shape[1]
+    y = conv2d(x, w_dw, None, stride=stride, padding=padding, groups=cin, cfg=cfg)
+    return conv2d(y, w_pw, b, stride=(1, 1), padding="VALID", cfg=cfg)

@@ -1,0 +1,155 @@
+"""Calibration (paper §3.2.1).
+
+Observers collect statistics over a representative subset of the data
+(the paper uses ~two batches); calibrators turn the statistics into a
+``calib_max`` / (min, max). The paper's default is the 99.9-percentile
+histogram calibrator; MSE and entropy (KL) calibrators are provided as the
+"transparently usable" alternatives it mentions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .quantization import QParams, affine_qparams, symmetric_qparams
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class HistogramObserver:
+    """Single-pass |x| histogram with geometric range expansion.
+
+    Bins cover [0, range]; when a batch exceeds the range, existing counts are
+    re-binned into the doubled range (counts merge pairwise), so percentile
+    queries stay consistent without a second pass over the data.
+    """
+
+    n_bins: int = 2048
+    range: float = 0.0
+    counts: Optional[np.ndarray] = None
+    xmin: float = 0.0
+    xmax: float = 0.0
+
+    def update(self, x) -> None:
+        x = np.asarray(x, dtype=np.float32).ravel()
+        if x.size == 0:
+            return
+        self.xmin = min(self.xmin, float(x.min()))
+        self.xmax = max(self.xmax, float(x.max()))
+        amax = float(np.abs(x).max())
+        if self.counts is None:
+            self.counts = np.zeros(self.n_bins, dtype=np.int64)
+            self.range = max(amax, 1e-12)
+        while amax > self.range:
+            # double the range; merge counts pairwise into the lower half
+            c = self.counts
+            merged = c.reshape(-1, 2).sum(axis=1)
+            nc = np.zeros_like(c)
+            nc[: self.n_bins // 2] = merged
+            self.counts = nc
+            self.range *= 2.0
+        idx = np.minimum(
+            (np.abs(x) / self.range * self.n_bins).astype(np.int64), self.n_bins - 1
+        )
+        np.add.at(self.counts, idx, 1)
+
+    # -- calibrators ------------------------------------------------------
+
+    def percentile_max(self, pct: float = 99.9) -> float:
+        """calib_max = smallest |x| bound covering ``pct``% of observed values."""
+        assert self.counts is not None, "observer saw no data"
+        cdf = np.cumsum(self.counts)
+        total = cdf[-1]
+        k = int(np.searchsorted(cdf, pct / 100.0 * total))
+        k = min(k, self.n_bins - 1)
+        return float((k + 1) / self.n_bins * self.range)
+
+    def mse_max(self, bits: int, n_grid: int = 64) -> float:
+        """calib_max minimizing expected squared quantization error under the
+        observed |x| histogram (grid search over candidate clip points)."""
+        assert self.counts is not None
+        centers = (np.arange(self.n_bins) + 0.5) / self.n_bins * self.range
+        probs = self.counts / max(self.counts.sum(), 1)
+        hi = (1 << (bits - 1)) - 1
+        best, best_err = self.range, np.inf
+        for frac in np.linspace(0.2, 1.0, n_grid):
+            cmax = frac * self.range
+            scale = cmax / hi
+            q = np.clip(np.round(centers / scale), 0, hi) * scale
+            err = float((probs * (centers - q) ** 2).sum())
+            if err < best_err:
+                best, best_err = cmax, err
+        return best
+
+    def entropy_max(self, bits: int, n_grid: int = 48) -> float:
+        """TensorRT-style KL calibrator: pick the clip bound whose quantized
+        distribution minimizes KL(P || Q) against the observed histogram."""
+        assert self.counts is not None
+        n_levels = 1 << (bits - 1)
+        counts = self.counts.astype(np.float64)
+        best, best_kl = self.range, np.inf
+        start = max(n_levels, self.n_bins // 8)
+        for stop in np.linspace(start, self.n_bins, n_grid).astype(int):
+            p = counts[:stop].copy()
+            p[-1] += counts[stop:].sum()  # clipped mass
+            if p.sum() == 0:
+                continue
+            # quantize the first `stop` bins into n_levels buckets
+            edges = np.linspace(0, stop, n_levels + 1).astype(int)
+            q = np.zeros(stop)
+            for i in range(n_levels):
+                lo, hi_ = edges[i], max(edges[i + 1], edges[i] + 1)
+                seg = p[lo:hi_]
+                nz = (seg > 0).sum()
+                if nz:
+                    q[lo:hi_] = np.where(seg > 0, seg.sum() / nz, 0)
+            mask = p > 0
+            qq = np.where(q > 0, q, 1e-12)
+            kl = float((p[mask] * np.log(p[mask] / qq[mask])).sum() / p.sum())
+            if kl < best_kl:
+                best_kl, best = kl, stop / self.n_bins * self.range
+        return best
+
+
+@dataclasses.dataclass
+class PerChannelObserver:
+    """Per-channel absolute-max observer (weights)."""
+
+    axis: int = 0
+    amax: Optional[np.ndarray] = None
+
+    def update(self, w) -> None:
+        w = np.asarray(w, dtype=np.float32)
+        red = tuple(i for i in range(w.ndim) if i != self.axis)
+        cur = np.abs(w).max(axis=red) if red else np.abs(w)
+        self.amax = cur if self.amax is None else np.maximum(self.amax, cur)
+
+
+def calibrate_activation(obs: HistogramObserver, bits: int,
+                         method: str = "percentile", affine: bool = True,
+                         pct: float = 99.9) -> QParams:
+    if method == "percentile":
+        cmax = obs.percentile_max(pct)
+    elif method == "mse":
+        cmax = obs.mse_max(bits)
+    elif method == "entropy":
+        cmax = obs.entropy_max(bits)
+    elif method == "max":
+        cmax = obs.range if obs.counts is not None else 1.0
+    else:
+        raise ValueError(f"unknown calibration method {method!r}")
+    if affine and obs.xmin < 0 < obs.xmax:
+        lo = max(obs.xmin, -cmax)
+        hi = min(obs.xmax, cmax)
+        return affine_qparams(jnp.float32(lo), jnp.float32(hi), bits)
+    return symmetric_qparams(jnp.float32(cmax), bits)
+
+
+def calibrate_weight(w, bits: int, axis: int = 0) -> QParams:
+    obs = PerChannelObserver(axis=axis)
+    obs.update(w)
+    return symmetric_qparams(jnp.asarray(obs.amax, jnp.float32), bits, axis=axis)

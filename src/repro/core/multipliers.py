@@ -1,0 +1,234 @@
+"""Approximate multiplier zoo.
+
+Bit-level closed-form models of approximate hardware multipliers, any bitwidth.
+Each multiplier is a vectorized integer function ``fn(a, w) -> int32/int64``
+over signed operands in ``[-2^(b-1), 2^(b-1)-1]``.
+
+The EvoApprox netlists used by the paper are not available offline; these
+families cover the same design space (see DESIGN.md §9):
+
+* ``exact``          — reference multiplier.
+* ``trunc(t)``       — operand truncation: low ``t`` bits of both operands gated
+                       to zero (classic fixed-width truncation).
+* ``bam(k)``         — broken-array multiplier: partial products on diagonals
+                       ``i + j < k`` perforated (sign-magnitude core).
+* ``mitchell``       — Mitchell logarithmic multiplier (piecewise-linear log).
+* ``drum(k)``        — DRUM-style dynamic-range multiplier: top-``k``-bit
+                       windows with LSB set for unbiasedness.
+
+``mul8s_1L2H`` / ``mul12s_2KM`` name the paper's two evaluation roles
+("lossy, low-power 8-bit" / "near-exact 12-bit"); measured MAE/MRE are
+reported by :func:`error_stats` and in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Multiplier:
+    """A b-bit x b-bit signed approximate multiplier model."""
+
+    name: str
+    bits: int
+    fn: Callable[[Array, Array], Array]
+    description: str = ""
+
+    def __call__(self, a: Array, w: Array) -> Array:
+        return self.fn(jnp.asarray(a), jnp.asarray(w))
+
+    @property
+    def lo(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def hi(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def n_codes(self) -> int:
+        return 1 << self.bits
+
+
+def _acc_dtype(bits: int):
+    # 2*bits + log2(K) accumulation headroom; int32 is fine through 12-bit
+    # operands (24-bit products), int64 beyond.
+    return jnp.int32 if bits <= 12 else jnp.int64
+
+
+# ---------------------------------------------------------------------------
+# multiplier families
+# ---------------------------------------------------------------------------
+
+def exact_fn(a: Array, w: Array) -> Array:
+    return a.astype(jnp.int32) * w.astype(jnp.int32)
+
+
+def make_exact(bits: int) -> Multiplier:
+    return Multiplier(f"mul{bits}s_exact", bits, exact_fn, "exact reference")
+
+
+def make_trunc(bits: int, t: int) -> Multiplier:
+    """Gate the low ``t`` bits of both operands to zero, then multiply exactly.
+
+    Two's-complement masking (``a & ~mask``) models a hardware multiplier whose
+    low partial-product columns driven by operand LSBs are tied off.
+    """
+    mask = ~((1 << t) - 1)
+
+    def fn(a: Array, w: Array) -> Array:
+        a = a.astype(jnp.int32) & mask
+        w = w.astype(jnp.int32) & mask
+        return a * w
+
+    return Multiplier(f"mul{bits}s_trunc{t}", bits, fn,
+                      f"operand truncation, {t} LSBs gated")
+
+
+def make_bam(bits: int, k: int) -> Multiplier:
+    """Broken-array multiplier: drop partial-product diagonals ``i+j < k``.
+
+    Sign-magnitude core: ``p = sign(a)*sign(w) * sum_{i+j>=k} a_i w_j 2^(i+j)``.
+    """
+
+    def fn(a: Array, w: Array) -> Array:
+        a = a.astype(jnp.int32)
+        w = w.astype(jnp.int32)
+        sgn = jnp.sign(a) * jnp.sign(w)
+        ma = jnp.abs(a)
+        mw = jnp.abs(w)
+        acc = jnp.zeros(jnp.broadcast_shapes(a.shape, w.shape), jnp.int32)
+        for i in range(bits):  # unrolled at trace time; bits is small
+            bit_i = (ma >> i) & 1
+            jmin = max(0, k - i)
+            if jmin >= bits:
+                continue
+            w_kept = mw & ~((1 << jmin) - 1)
+            acc = acc + (bit_i * w_kept << i)
+        return sgn * acc
+
+    return Multiplier(f"mul{bits}s_bam{k}", bits, fn,
+                      f"broken-array, diagonals < {k} perforated")
+
+
+def make_mitchell(bits: int) -> Multiplier:
+    """Mitchell logarithmic multiplier (sign-magnitude).
+
+    ``m = 2^k (1+x)`` with ``x in [0,1)``; ``m1*m2 ~= 2^(k1+k2) (1+x1+x2)`` when
+    ``x1+x2 < 1`` else ``2^(k1+k2+1) (x1+x2)``. Integer-exact fixed-point
+    evaluation (Q(bits) fraction), zero-safe.
+    """
+    fb = 15  # Q(fb) fraction for x1+x2; keeps all intermediates inside int32
+
+    def fn(a: Array, w: Array) -> Array:
+        a = a.astype(jnp.int32)
+        w = w.astype(jnp.int32)
+        sgn = jnp.sign(a) * jnp.sign(w)
+        ma = jnp.abs(a)
+        mw = jnp.abs(w)
+        safe_ma = jnp.maximum(ma, 1)
+        safe_mw = jnp.maximum(mw, 1)
+        # exact floor(log2 m) for m < 2^24 via float32 log2
+        k1 = jnp.floor(jnp.log2(safe_ma.astype(jnp.float32))).astype(jnp.int32)
+        k2 = jnp.floor(jnp.log2(safe_mw.astype(jnp.float32))).astype(jnp.int32)
+        # x in Q(fb): x = (m - 2^k) / 2^k  (exact: m < 2^bits, fb+bits < 31)
+        x1 = ((safe_ma - (1 << k1)) << fb) // jnp.maximum(1 << k1, 1)
+        x2 = ((safe_mw - (1 << k2)) << fb) // jnp.maximum(1 << k2, 1)
+        s = x1 + x2
+        one = jnp.int32(1) << fb
+        ksum = k1 + k2
+
+        def shift_to(v: Array, sh: Array) -> Array:
+            # v * 2^sh with truncation, overflow-safe split shifts
+            left = v << jnp.clip(sh, 0, 30)
+            right = v >> jnp.clip(-sh, 0, 30)
+            return jnp.where(sh >= 0, left, right)
+
+        p_nc = shift_to(one + s, ksum - fb)          # (1+x1+x2) * 2^ksum
+        p_c = shift_to(s, ksum + 1 - fb)             # (x1+x2) * 2^(ksum+1)
+        p = jnp.where(s < one, p_nc, p_c)
+        p = jnp.where((ma == 0) | (mw == 0), 0, p)
+        return sgn * p
+
+    return Multiplier(f"mul{bits}s_mitchell", bits, fn, "Mitchell log multiplier")
+
+
+def make_drum(bits: int, k: int) -> Multiplier:
+    """DRUM-style: multiply the leading-``k``-bit windows, LSB set (unbiased)."""
+
+    def fn(a: Array, w: Array) -> Array:
+        a = a.astype(jnp.int32)
+        w = w.astype(jnp.int32)
+        sgn = jnp.sign(a) * jnp.sign(w)
+        ma = jnp.abs(a)
+        mw = jnp.abs(w)
+
+        def window(m):
+            safe = jnp.maximum(m, 1)
+            t = jnp.floor(jnp.log2(safe.astype(jnp.float32))).astype(jnp.int32)
+            shift = jnp.maximum(t - (k - 1), 0)
+            wnd = ((m >> shift) | jnp.where(shift > 0, 1, 0)) << shift
+            return jnp.where(m == 0, 0, wnd)
+
+        return sgn * (window(ma) * window(mw))
+
+    return Multiplier(f"mul{bits}s_drum{k}", bits, fn,
+                      f"DRUM dynamic-range, {k}-bit windows")
+
+
+# ---------------------------------------------------------------------------
+# registry + named roles from the paper
+# ---------------------------------------------------------------------------
+
+def _registry() -> dict[str, Multiplier]:
+    muls = [
+        make_exact(8), make_exact(12),
+        make_trunc(8, 2), make_trunc(8, 3), make_trunc(8, 4),
+        make_trunc(12, 2), make_trunc(12, 3),
+        make_bam(8, 6), make_bam(8, 8), make_bam(8, 10),
+        make_bam(12, 8),
+        make_mitchell(8), make_mitchell(12),
+        make_drum(8, 4), make_drum(8, 6), make_drum(12, 6),
+    ]
+    reg = {m.name: m for m in muls}
+    # Paper evaluation roles (measured MAE/MRE reported in EXPERIMENTS.md):
+    #   mul8s_1L2H : paper MAE 0.081%, MRE 4.41%  -> bam(8,5): 0.049%, 3.75%
+    #   mul12s_2KM : paper MAE 1.2e-6%, MRE 4.7e-4% -> drum(12,11): 6e-6%, 4.8e-5%
+    reg["mul8s_1L2H"] = dataclasses.replace(make_bam(8, 5), name="mul8s_1L2H")
+    reg["mul12s_2KM"] = dataclasses.replace(make_drum(12, 11), name="mul12s_2KM")
+    return reg
+
+
+REGISTRY = _registry()
+
+
+def get_multiplier(name: str) -> Multiplier:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown multiplier {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def error_stats(mult: Multiplier) -> dict[str, float]:
+    """Exhaustive MAE / MRE over the full operand grid (EvoApprox convention:
+    MAE normalized by the max product magnitude 2^(2b); MRE over nonzero
+    exact products)."""
+    n = mult.n_codes
+    vals = np.arange(mult.lo, mult.hi + 1, dtype=np.int64)
+    a = vals[:, None]
+    w = vals[None, :]
+    exact = a * w
+    approx = np.asarray(mult(jnp.asarray(a, jnp.int32), jnp.asarray(w, jnp.int32)),
+                        dtype=np.int64)
+    err = np.abs(approx - exact)
+    mae = float(err.mean() / float(1 << (2 * mult.bits)) * 100.0)
+    nz = exact != 0
+    mre = float((err[nz] / np.abs(exact[nz])).mean() * 100.0)
+    wce = float(err.max())
+    return {"mae_pct": mae, "mre_pct": mre, "worst_case_err": wce,
+            "n_codes": n, "bits": mult.bits}

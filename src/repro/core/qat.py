@@ -1,0 +1,65 @@
+"""Quantization flow orchestration (paper Fig. 1 / Fig. 2).
+
+``calibrate_model``: run a representative data subset through the model,
+collecting activation histograms at every approx site -> QParams per site.
+``qat_finetune`` is implemented by the trainer (train/trainer.py) using the
+approximate forward / exact STE backward GEMM from approx_ops; this module
+holds the site registry utilities shared by both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from .calibration import HistogramObserver, calibrate_activation, calibrate_weight
+from .quantization import QParams
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class SiteStats:
+    """Calibration state for one approximate GEMM call site."""
+
+    observer: HistogramObserver = dataclasses.field(default_factory=HistogramObserver)
+    qparams: Optional[QParams] = None
+
+
+class CalibrationRegistry:
+    """Collects activation statistics per named call site.
+
+    Models call ``registry.observe(name, x)`` inside their forward pass when
+    running in calibration mode (eager, not jitted); afterwards
+    ``finalize(bits, method)`` turns every site's histogram into QParams.
+    """
+
+    def __init__(self) -> None:
+        self.sites: Dict[str, SiteStats] = {}
+
+    def observe(self, name: str, x: Array) -> Array:
+        self.sites.setdefault(name, SiteStats()).observer.update(x)
+        return x
+
+    def finalize(self, bits: int, method: str = "percentile",
+                 affine: bool = True, pct: float = 99.9) -> Dict[str, QParams]:
+        out = {}
+        for name, st in self.sites.items():
+            st.qparams = calibrate_activation(st.observer, bits, method=method,
+                                              affine=affine, pct=pct)
+            out[name] = st.qparams
+        return out
+
+
+def calibrate_weights_tree(params, bits: int, axis: int = -1):
+    """Per-channel symmetric QParams for every 2-D weight leaf; returns a
+    parallel dict keyed by flattened path."""
+    import jax
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = {}
+    for path, leaf in flat:
+        if hasattr(leaf, "ndim") and leaf.ndim == 2:
+            key = "/".join(str(p) for p in path)
+            out[key] = calibrate_weight(leaf, bits, axis=leaf.ndim - 1 if axis == -1 else axis)
+    return out

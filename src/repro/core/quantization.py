@@ -1,0 +1,117 @@
+"""Affine quantization (paper §3.2).
+
+``real = scale * (code - zero_point)`` — eq. (1) of the paper with
+``A = scale``, ``B = -scale*zero_point``. Arbitrary bitwidth; per-tensor or
+per-channel granularity (weights per-channel, activations per-tensor, per the
+paper / Krishnamoorthi whitepaper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class QParams:
+    """Quantization parameters for one tensor.
+
+    ``scale``/``zero_point`` are scalars (per-tensor) or vectors broadcast
+    along ``axis`` (per-channel). ``zero_point`` lives in *code* space; the
+    integer fed to the ACU is ``code - zero_point`` (paper eq. 2), so symmetric
+    quantization has ``zero_point == 0``.
+    """
+
+    scale: Array
+    zero_point: Array
+    bits: int
+    axis: Optional[int] = None  # channel axis for per-channel, None = per-tensor
+
+    @property
+    def lo(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def hi(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    def _expand(self, x: Array, v: Array) -> Array:
+        if self.axis is None:
+            return v
+        shape = [1] * x.ndim
+        shape[self.axis] = -1
+        return jnp.reshape(v, shape)
+
+
+def symmetric_qparams(calib_max: Array, bits: int, axis: Optional[int] = None) -> QParams:
+    """Symmetric quantizer from a calibrated absolute max."""
+    hi = (1 << (bits - 1)) - 1
+    scale = jnp.maximum(jnp.asarray(calib_max, jnp.float32), 1e-12) / hi
+    return QParams(scale=scale, zero_point=jnp.zeros_like(scale), bits=bits, axis=axis)
+
+
+def affine_qparams(xmin: Array, xmax: Array, bits: int, axis: Optional[int] = None) -> QParams:
+    """Affine quantizer from calibrated (min, max)."""
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    xmin = jnp.minimum(jnp.asarray(xmin, jnp.float32), 0.0)
+    xmax = jnp.maximum(jnp.asarray(xmax, jnp.float32), 0.0)
+    scale = jnp.maximum((xmax - xmin) / (hi - lo), 1e-12)
+    zp = jnp.clip(jnp.round(lo - xmin / scale), lo, hi)
+    return QParams(scale=scale, zero_point=zp, bits=bits, axis=axis)
+
+
+def quantize(x: Array, qp: QParams) -> Array:
+    """real -> int code (int32 container, values within [lo, hi])."""
+    s = qp._expand(x, qp.scale)
+    z = qp._expand(x, qp.zero_point)
+    q = jnp.round(x / s + z)
+    return jnp.clip(q, qp.lo, qp.hi).astype(jnp.int32)
+
+
+def dequantize(q: Array, qp: QParams) -> Array:
+    s = qp._expand(q, qp.scale)
+    z = qp._expand(q, qp.zero_point)
+    return (q.astype(jnp.float32) - z) * s
+
+
+def acu_operand(q: Array, qp: QParams) -> Array:
+    """Integer operand the approximate hardware multiplier sees:
+    ``code - zero_point`` (paper eq. 2)."""
+    z = qp._expand(q, qp.zero_point)
+    return (q - z.astype(jnp.int32)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# fake quantization with straight-through estimator (QAT, paper §3.2.1)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fake_quant(x: Array, scale: Array, zero_point: Array, lo: float, hi: float) -> Array:
+    q = jnp.clip(jnp.round(x / scale + zero_point), lo, hi)
+    return (q - zero_point) * scale
+
+
+def _fq_fwd(x, scale, zero_point, lo, hi):
+    y = fake_quant(x, scale, zero_point, lo, hi)
+    in_range = (x / scale + zero_point >= lo) & (x / scale + zero_point <= hi)
+    return y, in_range
+
+
+def _fq_bwd(in_range, g):
+    # STE: pass gradient through inside the clip range, zero outside.
+    return (jnp.where(in_range, g, 0.0), None, None, None, None)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quantize(x: Array, qp: QParams) -> Array:
+    """Fake-quantize with STE (differentiable); broadcast per-channel params."""
+    s = qp._expand(x, qp.scale)
+    z = qp._expand(x, qp.zero_point)
+    return fake_quant(x, s, z, float(qp.lo), float(qp.hi))

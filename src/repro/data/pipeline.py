@@ -1,0 +1,156 @@
+"""Synthetic deterministic data pipeline.
+
+No external datasets are available offline (DESIGN.md §9); these generators
+produce *learnable* tasks so the paper's relative claims (quant ~= fp32,
+approx << quant, retrain ~= quant) can be validated end-to-end:
+
+* token streams from a fixed random Markov chain (LM pretraining demo),
+* class-conditional image patterns + noise (CNN classification),
+* class-conditional token distributions (LSTM text classification),
+* digit-like blobs (VAE / GAN reconstruction).
+
+The host pipeline shards each global batch across the ``("pod","data")`` mesh
+axes and prefetches with a bounded queue (straggler posture, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LM token stream: order-1 Markov chain with heavy-tailed transitions
+# ---------------------------------------------------------------------------
+
+class MarkovLM:
+    def __init__(self, vocab: int, seed: int = 0, branching: int = 8):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab
+        self.succ = rng.integers(0, vocab, (vocab, branching))
+        w = 1.0 / np.arange(1, branching + 1)
+        self.probs = w / w.sum()
+
+    def sample(self, rng: np.random.Generator, batch: int, seq: int) -> np.ndarray:
+        out = np.empty((batch, seq + 1), np.int32)
+        out[:, 0] = rng.integers(0, self.vocab, batch)
+        for t in range(seq):
+            choice = rng.choice(self.succ.shape[1], size=batch, p=self.probs)
+            out[:, t + 1] = self.succ[out[:, t], choice]
+        return out
+
+    def batches(self, batch: int, seq: int, seed: int = 1) -> Iterator[dict]:
+        rng = np.random.default_rng(seed)
+        while True:
+            chunk = self.sample(rng, batch, seq)
+            yield {"tokens": chunk[:, :-1], "labels": chunk[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# vision: class-conditional patterns + noise (CIFAR stand-in)
+# ---------------------------------------------------------------------------
+
+def image_task(n_classes: int = 10, size: int = 32, channels: int = 3,
+               seed: int = 0):
+    rng = np.random.default_rng(seed)
+    bases = rng.normal(size=(n_classes, channels, size, size)).astype(np.float32)
+
+    def batches(batch: int, noise: float = 0.8, seed: int = 1) -> Iterator[dict]:
+        r = np.random.default_rng(seed)
+        while True:
+            y = r.integers(0, n_classes, batch)
+            x = bases[y] + noise * r.normal(size=(batch, channels, size, size)
+                                            ).astype(np.float32)
+            yield {"image": x.astype(np.float32), "label": y.astype(np.int32)}
+
+    return batches
+
+
+# ---------------------------------------------------------------------------
+# text classification: class-dependent token distributions (IMDB stand-in)
+# ---------------------------------------------------------------------------
+
+def text_cls_task(vocab: int = 1000, n_classes: int = 2, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    class_logits = rng.normal(size=(n_classes, vocab)).astype(np.float32) * 1.5
+
+    def batches(batch: int, seq: int = 64, seed: int = 1) -> Iterator[dict]:
+        r = np.random.default_rng(seed)
+        probs = np.exp(class_logits)
+        probs /= probs.sum(-1, keepdims=True)
+        while True:
+            y = r.integers(0, n_classes, batch)
+            toks = np.stack([r.choice(vocab, size=seq, p=probs[c]) for c in y])
+            yield {"tokens": toks.astype(np.int32), "label": y.astype(np.int32)}
+
+    return batches
+
+
+# ---------------------------------------------------------------------------
+# digit-like blobs for VAE/GAN (MNIST stand-in)
+# ---------------------------------------------------------------------------
+
+def blob_task(size: int = 28, n_classes: int = 10, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    cx, cy = rng.uniform(6, size - 6, (2, n_classes))
+    r0 = rng.uniform(2, 6, n_classes)
+    yy, xx = np.mgrid[0:size, 0:size]
+
+    def batches(batch: int, seed: int = 1) -> Iterator[dict]:
+        r = np.random.default_rng(seed)
+        while True:
+            y = r.integers(0, n_classes, batch)
+            d2 = (xx[None] - cx[y, None, None]) ** 2 + \
+                (yy[None] - cy[y, None, None]) ** 2
+            img = (d2 < r0[y, None, None] ** 2).astype(np.float32)
+            img = np.clip(img + 0.1 * r.normal(size=img.shape), 0, 1)
+            yield {"image": img.reshape(batch, -1).astype(np.float32),
+                   "label": y.astype(np.int32)}
+
+    return batches
+
+
+# ---------------------------------------------------------------------------
+# device placement + bounded prefetch
+# ---------------------------------------------------------------------------
+
+def shard_batch(batch: dict, sharding=None) -> dict:
+    if sharding is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    return {k: jax.device_put(v, sharding) for k, v in batch.items()}
+
+
+class Prefetcher:
+    """Bounded-depth background prefetch: a persistently slow producer can
+    never stall consumers by more than ``depth`` steps (straggler bound)."""
+
+    def __init__(self, it: Iterator[dict], depth: int = 2, sharding=None):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.it = it
+        self.sharding = sharding
+        self._stop = threading.Event()
+        self.t = threading.Thread(target=self._run, daemon=True)
+        self.t.start()
+
+    def _run(self):
+        for b in self.it:
+            if self._stop.is_set():
+                return
+            self.q.put(shard_batch(b, self.sharding))
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            self.q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,31 @@
+"""jit'd public wrapper for the error-corrected GEMM: pads to tile multiples."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import err_matmul_kernel
+
+
+def err_matmul(a: jnp.ndarray, w: jnp.ndarray, f: jnp.ndarray, g: jnp.ndarray,
+               offset: int, *, bm: int = 128, bk: int = 128, bn: int = 128,
+               interpret: bool = True) -> jnp.ndarray:
+    """Exact-int-matmul + low-rank error correction, padded to tile multiples.
+
+    Padding uses code 0; the correction contribution of padded ks is
+    ``f[off] . g[off]`` per pad and is subtracted afterwards (the exact term's
+    pad contribution is 0 * 0 = 0).
+    """
+    M, K = a.shape
+    _, N = w.shape
+    pm = (-M) % min(bm, 128)
+    pk = (-K) % min(bk, 128)
+    pn = (-N) % min(bn, 128)
+    if pm or pk or pn:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    rank = f.shape[1]
+    out = err_matmul_kernel(a, w, f, g, offset=offset, rank=rank,
+                            bm=bm, bk=bk, bn=bn, interpret=interpret)
+    if pk:
+        out = out - pk * jnp.dot(f[offset], g[offset])
+    return out[:M, :N]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the low-rank error-corrected GEMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def err_matmul_ref(a: jnp.ndarray, w: jnp.ndarray, f: jnp.ndarray,
+                   g: jnp.ndarray, offset: int) -> jnp.ndarray:
+    exact = (a.astype(jnp.int32) @ w.astype(jnp.int32)).astype(jnp.float32)
+    fa = jnp.take(f, a.astype(jnp.int32) + offset, axis=0)   # (M, K, r)
+    gw = jnp.take(g, w.astype(jnp.int32) + offset, axis=0)   # (K, N, r)
+    corr = jnp.einsum("mkr,knr->mn", fa, gw)
+    return exact + corr

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the LUT-gather GEMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lut_matmul_ref(a: jnp.ndarray, w: jnp.ndarray, lut_flat: jnp.ndarray,
+                   offset: int, n_codes: int) -> jnp.ndarray:
+    """out[m, n] = sum_k LUT[a[m,k]+off, w[k,n]+off] — direct gather, O(MKN) mem."""
+    ai = a.astype(jnp.int32) + offset
+    wi = w.astype(jnp.int32) + offset
+    idx = ai[:, :, None] * n_codes + wi[None, :, :]
+    prods = jnp.take(lut_flat, idx.reshape(-1)).reshape(idx.shape)
+    return prods.sum(axis=1).astype(jnp.int32)

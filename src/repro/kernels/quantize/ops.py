@@ -1,0 +1,21 @@
+"""Public wrapper: quantize arbitrary-shape tensors via the fused kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import quantize_kernel
+
+
+def quantize_op(x: jnp.ndarray, scale, zero_point, *, bits: int = 8,
+                interpret: bool = True) -> jnp.ndarray:
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    block = 1024
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    s = jnp.asarray(scale, jnp.float32).reshape(1)
+    z = jnp.asarray(zero_point, jnp.float32).reshape(1)
+    q = quantize_kernel(flat, s, z, bits=bits, block=block, interpret=interpret)
+    return q[:n].reshape(shape)

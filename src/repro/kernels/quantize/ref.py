@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused quantize kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jnp.ndarray, scale, zero_point, bits: int = 8) -> jnp.ndarray:
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    q = jnp.round(x.astype(jnp.float32) / scale + zero_point)
+    return jnp.clip(q, lo, hi).astype(jnp.int32)

@@ -1,0 +1,26 @@
+"""Public wrapper: (B, T, H, hd) layout -> WKV kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import wkv_kernel
+
+
+def wkv(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+        u: jnp.ndarray, s0: jnp.ndarray, *, interpret: bool = True):
+    """r/k/v/w: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd).
+
+    Returns (out (B, T, H, hd), sT (B, H, hd, hd)). Heads fold into the grid
+    (row b*H + h), so the kernel's per-cell u block is ``u[cell %% H]``.
+    """
+    b, t, h, hd = r.shape
+
+    def fold(a):
+        return a.transpose(0, 2, 1, 3).reshape(b * h, t, hd).astype(jnp.float32)
+
+    out, sT = wkv_kernel(fold(r), fold(k), fold(v), fold(w),
+                         u.astype(jnp.float32),
+                         s0.reshape(b * h, hd, hd).astype(jnp.float32),
+                         interpret=interpret)
+    return (out.reshape(b, h, t, hd).transpose(0, 2, 1, 3),
+            sT.reshape(b, h, hd, hd))

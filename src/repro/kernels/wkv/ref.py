@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the WKV-6 recurrence (lax.scan form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+            u: jnp.ndarray, s0: jnp.ndarray):
+    """r/k/v/w: (BH, T, hd); u: (hd,); s0: (BH, hd, hd) ->
+    (out (BH, T, hd), sT)."""
+
+    def step(s, x):
+        rt, kt, vt, wt = x                      # (BH, hd) each
+        kv = kt[:, :, None] * vt[:, None, :]    # (BH, hd, hd)
+        out = jnp.einsum("bk,bkv->bv", rt, s + u[None, :, None] * kv)
+        s = wt[:, :, None] * s + kv
+        return s, out
+
+    xs = tuple(a.transpose(1, 0, 2) for a in (r, k, v, w))
+    sT, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2), sT

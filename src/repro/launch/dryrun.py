@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract roofline terms (DESIGN.md §7).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results.json
+  ... --variant causal_blocking       (hillclimb variants, see VARIANTS)
+
+The XLA flag above must precede every other import (jax locks the device
+count at first init) — this module is the ONLY place it is set.
+"""
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+import sys             # noqa: E402
+import time            # noqa: E402
+
+import jax             # noqa: E402
+
+from repro.configs import ARCH_NAMES, SHAPES, eligible, get_config  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import build_step, make_acfg  # noqa: E402
+
+
+def _padded_heads(cfg):
+    """Pad q heads to a multiple of 16 and kv heads to a divisor of that."""
+    h = cfg.n_heads + (-cfg.n_heads) % 16
+    kv = cfg.n_kv_heads
+    while h % kv != 0:
+        kv += 1
+    return {"n_heads": h, "n_kv_heads": kv}
+
+
+# §Perf hillclimb variants: named config transformations
+VARIANTS = {
+    "baseline": lambda cfg: cfg,
+    # skip fully-masked KV blocks in causal chunked attention (~2x attn FLOPs)
+    "causal_blocking": lambda cfg: dataclasses.replace(
+        cfg, attn_causal_blocking=True),
+    # save matmul outputs instead of recomputing everything (memory<->compute)
+    "remat_dots": lambda cfg: dataclasses.replace(cfg, remat_policy="dots"),
+    "no_remat": lambda cfg: dataclasses.replace(cfg, remat=False),
+    "remat_dots_causal": lambda cfg: dataclasses.replace(
+        cfg, remat_policy="dots", attn_causal_blocking=True),
+    # larger attention chunk: fewer, bigger GEMMs
+    "chunk2k": lambda cfg: dataclasses.replace(cfg, attn_chunk=2048),
+    "chunk1k": lambda cfg: dataclasses.replace(cfg, attn_chunk=1024),
+    # fp32->bf16 scores already; widen rwkv chunk (fewer boundary saves)
+    "rwkv_chunk1k": lambda cfg: dataclasses.replace(cfg, rwkv_chunk=1024),
+    # hillclimb #1 baseline reproduction: replicated MoE dispatch buffer
+    "moe_replicated_dispatch": lambda cfg: dataclasses.replace(
+        cfg, moe_shard_dispatch=False),
+    # pad attention heads to the next multiple of the model axis so they
+    # shard (zero-weight heads are exact); production would zero-pad weights
+    "pad_heads": lambda cfg: dataclasses.replace(
+        cfg, **_padded_heads(cfg)),
+    "pad_heads_causal": lambda cfg: dataclasses.replace(
+        cfg, attn_causal_blocking=True, **_padded_heads(cfg)),
+}
+
+
+def compile_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                 variant: str = "baseline", probe_unroll: bool = True,
+                 verbose: bool = True, acu: str | None = None) -> dict:
+    """Lower + compile one cell; returns the roofline record."""
+    cfg = VARIANTS[variant](get_config(arch))
+    shape = SHAPES[shape_name]
+    ok, why = eligible(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.monotonic()
+    acfg = make_acfg(acu)
+
+    def lower_compile(c):
+        bundle = build_step(c, shape, mesh, acfg=acfg)
+        lowered = jax.jit(
+            bundle.fn, in_shardings=bundle.in_shardings,
+            out_shardings=bundle.out_shardings,
+            donate_argnums=bundle.donate_argnums,
+        ).lower(*bundle.args)
+        compiled = lowered.compile()
+        return bundle, compiled
+
+    bundle, compiled = lower_compile(cfg)
+    cost_u1 = roofline.extract(compiled)
+    mem = compiled.memory_analysis()
+
+    groups = cfg.n_groups
+    if probe_unroll and groups > 1:
+        # two-point unroll probe (even group count required; shrink if odd)
+        pg = groups if groups % 2 == 0 else groups - 1
+        probe_cfg = dataclasses.replace(cfg, n_layers=pg * len(cfg.pattern))
+        if pg != groups:
+            _, c_p1 = lower_compile(probe_cfg)
+            cost_p1 = roofline.extract(c_p1)
+        else:
+            cost_p1 = cost_u1
+        _, c_p2 = lower_compile(dataclasses.replace(probe_cfg, scan_unroll=2))
+        cost_p2 = roofline.extract(c_p2)
+        delta = roofline.CellCost(
+            flops=max(cost_p2.flops - cost_p1.flops, 0.0),
+            bytes_accessed=max(cost_p2.bytes_accessed - cost_p1.bytes_accessed, 0.0),
+            coll_bytes=0.0,
+            coll_breakdown={k: max(cost_p2.coll_breakdown.get(k, 0) -
+                                   cost_p1.coll_breakdown.get(k, 0), 0)
+                            for k in set(cost_p1.coll_breakdown) |
+                            set(cost_p2.coll_breakdown)},
+            peak_memory=0.0, arg_bytes=0.0)
+        total = roofline.CellCost(
+            flops=cost_u1.flops + (groups - 1) * delta.flops,
+            bytes_accessed=cost_u1.bytes_accessed + (groups - 1) * delta.bytes_accessed,
+            coll_bytes=0.0,
+            coll_breakdown={k: cost_u1.coll_breakdown.get(k, 0) +
+                            (groups - 1) * delta.coll_breakdown.get(k, 0)
+                            for k in set(cost_u1.coll_breakdown) |
+                            set(delta.coll_breakdown)},
+            peak_memory=cost_u1.peak_memory, arg_bytes=cost_u1.arg_bytes)
+        total = dataclasses.replace(
+            total, coll_bytes=float(sum(total.coll_breakdown.values())))
+    else:
+        total = cost_u1
+
+    # analytic nested-recurrence correction (rwkv)
+    dfl, dby = roofline.recurrence_correction(cfg, shape, n_dev)
+    total = dataclasses.replace(total, flops=total.flops + dfl,
+                                bytes_accessed=total.bytes_accessed + dby)
+
+    mf = roofline.model_flops(cfg, shape, n_dev)
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": variant, "acu": acu,
+        "mesh": "2x16x16" if multi_pod else "16x16", "n_devices": n_dev,
+        "kind": shape.kind, "n_groups": groups,
+        **total.as_dict(),
+        "model_flops": mf,
+        "useful_ratio": mf / total.flops if total.flops else 0.0,
+        "roofline_frac": (mf / roofline.PEAK_BF16) / total.step_time
+        if total.step_time else 0.0,
+        "memory_analysis": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "plan_report": bundle.meta.get("plan_report", []) +
+        bundle.meta.get("cache_report", []),
+        "compile_s": round(time.monotonic() - t0, 1),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} ({rec['mesh']}, {variant}): "
+              f"T_comp={total.t_compute*1e3:.2f}ms T_mem={total.t_memory*1e3:.2f}ms "
+              f"T_coll={total.t_collective*1e3:.2f}ms -> {total.bottleneck}; "
+              f"useful={rec['useful_ratio']:.2f} roofline={rec['roofline_frac']:.2%} "
+              f"args/dev={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"({rec['compile_s']}s)", flush=True)
+        print(f"  memory_analysis: {mem}", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    ap.add_argument("--acu", default=None,
+                    help="emulate an ACU on every GEMM: 'mult:mode[:rank]'")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the two-point unroll probe (faster)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in ARCH_NAMES:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    records = []
+    for a, s in cells:
+        for mp in meshes:
+            try:
+                records.append(compile_cell(a, s, multi_pod=mp,
+                                            variant=args.variant,
+                                            probe_unroll=not args.no_probe,
+                                            acu=args.acu))
+            except Exception as e:  # noqa: BLE001 — report, don't abort the sweep
+                print(f"[dryrun] FAILED {a} x {s} multipod={mp}: "
+                      f"{type(e).__name__}: {e}", flush=True)
+                records.append({"arch": a, "shape": s,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"[dryrun] wrote {len(records)} records to {args.out}")
+    failed = [r for r in records if "error" in r]
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+"""Production meshes (per the assignment).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (device count is locked at first jax init, and only
+dryrun.py sets the 512-device XLA flag).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU tests (1x1, same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,63 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        [--steps N] [--approx mul8s_1L2H:lut] [--ckpt DIR] [--reduced]
+
+On real hardware this process runs per-host under `jax.distributed`
+(initialize() is called when the standard cluster env vars are present);
+in this container it runs single-process. The step function, planner
+shardings, checkpointing and recovery paths are identical either way —
+that's the point of the dry-run-first design.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--approx", default=None, help="mult:mode[:rank]")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--reduced", action="store_true",
+                    help="width-reduced config (CPU-sized)")
+    args = ap.parse_args()
+
+    if "JAX_COORDINATOR_ADDRESS" in os.environ:  # multi-host cluster
+        jax.distributed.initialize()
+
+    from repro.configs import get_config, reduced_config
+    from repro.data.pipeline import MarkovLM, Prefetcher
+    from repro.launch.specs import make_acfg
+    from repro.models.transformer import init_params, loss_fn
+    from repro.optim.adamw import AdamW, cosine_schedule
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, vocab_size=min(cfg.vocab_size, 4096),
+                              vocab_pad_mult=16)
+    acfg = make_acfg(args.approx)
+
+    lm = MarkovLM(vocab=cfg.vocab_size, seed=0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=cosine_schedule(3e-4, 100, args.steps), weight_decay=0.01)
+
+    trainer = Trainer(
+        lambda p, b: loss_fn(p, b["tokens"], b["labels"], cfg, acfg), opt,
+        TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=100, log_every=20))
+    data = Prefetcher(lm.batches(args.batch, args.seq), depth=2)
+    trainer.fit(params, opt.init(params), data, args.steps)
+    data.close()
+    for h in trainer.history[-10:]:
+        print(h)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,257 @@
+"""Shared transformer building blocks (pure functional JAX).
+
+Every GEMM goes through :func:`repro.core.approx_ops.approx_dense`, so the
+paper's ACU emulation is a first-class switch on any architecture
+(``cfg=None`` -> exact bf16 substrate path).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx_ops import ApproxConfig, approx_dense
+from repro.parallel.sharding import shard
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6,
+             plus_one: bool = False) -> Array:
+    """RMSNorm; ``plus_one`` = gemma-style (1 + w) parameterization."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if plus_one else scale.astype(jnp.float32)
+    return (y * w).astype(x.dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE and Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (B, S, H, D); positions: (B, S) int."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions: Array, sections=(16, 24, 24),
+                theta: float = 10000.0) -> Array:
+    """Qwen2-VL multimodal RoPE. positions: (3, B, S) — (temporal, h, w) ids.
+
+    The d/2 rotary frequency channels are partitioned into ``sections``
+    (t/h/w); each partition rotates by its own position stream. For text-only
+    tokens all three streams are equal and M-RoPE reduces to RoPE.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (d/2,)
+    # build per-channel position selector
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])  # (d/2,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32).transpose(1, 2, 0),      # (B, S, 3)
+        sec[None, None, :].astype(jnp.int32) * jnp.ones(
+            (*positions.shape[1:], 1), jnp.int32), axis=-1)    # (B, S, d/2)
+    angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _mask_scores(s: Array, q_pos: Array, k_pos: Array, causal: bool,
+                 window: Optional[int]) -> Array:
+    mask = jnp.ones(s.shape[-2:], bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(mask, s, -1e30)
+
+
+def gqa_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window: Optional[int] = None, softcap: Optional[float] = None,
+                  q_offset: int = 0, chunk: int = 512,
+                  impl: str = "chunked", causal_blocking: bool = False) -> Array:
+    """Grouped-query attention.
+
+    q: (B, S, Hq, D); k/v: (B, T, Hkv, D); returns (B, S, Hq, D).
+    ``q_offset``: absolute position of q[0] within the key sequence (decode).
+    ``chunked`` processes q in blocks of ``chunk`` for O(S·chunk) score memory.
+    """
+    b, s_len, hq, d = q.shape
+    t_len = k.shape[1]
+    hkv = k.shape[2]
+    rep = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, s_len, hkv, rep, d)
+
+    def block(q_blk: Array, q_pos: Array, k_blk: Array, v_blk: Array,
+              k_pos: Array) -> Array:
+        # q_blk: (B, cq, Hkv, rep, D) -> scores (B, Hkv, rep, cq, Tk)
+        sc = jnp.einsum("bqhrd,bthd->bhrqt", q_blk.astype(jnp.float32),
+                        k_blk.astype(jnp.float32)) * scale
+        if softcap is not None:
+            sc = softcap * jnp.tanh(sc / softcap)
+        sc = _mask_scores(sc, q_pos, k_pos, causal, window)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhrqt,bthd->bqhrd", p, v_blk.astype(jnp.float32))
+        return o
+
+    if impl == "naive" or s_len <= chunk or s_len % chunk != 0:
+        out = block(qg, jnp.arange(s_len) + q_offset, k, v, jnp.arange(t_len))
+    else:
+        # statically unrolled q-block loop (NOT lax.map): keeps score memory at
+        # O(S*chunk) while every block appears in the HLO, so cost_analysis
+        # counts the true attention FLOPs (DESIGN.md §7 — scan bodies are
+        # counted once). XLA reuses the temp buffers across blocks.
+        n_blk = s_len // chunk
+        outs = []
+        for i in range(n_blk):
+            q_blk = jax.lax.dynamic_slice_in_dim(qg, i * chunk, chunk, axis=1)
+            pos = jnp.arange(chunk) + i * chunk + q_offset
+            if causal_blocking and causal and q_offset == 0 and s_len == t_len:
+                # §Perf hillclimb: a causal q-block only sees keys < its end;
+                # slicing K/V per block drops ~half the attention FLOPs.
+                hi = (i + 1) * chunk
+                if window is not None:
+                    lo = max(0, i * chunk - window)
+                else:
+                    lo = 0
+                k_blk = k[:, lo:hi]
+                v_blk = v[:, lo:hi]
+                k_pos = jnp.arange(lo, hi)
+            else:
+                k_blk, v_blk, k_pos = k, v, jnp.arange(t_len)
+            outs.append(block(q_blk, pos, k_blk, v_blk, k_pos))
+        out = jnp.concatenate(outs, axis=1)
+    return out.reshape(b, s_len, hq, d).astype(q.dtype)
+
+
+def attention_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig],
+                    positions: Array, *, kv: Optional[tuple] = None,
+                    cache=None, cache_pos: Optional[Array] = None,
+                    window: Optional[int] = None, causal: bool = True):
+    """Full attention sub-layer: qkv proj -> rope -> attention -> out proj.
+
+    ``cache``: optional (k_cache, v_cache) of shape (B, Smax, Hkv, D);
+    returns (out, new_cache). ``kv``: cross-attention source (B, T, D).
+    """
+    b, s_len, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = approx_dense(x, p["wq"], p.get("bq"), acfg).reshape(b, s_len, h, hd)
+    src = x if kv is None else kv
+    t0 = src.shape[1]
+    k = approx_dense(src, p["wk"], p.get("bk"), acfg).reshape(b, t0, hkv, hd)
+    v = approx_dense(src, p["wv"], p.get("bv"), acfg).reshape(b, t0, hkv, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+
+    if kv is None and cfg.rope != "none":
+        if cfg.rope == "mrope":
+            mpos = jnp.broadcast_to(positions[None], (3, *positions.shape))
+            q = apply_mrope(q, mpos, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, mpos, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", "seq_kv", "kv_heads", None)
+    v = shard(v, "batch", "seq_kv", "kv_heads", None)
+
+    q_offset = 0
+    if cache is not None:
+        kc, vc = cache
+        if kv is None:  # self-attention: append to cache
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), cache_pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), cache_pos, axis=1)
+            k, v = kc, vc
+            cache = (kc, vc)
+        q_offset = cache_pos
+        # mask out not-yet-written cache slots via causal masking at q_offset
+
+    out = gqa_attention(q, k, v, causal=causal and kv is None, window=window,
+                        softcap=cfg.softcap_attn, q_offset=q_offset,
+                        chunk=cfg.attn_chunk, impl=cfg.attn_impl,
+                        causal_blocking=getattr(cfg, "attn_causal_blocking", False))
+    out = out.reshape(b, s_len, h * hd)
+    out = approx_dense(out, p["wo"], p.get("bo"), acfg)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig]) -> Array:
+    """Gated (SwiGLU/GeGLU) or plain-GELU MLP, TP-sharded on the hidden dim."""
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        gate = approx_dense(x, p["w_gate"], None, acfg)
+        up = approx_dense(x, p["w_up"], None, acfg)
+        act = jax.nn.silu(gate) if cfg.mlp_type == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(approx_dense(x, p["w_up"], p.get("b_up"), acfg))
+    h = shard(h, "batch", None, "mlp")
+    return approx_dense(h, p["w_down"], p.get("b_down"), acfg)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed(tokens: Array, table: Array) -> Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_head(x: Array, w: Array, acfg: Optional[ApproxConfig],
+            softcap: Optional[float] = None) -> Array:
+    logits = approx_dense(x, w, None, acfg)
+    logits = shard(logits, "batch", None, "vocab")
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def cross_entropy(logits: Array, labels: Array, n_valid_vocab: int) -> Array:
+    """Mean next-token CE; padded vocab columns masked out."""
+    v = logits.shape[-1]
+    if n_valid_vocab < v:
+        neg = jnp.full((v - n_valid_vocab,), -1e30, logits.dtype)
+        logits = logits.at[..., n_valid_vocab:].set(neg)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()

@@ -1,0 +1,104 @@
+"""Mamba (S6 selective state space) block — the Jamba hybrid's SSM layer.
+
+Projections (in/out/x-proj/dt-proj) are GEMMs and therefore go through the
+paper's ACU emulation when enabled; the selective-scan recurrence itself is
+elementwise/add-dominated (no multiplier array in the accelerator sense) and
+stays exact — recorded in DESIGN.md §6.
+
+Train: associative scan over time (parallel, O(log S) depth).
+Decode: O(1) recurrent state update per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx_ops import ApproxConfig, approx_dense
+from repro.parallel.sharding import shard
+
+Array = jnp.ndarray
+
+
+class MambaState(NamedTuple):
+    conv: Array   # (B, d_conv - 1, d_inner) — causal conv tail
+    ssm: Array    # (B, d_inner, d_state)
+
+
+def _ssm_scan(dA: Array, dBx: Array, h0: Optional[Array] = None):
+    """h_t = dA_t * h_{t-1} + dBx_t along axis 1 (time).
+
+    dA, dBx: (B, S, d_inner, d_state). Associative scan over composed affine
+    maps (a, b): (a2*a1, a2*b1 + b2).
+    """
+    if h0 is not None:
+        # fold initial state into the first step
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    return h  # (B, S, d_inner, d_state)
+
+
+def mamba_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig], *,
+                state: Optional[MambaState] = None, decode: bool = False):
+    """x: (B, S, D). Returns (y, new_state).
+
+    p: in_proj (D, 2*d_inner), conv_w (d_conv, d_inner), conv_b (d_inner,),
+       x_proj (d_inner, dt_rank + 2*d_state), dt_proj (dt_rank, d_inner),
+       dt_bias (d_inner,), A_log (d_inner, d_state), Dskip (d_inner,),
+       out_proj (d_inner, D).
+    """
+    b, s, _ = x.shape
+    d_inner = cfg.mamba_d_inner
+    d_state = cfg.mamba_d_state
+    d_conv = cfg.mamba_d_conv
+
+    xz = approx_dense(x, p["in_proj"], None, acfg)
+    xs, z = jnp.split(xz, 2, axis=-1)              # (B, S, d_inner) each
+    xs = shard(xs, "batch", None, "mlp")
+
+    # causal depthwise conv over time
+    if decode:
+        conv_in = jnp.concatenate([state.conv, xs], axis=1)     # (B, d_conv-1+S, di)
+        new_conv = conv_in[:, -(d_conv - 1):]
+    else:
+        pad = jnp.zeros((b, d_conv - 1, d_inner), xs.dtype) if state is None \
+            else state.conv
+        conv_in = jnp.concatenate([pad, xs], axis=1)
+        new_conv = conv_in[:, -(d_conv - 1):]
+    # (B, S, di): sum_w conv_in[:, t + w] * conv_w[w]
+    xc = sum(conv_in[:, w:w + s] * p["conv_w"][w][None, None, :]
+             for w in range(d_conv))
+    xc = jax.nn.silu(xc + p["conv_b"][None, None, :])
+
+    # input-dependent SSM parameters
+    xdbc = approx_dense(xc, p["x_proj"], None, acfg)
+    dt_r, bmat, cmat = jnp.split(
+        xdbc, [cfg.mamba_dt_rank, cfg.mamba_dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(approx_dense(dt_r, p["dt_proj"], p["dt_bias"], acfg))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (di, ds)
+
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A[None, None])   # (B,S,di,ds)
+    dBx = (dt * xc)[..., None].astype(jnp.float32) * \
+        bmat[:, :, None, :].astype(jnp.float32)                       # (B,S,di,ds)
+
+    h0 = state.ssm if state is not None else None
+    if decode and s == 1:
+        h_prev = h0 if h0 is not None else jnp.zeros((b, d_inner, d_state), jnp.float32)
+        h_last = dA[:, 0] * h_prev + dBx[:, 0]
+        h = h_last[:, None]
+    else:
+        h = _ssm_scan(dA, dBx, h0)
+        h_last = h[:, -1]
+
+    y = jnp.einsum("btdn,btn->btd", h, cmat.astype(jnp.float32))
+    y = y.astype(x.dtype) + xc * p["Dskip"][None, None, :]
+    y = y * jax.nn.silu(z)
+    out = approx_dense(y, p["out_proj"], None, acfg)
+    return out, MambaState(conv=new_conv, ssm=h_last)

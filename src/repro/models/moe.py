@@ -1,0 +1,136 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based scatter dispatch.
+
+Dispatch is scatter/gather (not GShard one-hot einsum): a (T, E, C) one-hot
+dispatch tensor is O(T^2)-ish at LM scale, while the scatter form moves
+exactly T*k rows.
+
+Two dispatch layouts (cfg.moe_shard_dispatch — §Perf hillclimb #1):
+
+* ``False`` — *global* capacity buffers (E, C, D). Faithful to GShard
+  semantics, but the buffer is unshardable when E doesn't divide the model
+  axis and the combine-gather crosses shards: GSPMD replicates ~E*C*D bytes
+  per layer (granite: 16 GB of all-gather per layer — the recorded baseline).
+* ``True``  — *block-local* dispatch: tokens are grouped into ``data``-aligned
+  blocks; each block routes into its own (E, C/nb) slice. Every dispatch
+  gather/scatter is then shard-local; only the expert weights (TP) or the
+  expert dim (EP) move across devices. Per-block capacity is the standard
+  local-capacity relaxation of GShard.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx_ops import ApproxConfig, approx_dense
+from repro.parallel.sharding import current_mesh_context, shard
+
+Array = jnp.ndarray
+
+
+def _route(xf: Array, router: Array, k: int):
+    gate_logits = xf.astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(gate_logits, axis=-1)               # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_p, top_e
+
+
+def _expert_ffn(xe: Array, p: dict, cfg, acfg, block_axes):
+    """xe: (..., E, C, D) -> (..., E, C, D) through the gated expert FFN."""
+    if acfg is None:
+        gate = jnp.einsum("...ecd,edf->...ecf", xe, p["w_gate"])
+        up = jnp.einsum("...ecd,edf->...ecf", xe, p["w_up"])
+        h = jax.nn.silu(gate) * up
+        h = shard(h, *block_axes, "experts", None, "expert_mlp")
+        return jnp.einsum("...ecf,efd->...ecd", h, p["w_down"])
+
+    def one(xe_e, wg, wu, wd):
+        h = jax.nn.silu(approx_dense(xe_e, wg, None, acfg)) * \
+            approx_dense(xe_e, wu, None, acfg)
+        return approx_dense(h, wd, None, acfg)
+
+    fn = jax.vmap(one, in_axes=(0, 0, 0, 0))
+    if xe.ndim == 4:  # leading block dim
+        fn = jax.vmap(fn, in_axes=(0, None, None, None))
+    return fn(xe, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def _dispatch_blocks(cfg, t: int) -> int:
+    """Number of data-aligned dispatch blocks (1 disables block-locality)."""
+    if not cfg.moe_shard_dispatch:
+        return 1
+    ctx = current_mesh_context()
+    nb = 1
+    if ctx is not None:
+        for a in ("pod", "data"):
+            if a in ctx.mesh.axis_names:
+                nb *= ctx.mesh.shape[a]
+    else:
+        nb = 16  # planner default when traced without a mesh (tests)
+    while t % nb != 0 or nb > t:
+        nb //= 2
+    return max(nb, 1)
+
+
+def moe_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig]) -> Array:
+    """x: (B, S, D) -> (B, S, D).
+
+    p: router (D, E); w_gate/w_up (E, D, F); w_down (E, F, D).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    t = b * s
+    xf = x.reshape(t, d)
+    top_p, top_e = _route(xf, p["router"], k)
+
+    nb = _dispatch_blocks(cfg, t)
+    tb = t // nb                 # tokens per block
+    cap = int(max(1, round(tb * k / e * cfg.moe_capacity)))
+
+    # ---- block-local slot assignment -----------------------------------
+    flat_e = top_e.reshape(nb, tb * k)                         # (nb, TBk)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # (nb, TBk, E)
+    onehot = shard(onehot, "expert_blocks", None, None)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - 1                  # within block
+    slot = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=2)[..., 0]
+    keep = slot < cap                                          # (nb, TBk)
+    dest = jnp.where(keep, flat_e * cap + slot, e * cap)       # (nb, TBk)
+
+    # scatter token indices into per-block buffers (trash slot at the end)
+    tok_in_block = jnp.arange(tb * k, dtype=jnp.int32) // k    # (TBk,)
+    idx_buf = jnp.zeros((nb, e * cap + 1), jnp.int32)
+    idx_buf = idx_buf.at[jnp.arange(nb)[:, None], dest].set(tok_in_block[None] + 1)
+    idx_buf = idx_buf[:, :-1]                                  # (nb, E*cap)
+
+    # gather rows (block-local): xfb (nb, TB, D) -> xe (nb, E, cap, D)
+    xfb = xf.reshape(nb, tb, d)
+    xfb = shard(xfb, "expert_blocks", None, None)
+    xe = jnp.take_along_axis(
+        xfb, jnp.maximum(idx_buf - 1, 0)[..., None], axis=1)
+    xe = xe * (idx_buf > 0)[..., None].astype(x.dtype)
+    xe = xe.reshape(nb, e, cap, d)
+    xe = shard(xe, "expert_blocks", "experts", None, None)
+
+    ye = _expert_ffn(xe, p, cfg, acfg, ("expert_blocks",))
+    ye = shard(ye, "expert_blocks", "experts", None, None)
+
+    # combine (block-local gather + routed weights)
+    yeb = ye.reshape(nb, e * cap, d)
+    src = jnp.where(keep, flat_e * cap + slot, 0)              # (nb, TBk)
+    yk = jnp.take_along_axis(yeb, src[..., None], axis=1)      # (nb, TBk, D)
+    yk = jnp.where(keep[..., None], yk, 0.0).reshape(t, k, d)
+    out = (yk * top_p[:, :, None].astype(yk.dtype)).sum(axis=1)
+    return out.reshape(b, s, d)
+
+
+def router_aux_loss(x: Array, router: Array, n_experts: int, top_k: int) -> Array:
+    """Switch-style load-balancing auxiliary loss."""
+    t = x.shape[0] * x.shape[1]
+    logits = x.reshape(t, -1).astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    _, top_e = jax.lax.top_k(probs, top_k)
+    frac_tokens = jax.nn.one_hot(top_e, n_experts).mean(axis=(0, 1))
+    frac_probs = probs.mean(0)
+    return n_experts * jnp.sum(frac_tokens * frac_probs)

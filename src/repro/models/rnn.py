@@ -1,0 +1,87 @@
+"""RNN / LSTM / GRU cells on the approximate Linear layer (paper §3.3.4).
+
+"It also utilizes our custom Linear layer thus making it approximation
+compatible as well" — every gate GEMM goes through approx_dense.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx_ops import ApproxConfig, approx_dense
+
+Array = jnp.ndarray
+
+
+def init_lstm(key, d_in: int, d_hidden: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    s = (d_in + d_hidden) ** -0.5
+    return {
+        "wx": jax.random.normal(k1, (d_in, 4 * d_hidden), jnp.float32) * s,
+        "wh": jax.random.normal(k2, (d_hidden, 4 * d_hidden), jnp.float32) * s,
+        "b": jnp.zeros((4 * d_hidden,), jnp.float32),
+    }
+
+
+def lstm_cell(x: Array, h: Array, c: Array, p: dict,
+              acfg: Optional[ApproxConfig]) -> tuple[Array, Array]:
+    gates = approx_dense(x, p["wx"], None, acfg) + \
+        approx_dense(h, p["wh"], p["b"], acfg)
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def lstm(xs: Array, p: dict, acfg: Optional[ApproxConfig] = None) -> Array:
+    """xs: (B, S, D) -> final hidden state (B, H)."""
+    b = xs.shape[0]
+    dh = p["wh"].shape[0]
+    h0 = jnp.zeros((b, dh), xs.dtype)
+    c0 = jnp.zeros((b, dh), xs.dtype)
+
+    def step(carry, x):
+        h, c = carry
+        h, c = lstm_cell(x, h, c, p, acfg)
+        return (h, c), None
+
+    (h, _), _ = jax.lax.scan(step, (h0, c0), xs.transpose(1, 0, 2))
+    return h
+
+
+def init_gru(key, d_in: int, d_hidden: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    s = (d_in + d_hidden) ** -0.5
+    return {
+        "wx": jax.random.normal(k1, (d_in, 3 * d_hidden), jnp.float32) * s,
+        "wh": jax.random.normal(k2, (d_hidden, 3 * d_hidden), jnp.float32) * s,
+        "b": jnp.zeros((3 * d_hidden,), jnp.float32),
+    }
+
+
+def gru_cell(x: Array, h: Array, p: dict, acfg: Optional[ApproxConfig]) -> Array:
+    gx = approx_dense(x, p["wx"], p["b"], acfg)
+    gh = approx_dense(h, p["wh"], None, acfg)
+    xr, xz, xn = jnp.split(gx, 3, axis=-1)
+    hr, hz, hn = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(xr + hr)
+    z = jax.nn.sigmoid(xz + hz)
+    n = jnp.tanh(xn + r * hn)
+    return (1 - z) * n + z * h
+
+
+def rnn_cell(x: Array, h: Array, p: dict, acfg: Optional[ApproxConfig]) -> Array:
+    return jnp.tanh(approx_dense(x, p["wx"], p["b"], acfg) +
+                    approx_dense(h, p["wh"], None, acfg))
+
+
+def init_rnn(key, d_in: int, d_hidden: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    s = (d_in + d_hidden) ** -0.5
+    return {
+        "wx": jax.random.normal(k1, (d_in, d_hidden), jnp.float32) * s,
+        "wh": jax.random.normal(k2, (d_hidden, d_hidden), jnp.float32) * s,
+        "b": jnp.zeros((d_hidden,), jnp.float32),
+    }

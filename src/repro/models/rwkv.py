@@ -1,0 +1,151 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mix with
+data-dependent decay + channel mix.
+
+All R/K/V/G/W/O projections and the channel-mix GEMMs route through the ACU
+when approximation is enabled; the WKV recurrence (decay-accumulate) has no
+multiplier-array analogue and stays exact (DESIGN.md §6).
+
+State per layer: time-mix shift (B, 1, D), wkv state (B, H, hd, hd),
+channel-mix shift (B, 1, D).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx_ops import ApproxConfig, approx_dense
+from repro.parallel.sharding import shard
+
+Array = jnp.ndarray
+
+
+class RwkvState(NamedTuple):
+    tm_shift: Array   # (B, 1, D)
+    wkv: Array        # (B, H, hd, hd) float32
+    cm_shift: Array   # (B, 1, D)
+
+
+def _shift(x: Array, prev: Optional[Array]) -> Array:
+    """x_{t-1} stream: shift right by one along time, seeded by state."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev.astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _lora_mix(x: Array, xs: Array, mu: Array, A: Array, B: Array) -> Array:
+    """Finch data-dependent token-shift: lerp(x, x_prev, mu + lora(x_mix))."""
+    mu = mu.astype(x.dtype)[None, None, :]
+    xmix = x + (xs - x) * mu
+    lora = jnp.tanh(xmix @ A) @ B
+    m = mu + lora.astype(x.dtype)
+    return x + (xs - x) * m
+
+
+def time_mix(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig], *,
+             state: Optional[RwkvState], decode: bool = False):
+    b, s, d = x.shape
+    h = cfg.rwkv_n_heads
+    hd = d // h
+    prev = state.tm_shift if state is not None else None
+    xs = _shift(x, prev)
+    new_shift = x[:, -1:]
+
+    r_in = _lora_mix(x, xs, p["mu_r"], p["lora_A"], p["lora_B_r"])
+    k_in = _lora_mix(x, xs, p["mu_k"], p["lora_A"], p["lora_B_k"])
+    v_in = _lora_mix(x, xs, p["mu_v"], p["lora_A"], p["lora_B_v"])
+    g_in = _lora_mix(x, xs, p["mu_g"], p["lora_A"], p["lora_B_g"])
+    w_in = _lora_mix(x, xs, p["mu_w"], p["lora_A"], p["lora_B_w"])
+
+    r = approx_dense(r_in, p["Wr"], None, acfg).reshape(b, s, h, hd)
+    k = approx_dense(k_in, p["Wk"], None, acfg).reshape(b, s, h, hd)
+    v = approx_dense(v_in, p["Wv"], None, acfg).reshape(b, s, h, hd)
+    g = jax.nn.silu(approx_dense(g_in, p["Wg"], None, acfg))
+    # data-dependent per-channel decay in (0, 1)
+    dw = (w_in @ p["Wdecay_A"]) @ p["Wdecay_B"]
+    w = jnp.exp(-jnp.exp((p["decay_base"][None, None] + dw)
+                         .astype(jnp.float32))).reshape(b, s, h, hd)
+    u = p["bonus"].reshape(h, hd)
+
+    r = shard(r, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    rf = r.astype(jnp.float32)
+
+    s0 = state.wkv if state is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    if decode and s == 1:
+        kv = kf[:, 0, :, :, None] * vf[:, 0, :, None, :]        # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rf[:, 0],
+                         s0 + u[None, :, :, None] * kv)
+        s_new = w[:, 0, :, :, None] * s0 + kv
+        y = out[:, None]                                        # (B,1,H,hd)
+    else:
+        def step(carry, t_in):
+            st = carry
+            kt, vt, rt, wt = t_in                               # (B,H,hd) each
+            kv = kt[:, :, :, None] * vt[:, :, None, :]
+            out = jnp.einsum("bhk,bhkv->bhv", rt,
+                             st + u[None, :, :, None] * kv)
+            st = wt[:, :, :, None] * st + kv
+            return st, out
+
+        # time-chunked nested scan: the inner chunk is rematerialized on the
+        # backward pass, so only chunk-boundary wkv states are saved
+        # (O(S/chunk) instead of O(S) of the (B,H,hd,hd) state).
+        chunk = min(getattr(cfg, "rwkv_chunk", 256), s)
+        while s % chunk:            # fall back to a divisor of S (small seqs)
+            chunk -= 1
+        n_chunks = s // chunk
+
+        def to_chunks(a):  # (B,S,H,hd) -> (n_chunks, chunk, B, H, hd)
+            return a.transpose(1, 0, 2, 3).reshape(n_chunks, chunk, b, h, hd)
+
+        t_in = tuple(map(to_chunks, (kf, vf, rf, w)))
+
+        @jax.checkpoint
+        def chunk_scan(st, tc):
+            return jax.lax.scan(step, st, tc)
+
+        s_new, ys = jax.lax.scan(chunk_scan, s0, t_in)
+        y = ys.reshape(s, b, h, hd).transpose(1, 0, 2, 3)       # (B,S,H,hd)
+
+    # per-head group norm then gate
+    y = y.reshape(b, -1, h, hd)
+    mu_ = y.mean(-1, keepdims=True)
+    var = y.var(-1)[..., None]
+    y = (y - mu_) * jax.lax.rsqrt(var + 1e-5)
+    y = (y * p["ln_w"].reshape(h, hd)[None, None] +
+         p["ln_b"].reshape(h, hd)[None, None])
+    y = y.reshape(b, -1, d).astype(x.dtype) * g
+    out = approx_dense(y, p["Wo"], None, acfg)
+    return out, new_shift, s_new
+
+
+def channel_mix(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig], *,
+                state: Optional[RwkvState]):
+    prev = state.cm_shift if state is not None else None
+    xs = _shift(x, prev)
+    new_shift = x[:, -1:]
+    xk = x + (xs - x) * p["cm_mu_k"].astype(x.dtype)[None, None, :]
+    xr = x + (xs - x) * p["cm_mu_r"].astype(x.dtype)[None, None, :]
+    k = jnp.square(jax.nn.relu(approx_dense(xk, p["Wk_cm"], None, acfg)))
+    k = shard(k, "batch", None, "mlp")
+    kv = approx_dense(k, p["Wv_cm"], None, acfg)
+    return jax.nn.sigmoid(approx_dense(xr, p["Wr_cm"], None, acfg)) * kv, new_shift
+
+
+def rwkv_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig], *,
+               state: Optional[RwkvState] = None, decode: bool = False):
+    """Pre-norm time-mix + channel-mix; returns (y, new_state)."""
+    from .layers import layer_norm
+    h1 = layer_norm(x, p["ln1_w"], p["ln1_b"])
+    att, tm_shift, wkv = time_mix(h1, p, cfg, acfg, state=state, decode=decode)
+    x = x + att
+    h2 = layer_norm(x, p["ln2_w"], p["ln2_b"])
+    ffn, cm_shift = channel_mix(h2, p, cfg, acfg, state=state)
+    x = x + ffn
+    return x, RwkvState(tm_shift=tm_shift, wkv=wkv, cm_shift=cm_shift)

@@ -1,0 +1,188 @@
+"""Paper-side evaluation models (Table 1/2/4 analogues): CNNs, VAE, GAN.
+
+All conv/linear layers route through ``repro.core`` so any model can be run
+exact, quantized, or through an approximate multiplier — the "multi-DNN
+simulation" capability of Table 3.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx_ops import ApproxConfig, approx_dense, conv2d, separable_conv2d
+
+Array = jnp.ndarray
+
+
+def _conv_init(key, cout, cin, kh, kw):
+    s = (cin * kh * kw) ** -0.5
+    return jax.random.normal(key, (cout, cin, kh, kw), jnp.float32) * s
+
+
+def _lin_init(key, din, dout):
+    return jax.random.normal(key, (din, dout), jnp.float32) * din ** -0.5
+
+
+# ---------------------------------------------------------------------------
+# Small VGG-style CNN (the CIFAR10 CNN rows)
+# ---------------------------------------------------------------------------
+
+def init_cnn(key, n_classes: int = 10, width: int = 32, in_ch: int = 3,
+             img: int = 32) -> dict:
+    ks = jax.random.split(key, 8)
+    w = width
+    flat = 4 * w * (img // 8) ** 2   # three 2x2 pools
+    return {
+        "c1": _conv_init(ks[0], w, in_ch, 3, 3), "b1": jnp.zeros((w,)),
+        "c2": _conv_init(ks[1], 2 * w, w, 3, 3), "b2": jnp.zeros((2 * w,)),
+        "c3": _conv_init(ks[2], 4 * w, 2 * w, 3, 3), "b3": jnp.zeros((4 * w,)),
+        "f1": _lin_init(ks[3], flat, 8 * w), "fb1": jnp.zeros((8 * w,)),
+        "f2": _lin_init(ks[4], 8 * w, n_classes), "fb2": jnp.zeros((n_classes,)),
+    }
+
+
+def cnn_forward(p: dict, x: Array, acfg: Optional[ApproxConfig] = None) -> Array:
+    """x: (N, C, 32, 32) -> logits (N, n_classes)."""
+    pool = lambda t: jax.lax.reduce_window(
+        t, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+    x = jax.nn.relu(conv2d(x, p["c1"], p["b1"], cfg=acfg))
+    x = pool(x)
+    x = jax.nn.relu(conv2d(x, p["c2"], p["b2"], cfg=acfg))
+    x = pool(x)
+    x = jax.nn.relu(conv2d(x, p["c3"], p["b3"], cfg=acfg))
+    x = pool(x)                                        # (N, 4w, 4, 4)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(approx_dense(x, p["f1"], p["fb1"], acfg))
+    return approx_dense(x, p["f2"], p["fb2"], acfg)
+
+
+# ---------------------------------------------------------------------------
+# Mini ResNet (basic blocks, the ResNet50 row's structural stand-in)
+# ---------------------------------------------------------------------------
+
+def init_resnet(key, n_classes: int = 10, width: int = 16, n_blocks: int = 3) -> dict:
+    ks = iter(jax.random.split(key, 4 + 4 * n_blocks * 3))
+    p: dict = {"stem": _conv_init(next(ks), width, 3, 3, 3),
+               "stem_b": jnp.zeros((width,))}
+    w = width
+    for stage in range(3):
+        wo = width * (2 ** stage)
+        for blk in range(n_blocks):
+            pre = f"s{stage}b{blk}"
+            stride = 2 if (blk == 0 and stage > 0) else 1
+            cin = w if blk == 0 else wo
+            p[f"{pre}_c1"] = _conv_init(next(ks), wo, cin, 3, 3)
+            p[f"{pre}_c2"] = _conv_init(next(ks), wo, wo, 3, 3)
+            if cin != wo or stride != 1:
+                p[f"{pre}_sc"] = _conv_init(next(ks), wo, cin, 1, 1)
+        w = wo
+    p["head"] = _lin_init(next(ks), w, n_classes)
+    p["head_b"] = jnp.zeros((n_classes,))
+    return p
+
+
+def resnet_forward(p: dict, x: Array, acfg: Optional[ApproxConfig] = None,
+                   n_blocks: int = 3) -> Array:
+    x = jax.nn.relu(conv2d(x, p["stem"], p["stem_b"], cfg=acfg))
+    for stage in range(3):
+        for blk in range(n_blocks):
+            pre = f"s{stage}b{blk}"
+            stride = (2, 2) if (blk == 0 and stage > 0) else (1, 1)
+            h = jax.nn.relu(conv2d(x, p[f"{pre}_c1"], None, stride=stride, cfg=acfg))
+            h = conv2d(h, p[f"{pre}_c2"], None, cfg=acfg)
+            sc = x if f"{pre}_sc" not in p else conv2d(
+                x, p[f"{pre}_sc"], None, stride=stride, padding="VALID", cfg=acfg)
+            x = jax.nn.relu(h + sc)
+    x = x.mean(axis=(2, 3))
+    return approx_dense(x, p["head"], p["head_b"], acfg)
+
+
+# ---------------------------------------------------------------------------
+# SqueezeNet-style (fire modules: squeeze 1x1 -> expand 1x1/3x3)
+# ---------------------------------------------------------------------------
+
+def init_squeezenet(key, n_classes: int = 10, width: int = 16) -> dict:
+    ks = iter(jax.random.split(key, 16))
+    p = {"stem": _conv_init(next(ks), 2 * width, 3, 3, 3),
+         "stem_b": jnp.zeros((2 * width,))}
+    c = 2 * width
+    for i in range(3):
+        sq, ex = width * (i + 1), 2 * width * (i + 1)
+        p[f"f{i}_s"] = _conv_init(next(ks), sq, c, 1, 1)
+        p[f"f{i}_e1"] = _conv_init(next(ks), ex, sq, 1, 1)
+        p[f"f{i}_e3"] = _conv_init(next(ks), ex, sq, 3, 3)
+        c = 2 * ex
+    p["head"] = _lin_init(next(ks), c, n_classes)
+    p["head_b"] = jnp.zeros((n_classes,))
+    return p
+
+
+def squeezenet_forward(p: dict, x: Array, acfg: Optional[ApproxConfig] = None) -> Array:
+    pool = lambda t: jax.lax.reduce_window(
+        t, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+    x = pool(jax.nn.relu(conv2d(x, p["stem"], p["stem_b"], cfg=acfg)))
+    for i in range(3):
+        s = jax.nn.relu(conv2d(x, p[f"f{i}_s"], None, padding="VALID", cfg=acfg))
+        e1 = jax.nn.relu(conv2d(s, p[f"f{i}_e1"], None, padding="VALID", cfg=acfg))
+        e3 = jax.nn.relu(conv2d(s, p[f"f{i}_e3"], None, cfg=acfg))
+        x = jnp.concatenate([e1, e3], axis=1)
+        if i < 2:
+            x = pool(x)
+    x = x.mean(axis=(2, 3))
+    return approx_dense(x, p["head"], p["head_b"], acfg)
+
+
+# ---------------------------------------------------------------------------
+# VAE (MNIST-style 28x28) and GAN (Fashion-MNIST-style) — MLP variants
+# ---------------------------------------------------------------------------
+
+def init_vae(key, d_in: int = 784, d_h: int = 256, d_z: int = 32) -> dict:
+    ks = jax.random.split(key, 5)
+    return {
+        "enc1": _lin_init(ks[0], d_in, d_h), "enc1_b": jnp.zeros((d_h,)),
+        "mu": _lin_init(ks[1], d_h, d_z), "mu_b": jnp.zeros((d_z,)),
+        "logvar": _lin_init(ks[2], d_h, d_z), "logvar_b": jnp.zeros((d_z,)),
+        "dec1": _lin_init(ks[3], d_z, d_h), "dec1_b": jnp.zeros((d_h,)),
+        "dec2": _lin_init(ks[4], d_h, d_in), "dec2_b": jnp.zeros((d_in,)),
+    }
+
+
+def vae_forward(p: dict, x: Array, key, acfg: Optional[ApproxConfig] = None):
+    h = jax.nn.relu(approx_dense(x, p["enc1"], p["enc1_b"], acfg))
+    mu = approx_dense(h, p["mu"], p["mu_b"], acfg)
+    logvar = approx_dense(h, p["logvar"], p["logvar_b"], acfg)
+    eps = jax.random.normal(key, mu.shape)
+    z = mu + jnp.exp(0.5 * logvar) * eps
+    h = jax.nn.relu(approx_dense(z, p["dec1"], p["dec1_b"], acfg))
+    recon = jax.nn.sigmoid(approx_dense(h, p["dec2"], p["dec2_b"], acfg))
+    return recon, mu, logvar
+
+
+def vae_loss(p: dict, x: Array, key, acfg=None) -> Array:
+    recon, mu, logvar = vae_forward(p, x, key, acfg)
+    bce = -(x * jnp.log(recon + 1e-7) +
+            (1 - x) * jnp.log(1 - recon + 1e-7)).sum(-1).mean()
+    kl = -0.5 * (1 + logvar - mu ** 2 - jnp.exp(logvar)).sum(-1).mean()
+    return bce + kl
+
+
+def init_gan(key, d_z: int = 64, d_h: int = 256, d_out: int = 784) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "g1": _lin_init(ks[0], d_z, d_h), "g1_b": jnp.zeros((d_h,)),
+        "g2": _lin_init(ks[1], d_h, d_out), "g2_b": jnp.zeros((d_out,)),
+        "d1": _lin_init(ks[2], d_out, d_h), "d1_b": jnp.zeros((d_h,)),
+        "d2": _lin_init(ks[3], d_h, 1), "d2_b": jnp.zeros((1,)),
+    }
+
+
+def gan_generator(p: dict, z: Array, acfg: Optional[ApproxConfig] = None) -> Array:
+    h = jax.nn.relu(approx_dense(z, p["g1"], p["g1_b"], acfg))
+    return jax.nn.sigmoid(approx_dense(h, p["g2"], p["g2_b"], acfg))
+
+
+def gan_discriminator(p: dict, x: Array, acfg: Optional[ApproxConfig] = None) -> Array:
+    h = jax.nn.leaky_relu(approx_dense(x, p["d1"], p["d1_b"], acfg), 0.2)
+    return approx_dense(h, p["d2"], p["d2_b"], acfg)

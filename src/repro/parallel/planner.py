@@ -1,0 +1,243 @@
+"""Sharding planner: assigns PartitionSpecs to every param / optimizer-state /
+cache / batch leaf, by leaf name + tensor role, with divisibility fallbacks.
+
+Modes:
+* ``train``  — FSDP(data) x TP(model): TP on the semantically-shardable dim
+  (heads when H % axis == 0, d_ff, vocab, experts), FSDP on the other dim.
+* ``serve``  — TP(model) only; params replicated over data (batch shards DP).
+* ``long``   — serve + context parallelism: KV-cache/state sequence dim over
+  ``data`` (batch=1 cannot use it).
+
+Every decision that falls back (heads not divisible, experts not divisible)
+is recorded in the returned ``report`` so DESIGN.md §6 claims are auditable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class Plan:
+    mesh: Mesh
+    specs: Any                 # pytree of PartitionSpec
+    report: list[str]
+
+    def shardings(self):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), self.specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fits(dim: int, mesh: Mesh, axes: tuple[str, ...]) -> bool:
+    n = int(np.prod([_axis(mesh, a) for a in axes])) if axes else 1
+    return n > 1 and dim % n == 0
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, global_batch: int, extra_dims: int = 1) -> P:
+    ba = batch_axes(mesh)
+    if not _fits(global_batch, mesh, ba):
+        ba = ba[1:] if len(ba) > 1 and _fits(global_batch, mesh, ba[1:]) else ()
+    lead = ba if ba else None
+    return P(lead, *([None] * extra_dims))
+
+
+def param_specs(cfg: ModelConfig, params, mesh: Mesh, mode: str = "train") -> Plan:
+    """Walk the param pytree; assign (TP, FSDP) per leaf by name."""
+    report: list[str] = []
+    fsdp = ("data",) if (mode == "train" and "data" in mesh.axis_names) else ()
+    if mode == "serve" and "data" in mesh.axis_names:
+        # TP-only replicates weights across the data axis; when that exceeds
+        # the HBM budget (v5e 16 GiB minus activations), also shard weights
+        # over data — ZeRO-inference (per-layer all-gather, memory-feasible).
+        dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
+        per_dev = cfg.n_params() * dtype_bytes / _axis(mesh, "model")
+        if per_dev > 10e9:
+            fsdp = ("data",)
+            report.append(f"serve: params {per_dev/2**30:.1f} GiB/device under "
+                          f"TP-only -> weight FSDP over data (ZeRO-inference)")
+    heads_ok = _fits(cfg.n_heads, mesh, ("model",))
+    kv_ok = _fits(cfg.n_kv_heads, mesh, ("model",))
+    experts_ok = cfg.n_experts and _fits(cfg.n_experts, mesh, ("model",))
+    if not heads_ok:
+        report.append(f"heads {cfg.n_heads} %% model axis != 0 -> attention "
+                      f"projections replicated on TP (TP lives on d_ff/vocab)")
+    if cfg.n_experts and not experts_ok:
+        report.append(f"experts {cfg.n_experts} %% model axis != 0 -> "
+                      f"TP-in-expert (d_ff {cfg.d_ff})")
+
+    def fs(dim_size: int) -> Optional[tuple]:
+        return fsdp if fsdp and dim_size % _axis(mesh, "data") == 0 else None
+
+    def mdl(dim_size: int, want: bool = True) -> Optional[tuple]:
+        return ("model",) if want and _fits(dim_size, mesh, ("model",)) else None
+
+    def leaf_spec(path: str, leaf) -> P:
+        shp = leaf.shape
+        nd = len(shp)
+        name = path.split("'")[-2] if "'" in path else path  # last dict key
+
+        def grouped(*dims):  # prepend None for the group-stack axis if present
+            return P(*([None] * (nd - len(dims)) + list(dims)))
+
+        # ---- embeddings / head -------------------------------------------
+        if name == "embed":
+            return P(mdl(shp[0]), fs(shp[1]))
+        if name == "lm_head":
+            return P(fs(shp[0]), mdl(shp[1]))
+        if name == "dec_pos":
+            return P(None, None)
+        # ---- attention ----------------------------------------------------
+        if name in ("wq", "wk", "wv"):
+            n_h = cfg.n_heads if name == "wq" else cfg.n_kv_heads
+            ok = heads_ok if name == "wq" else kv_ok
+            return grouped(fs(shp[-2]), mdl(shp[-1], ok))
+        if name == "wo":
+            return grouped(mdl(shp[-2], heads_ok), fs(shp[-1]))
+        if name in ("bq", "bk", "bv"):
+            ok = heads_ok if name == "bq" else kv_ok
+            return grouped(mdl(shp[-1], ok))
+        if name == "bo":
+            return grouped(None)
+        # ---- dense MLP ------------------------------------------------------
+        if name in ("w_gate", "w_up") and nd <= 3:
+            return grouped(fs(shp[-2]), mdl(shp[-1]))
+        if name == "w_down" and nd <= 3:
+            return grouped(mdl(shp[-2]), fs(shp[-1]))
+        if name in ("b_up",):
+            return grouped(mdl(shp[-1]))
+        # ---- MoE ------------------------------------------------------------
+        if name in ("w_gate", "w_up") and nd == 4:   # (g, E, D, F)
+            if experts_ok:
+                return P(None, ("model",), fs(shp[2]), None)
+            return P(None, None, fs(shp[2]), mdl(shp[3]))
+        if name == "w_down" and nd == 4:             # (g, E, F, D)
+            if experts_ok:
+                return P(None, ("model",), None, fs(shp[3]))
+            return P(None, None, mdl(shp[2]), fs(shp[3]))
+        if name == "router":
+            return grouped(None, None)
+        # ---- mamba ----------------------------------------------------------
+        if name == "in_proj":
+            return grouped(fs(shp[-2]), mdl(shp[-1]))
+        if name == "x_proj":
+            return grouped(mdl(shp[-2]), None)
+        if name == "dt_proj":
+            return grouped(None, mdl(shp[-1]))
+        if name in ("conv_w",):
+            return grouped(None, mdl(shp[-1]))
+        if name in ("conv_b", "dt_bias", "Dskip"):
+            return grouped(mdl(shp[-1]))
+        if name == "A_log":
+            return grouped(mdl(shp[-2]), None)
+        if name == "out_proj":
+            return grouped(mdl(shp[-2]), fs(shp[-1]))
+        # ---- rwkv -----------------------------------------------------------
+        if name in ("Wr", "Wk", "Wv", "Wg", "Wo", "Wr_cm"):
+            # wkv heads (40) don't divide the axis; keep head locality by
+            # replicating time-mix projections, TP on channel-mix below
+            return grouped(fs(shp[-2]), mdl(shp[-1], heads_ok))
+        if name == "Wk_cm":
+            return grouped(fs(shp[-2]), mdl(shp[-1]))
+        if name == "Wv_cm":
+            return grouped(mdl(shp[-2]), fs(shp[-1]))
+        if name in ("Wdecay_A", "Wdecay_B", "lora_A") or name.startswith("lora_B"):
+            return grouped(None, None)
+        # ---- everything else (norms, scalars, mus) ------------------------
+        return P(*([None] * nd))
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [leaf_spec(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return Plan(mesh=mesh, specs=tdef.unflatten(specs), report=report)
+
+
+def cache_specs(cfg: ModelConfig, cache, mesh: Mesh, *, global_batch: int,
+                long_context: bool = False) -> Plan:
+    """KV/SSM cache sharding for serving.
+
+    Default: batch -> (pod, data), kv-heads -> model (when divisible, else
+    head_dim -> model, else seq -> model). long_context (batch=1): sequence
+    dim -> data (context parallelism), heads/head_dim -> model.
+    """
+    report: list[str] = []
+    ba = batch_axes(mesh)
+    b_ok = _fits(global_batch, mesh, ba)
+    if not b_ok and len(ba) > 1 and _fits(global_batch, mesh, ba[1:]):
+        ba = ba[1:]
+        b_ok = True
+    if not b_ok:
+        ba = ()
+        report.append(f"batch {global_batch} not divisible -> replicated batch")
+
+    def leaf_spec(path: str, leaf) -> P:
+        shp = leaf.shape
+        nd = len(shp)
+        bspec = ba if ba else None
+        if nd == 5 and "attn" in path:            # (g, B, S, Hkv, hd)
+            seq = ("data",) if (long_context and "data" in mesh.axis_names
+                                and shp[2] % _axis(mesh, "data") == 0) else None
+            if _fits(shp[3], mesh, ("model",)):
+                return P(None, bspec, seq, ("model",), None)
+            # kv heads don't divide: split-KV decode — shard the sequence dim
+            # over model (softmax denominators all-reduce; avoids the
+            # involuntary-full-remat path that head_dim sharding triggers)
+            if seq is None and _fits(shp[2], mesh, ("model",)):
+                return P(None, bspec, ("model",), None, None)
+            return P(None, bspec, seq, None, None)
+        if "mamba" in path:
+            if nd == 4 and "conv" in path:        # (g, B, dc-1, di)
+                return P(None, bspec, None,
+                         ("model",) if _fits(shp[3], mesh, ("model",)) else None)
+            if nd == 4:                            # ssm (g, B, di, ds)
+                return P(None, bspec,
+                         ("model",) if _fits(shp[2], mesh, ("model",)) else None,
+                         None)
+        if "rwkv" in path:
+            if nd == 5:                            # wkv (g, B, H, hd, hd)
+                if _fits(shp[2], mesh, ("model",)):
+                    return P(None, bspec, ("model",), None, None)
+                if _fits(shp[3], mesh, ("model",)):
+                    return P(None, bspec, None, ("model",), None)
+                return P(None, bspec, None, None, None)
+            if nd == 4:                            # shift (g, B, 1, D)
+                return P(None, bspec, None,
+                         ("model",) if _fits(shp[3], mesh, ("model",)) else None)
+        # whisper self-attn cache: (L, B, S, H, hd)
+        if nd == 5:
+            return P(None, bspec, None,
+                     ("model",) if _fits(shp[3], mesh, ("model",)) else None, None)
+        return P(*([None] * nd))
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = [leaf_spec(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return Plan(mesh=mesh, specs=tdef.unflatten(specs), report=report)
+
+
+def opt_state_specs(param_plan: Plan, opt_state) -> Any:
+    """Optimizer moments shard exactly like their params; scalars replicate."""
+    pspecs = param_plan.specs
+
+    def match(leaf_spec):
+        return leaf_spec
+
+    # AdamWState(step, mu, nu) — mu/nu mirror params
+    import repro.optim.adamw as O
+    if isinstance(opt_state, O.AdamWState):
+        return O.AdamWState(step=P(), mu=jax.tree.map(match, pspecs),
+                            nu=jax.tree.map(match, pspecs))
+    if isinstance(opt_state, O.SGDState):
+        return O.SGDState(step=P(), momentum=jax.tree.map(match, pspecs))
+    raise TypeError(type(opt_state))

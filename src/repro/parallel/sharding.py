@@ -1,0 +1,104 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axes; an
+active :class:`MeshContext` maps them to mesh axes with divisibility checks.
+
+Model code stays mesh-agnostic: ``shard(x, "batch", None, "mlp")`` is an
+identity when no mesh is active (unit tests, single device) and a
+``with_sharding_constraint`` under a production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+# default logical-axis -> mesh-axes rules. "batch" spans pod+data so one rule
+# set covers both single-pod and multi-pod meshes (missing axes are dropped).
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),                 # replicated by default; "seq_shard" opts in
+    "seq_shard": ("data",),    # context parallelism (long-context KV/state)
+    "embed": (),
+    "embed_fsdp": ("data",),   # FSDP dim for params/optimizer state
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),     # expert parallelism
+    "expert_blocks": ("pod", "data"),  # block-local MoE dispatch (token-parallel)
+    "expert_cap": ("data",),   # MoE dispatch capacity dim (token-parallel)
+    "expert_mlp": ("model",),  # TP-in-expert when EP doesn't divide
+    "tokens": ("pod", "data"),  # flattened token rows (B*S order, batch-major)
+    "conv_dim": ("model",),
+    "state": (),
+}
+
+
+@dataclasses.dataclass
+class MeshContext:
+    mesh: Mesh
+    rules: dict[str, tuple[str, ...]]
+
+    def spec(self, *logical: Optional[str], dim_sizes: Sequence[int] | None = None) -> P:
+        """PartitionSpec for one tensor; rules that don't divide are dropped,
+        and a mesh axis is used by at most one dim (first wins)."""
+        parts = []
+        used: set[str] = set()
+        for i, name in enumerate(logical):
+            if name is None:
+                parts.append(None)
+                continue
+            axes = [a for a in self.rules.get(name, ())
+                    if a in self.mesh.axis_names and a not in used]
+            if not axes:
+                parts.append(None)
+                continue
+            if dim_sizes is not None:
+                total = int(np.prod([self.mesh.shape[a] for a in axes]))
+                if dim_sizes[i] % total != 0:
+                    # try progressively smaller prefixes before replicating
+                    while axes:
+                        axes = axes[:-1]
+                        total = int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+                        if axes and dim_sizes[i] % total == 0:
+                            break
+                    if not axes:
+                        parts.append(None)
+                        continue
+            used.update(axes)
+            parts.append(tuple(axes) if len(axes) > 1 else axes[0])
+        return P(*parts)
+
+    def sharding(self, *logical, dim_sizes=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical, dim_sizes=dim_sizes))
+
+
+def current_mesh_context() -> Optional[MeshContext]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict[str, tuple[str, ...]] | None = None):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = MeshContext(mesh=mesh, rules={**DEFAULT_RULES, **(rules or {})})
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with logical axes; no-op without an active mesh."""
+    ctx = current_mesh_context()
+    if ctx is None:
+        return x
+    spec = ctx.spec(*logical, dim_sizes=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

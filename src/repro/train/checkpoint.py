@@ -1,0 +1,112 @@
+"""Mesh-agnostic checkpointing: per-leaf ``.npy`` shards + JSON manifest.
+
+* ``save`` is atomic (write to tmp dir, rename) and optionally async (writer
+  thread) so the train loop never blocks on storage.
+* ``restore`` re-``device_put``s each leaf with whatever sharding the
+  *restarted* job provides — checkpoints carry no mesh information, which is
+  what makes elastic restart (different pod count / mesh shape) work.
+* ``latest_step`` + retention give crash recovery a monotonic restore point.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: Optional[dict] = None,
+         keep: int = 3) -> str:
+    """Synchronous atomic save; returns the final directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    names = []
+    for i, (name, leaf) in enumerate(_flatten(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+        names.append(name)
+    manifest = {"step": step, "leaves": names, "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _retain(ckpt_dir, keep)
+    return final
+
+
+class AsyncSaver:
+    """Single-slot background writer: a save in flight never blocks training;
+    a newer snapshot supersedes a queued older one."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending: Optional[tuple] = None
+        self._thread: Optional[threading.Thread] = None
+
+    def submit(self, ckpt_dir: str, step: int, tree, extra=None, keep: int = 3):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        with self._lock:
+            self._pending = (ckpt_dir, step, host_tree, extra, keep)
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(target=self._drain, daemon=True)
+                self._thread.start()
+
+    def _drain(self):
+        while True:
+            with self._lock:
+                if self._pending is None:
+                    return
+                job, self._pending = self._pending, None
+            save(job[0], job[1], job[2], extra=job[3], keep=job[4])
+
+    def wait(self):
+        t = self._thread
+        if t is not None:
+            t.join()
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, tree_like, *, shardings=None):
+    """Load leaves into the structure of ``tree_like``; ``shardings`` may be a
+    matching pytree of shardings (elastic restart) or None (host arrays)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_like, tdef = jax.tree_util.tree_flatten(tree_like)
+    n = len(leaves_like)
+    assert n == len(manifest["leaves"]), (n, len(manifest["leaves"]))
+    arrs = [np.load(os.path.join(d, f"leaf_{i:05d}.npy")) for i in range(n)]
+    if shardings is not None:
+        sh_flat = jax.tree_util.tree_flatten(shardings)[0]
+        arrs = [jax.device_put(a, s) for a, s in zip(arrs, sh_flat)]
+    else:
+        arrs = [jax.numpy.asarray(a) for a in arrs]
+    return tdef.unflatten(arrs), manifest
+
+
+def _retain(ckpt_dir: str, keep: int):
+    steps = sorted([d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                    and not d.endswith(".tmp")])
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

@@ -1,0 +1,90 @@
+"""ACU GEMM modes vs brute-force LUT accumulation oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_lut, factorize_error, get_multiplier
+from repro.core.acu import AcuMode, make_acu
+
+
+def brute(lut, a, w, off):
+    M, K = a.shape
+    _, N = w.shape
+    out = np.zeros((M, N), np.int64)
+    for i in range(M):
+        for j in range(N):
+            out[i, j] = lut[a[i, :] + off, w[:, j] + off].astype(np.int64).sum()
+    return out
+
+
+@pytest.fixture(scope="module")
+def operands():
+    rng = np.random.default_rng(7)
+    a = rng.integers(-128, 128, (12, 23), dtype=np.int32)
+    w = rng.integers(-128, 128, (23, 9), dtype=np.int32)
+    return a, w
+
+
+@pytest.mark.parametrize("mult", ["mul8s_1L2H", "mul8s_mitchell", "mul8s_drum6"])
+def test_lut_mode_bit_exact(operands, mult):
+    a, w = operands
+    acu = make_acu(mult, AcuMode.LUT)
+    ref = brute(build_lut(get_multiplier(mult)), a, w, 128)
+    out = np.asarray(acu.matmul(jnp.asarray(a), jnp.asarray(w)))
+    assert np.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("mult", ["mul8s_1L2H", "mul8s_trunc3"])
+def test_functional_mode_matches_lut(operands, mult):
+    a, w = operands
+    f = make_acu(mult, AcuMode.FUNCTIONAL)
+    l = make_acu(mult, AcuMode.LUT)
+    aj, wj = jnp.asarray(a), jnp.asarray(w)
+    assert np.array_equal(np.asarray(f.matmul(aj, wj)), np.asarray(l.matmul(aj, wj)))
+
+
+def test_factored_trunc_exact(operands):
+    a, w = operands
+    acu = make_acu("mul8s_trunc2", AcuMode.FACTORED)
+    ref = brute(build_lut(get_multiplier("mul8s_trunc2")), a, w, 128)
+    out = np.asarray(acu.matmul(jnp.asarray(a), jnp.asarray(w)))
+    assert np.array_equal(out, ref)
+
+
+def test_lowrank_fidelity_improves_with_rank(operands):
+    a, w = operands
+    ref = brute(build_lut(get_multiplier("mul8s_1L2H")), a, w, 128)
+    errs = []
+    for r in (2, 8, 32):
+        acu = make_acu("mul8s_1L2H", AcuMode.LOWRANK, rank=r)
+        out = np.asarray(acu.matmul(jnp.asarray(a), jnp.asarray(w)))
+        errs.append(np.abs(out - ref).max())
+    assert errs[0] >= errs[1] >= errs[2]
+    assert errs[2] < 1.0  # rank-32 is effectively exact for the BAM family
+
+
+def test_lowrank_factorization_metrics():
+    lr = factorize_error(get_multiplier("mul8s_1L2H"), 16)
+    assert lr.rank == 16
+    assert lr.energy > 0.99
+    assert lr.exact_frac > 0.99
+
+
+def test_large_bitwidth_lut_falls_back_to_functional():
+    acu = make_acu("mul12s_2KM", AcuMode.LUT)
+    assert acu.mode == AcuMode.FUNCTIONAL  # paper §3.4 fallback
+
+
+def test_12bit_functional_gemm():
+    rng = np.random.default_rng(3)
+    a = rng.integers(-2048, 2048, (6, 11), dtype=np.int32)
+    w = rng.integers(-2048, 2048, (11, 5), dtype=np.int32)
+    acu = make_acu("mul12s_2KM", AcuMode.FUNCTIONAL)
+    mult = get_multiplier("mul12s_2KM")
+    ref = np.zeros((6, 5), np.int64)
+    for i in range(6):
+        for j in range(5):
+            ref[i, j] = sum(int(mult(jnp.int32(a[i, k]), jnp.int32(w[k, j])))
+                            for k in range(11))
+    out = np.asarray(acu.matmul(jnp.asarray(a), jnp.asarray(w)))
+    assert np.array_equal(out, ref)

@@ -1,0 +1,102 @@
+"""approx_ops: conv-as-GEMM correctness, groups, separable, QAT gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_acu
+from repro.core.acu import AcuMode
+from repro.core.approx_ops import (ApproxConfig, approx_dense, conv2d,
+                                   separable_conv2d)
+
+EXACT8 = ApproxConfig(acu=make_acu("mul8s_exact", AcuMode.EXACT), a_bits=8, w_bits=8)
+EXACT12 = ApproxConfig(acu=make_acu("mul12s_exact", AcuMode.EXACT), a_bits=12, w_bits=12)
+APPROX = ApproxConfig(acu=make_acu("mul8s_1L2H", AcuMode.LUT))
+
+
+def lax_conv(x, w, stride=(1, 1), padding="SAME", groups=1, dilation=(1, 1)):
+    return jax.lax.conv_general_dilated(
+        x, w, stride, padding, rhs_dilation=dilation, feature_group_count=groups,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+@pytest.mark.parametrize("stride,padding,dilation", [
+    ((1, 1), "SAME", (1, 1)), ((2, 2), "SAME", (1, 1)),
+    ((1, 1), "VALID", (1, 1)), ((1, 1), "SAME", (2, 2)), ((2, 1), "VALID", (1, 1))])
+def test_conv2d_im2col_matches_lax(rng, stride, padding, dilation):
+    x = jnp.asarray(rng.normal(size=(2, 3, 12, 12)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(5, 3, 3, 3)), jnp.float32)
+    # exact fp path (cfg=None) vs im2col path through an exact 8-bit-free GEMM:
+    # run the im2col branch by passing a cfg with the exact ACU and wide bits
+    cfg = ApproxConfig(acu=make_acu("mul12s_exact", AcuMode.EXACT),
+                       a_bits=12, w_bits=12)
+    ours = conv2d(x, w, stride=stride, padding=padding, dilation=dilation, cfg=cfg)
+    ref = lax_conv(x, w, stride, padding, dilation=dilation)
+    # quantized to 12 bits -> small relative error only
+    rel = float(jnp.abs(ours - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 5e-3, rel
+
+
+def test_conv2d_exact_path_matches_lax(rng):
+    x = jnp.asarray(rng.normal(size=(2, 4, 9, 9)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(6, 4, 3, 3)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(conv2d(x, w)),
+                               np.asarray(lax_conv(x, w)), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("groups", [2, 4])
+def test_grouped_conv(rng, groups):
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(8, 8 // groups, 3, 3)), jnp.float32)
+    cfg = ApproxConfig(acu=make_acu("mul12s_exact", AcuMode.EXACT),
+                       a_bits=12, w_bits=12)
+    ours = conv2d(x, w, groups=groups, cfg=cfg)
+    ref = lax_conv(x, w, groups=groups)
+    rel = float(jnp.abs(ours - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 5e-3
+
+
+def test_depthwise_blockdiag(rng):
+    x = jnp.asarray(rng.normal(size=(2, 6, 8, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(6, 1, 3, 3)), jnp.float32)
+    cfg = ApproxConfig(acu=make_acu("mul12s_exact", AcuMode.EXACT),
+                       a_bits=12, w_bits=12)
+    ours = conv2d(x, w, groups=6, cfg=cfg)
+    ref = lax_conv(x, w, groups=6)
+    rel = float(jnp.abs(ours - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 5e-3
+
+
+def test_separable_conv(rng):
+    x = jnp.asarray(rng.normal(size=(1, 4, 8, 8)), jnp.float32)
+    wdw = jnp.asarray(rng.normal(size=(4, 1, 3, 3)), jnp.float32)
+    wpw = jnp.asarray(rng.normal(size=(6, 4, 1, 1)), jnp.float32)
+    out = separable_conv2d(x, wdw, wpw)
+    ref = lax_conv(lax_conv(x, wdw, groups=4), wpw, padding="VALID")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qat_gradients_flow(rng):
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+
+    def loss(w):
+        return (approx_dense(x, w, None, APPROX) ** 2).sum()
+
+    g = jax.grad(loss)(w)
+    assert bool(jnp.isfinite(g).all())
+    assert float(jnp.abs(g).max()) > 0
+    # STE gradient approximates the exact-matmul gradient
+    g_exact = jax.grad(lambda w: ((x @ w) ** 2).sum())(w)
+    cos = jnp.sum(g * g_exact) / (jnp.linalg.norm(g) * jnp.linalg.norm(g_exact))
+    assert float(cos) > 0.95
+
+
+def test_approx_forward_deviates_backward_clean(rng):
+    """Forward uses the ACU (output differs from exact); backward is STE."""
+    x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 4)), jnp.float32)
+    y_approx = approx_dense(x, w, None, APPROX)
+    y_exact = x @ w
+    assert float(jnp.abs(y_approx - y_exact).max()) > 1e-4  # ACU visible

@@ -1,0 +1,61 @@
+"""Calibration: percentile/MSE/entropy calibrators + histogram rebinning."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import (HistogramObserver, calibrate_activation,
+                                    calibrate_weight)
+from repro.core.quantization import dequantize, quantize
+
+
+def test_percentile_excludes_outliers(rng):
+    obs = HistogramObserver()
+    x = rng.normal(size=20000).astype(np.float32)
+    x[:5] = 1000.0  # outliers
+    obs.update(x)
+    cmax = obs.percentile_max(99.9)
+    assert cmax < 10.0          # clip bound ignores the 1000s
+    assert cmax > 2.5           # but covers the bulk
+
+
+def test_rebinning_consistency(rng):
+    """Feeding data in growing-range chunks ~= feeding it at once."""
+    a = rng.normal(size=5000).astype(np.float32)
+    b = (rng.normal(size=5000) * 8).astype(np.float32)
+    one = HistogramObserver()
+    one.update(np.concatenate([a, b]))
+    two = HistogramObserver()
+    two.update(a)   # small range first -> forces rebinning on b
+    two.update(b)
+    p1 = one.percentile_max(99.0)
+    p2 = two.percentile_max(99.0)
+    assert abs(p1 - p2) / p1 < 0.15
+
+
+def test_mse_and_entropy_return_sane_bounds(rng):
+    obs = HistogramObserver()
+    obs.update(rng.normal(size=8000).astype(np.float32))
+    for m in (obs.mse_max(8), obs.entropy_max(8)):
+        assert 0 < m <= obs.range * 1.001
+
+
+def test_calibrated_quantization_low_error(rng):
+    x = rng.normal(size=8000).astype(np.float32)
+    obs = HistogramObserver()
+    obs.update(x)
+    qp = calibrate_activation(obs, 8, method="percentile")
+    back = dequantize(quantize(jnp.asarray(x), qp), qp)
+    rel = float(jnp.abs(back - x).mean() / jnp.abs(jnp.asarray(x)).mean())
+    assert rel < 0.02  # paper: < 0.1% top-1 loss for 8-bit CNNs
+
+
+def test_calibrate_weight_per_channel(rng):
+    w = rng.normal(size=(32, 6)).astype(np.float32)
+    qp = calibrate_weight(jnp.asarray(w), 8, axis=1)
+    assert qp.scale.shape == (6,)
+    assert qp.axis == 1
+
+
+def test_observer_min_max_tracking(rng):
+    obs = HistogramObserver()
+    obs.update(np.asarray([-3.0, 7.0], np.float32))
+    assert obs.xmin == -3.0 and obs.xmax == 7.0

@@ -1,0 +1,77 @@
+"""MoE dispatch correctness: capacity scatter == dense masked computation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import moe_block, router_aux_loss
+from repro.models.transformer import _init_moe
+
+CFG = ModelConfig(name="t", family="moe", n_layers=1, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=16, vocab_size=64, pattern=("attn_moe",),
+                  n_experts=4, moe_top_k=2, moe_capacity=8.0,  # ample capacity
+                  dtype="float32")
+KEY = jax.random.PRNGKey(0)
+
+
+def dense_reference(x, p, cfg):
+    """Compute every expert for every token, combine with top-k weights."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.moe_top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    outs = []
+    for e in range(cfg.n_experts):
+        h = jax.nn.silu(xf @ p["w_gate"][e]) * (xf @ p["w_up"][e])
+        outs.append(h @ p["w_down"][e])
+    ye = jnp.stack(outs, 1)            # (T, E, D)
+    w = jnp.zeros((t, cfg.n_experts)).at[
+        jnp.arange(t)[:, None], top_e].set(top_p)
+    return (w[..., None] * ye).sum(1).reshape(b, s, d)
+
+
+def test_moe_matches_dense_reference():
+    p = jax.tree.map(lambda a: a[0], _init_moe(KEY, CFG, 1))
+    x = jax.random.normal(KEY, (2, 8, 32))
+    out = moe_block(x, p, CFG, None)
+    ref = dense_reference(x, p, CFG)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity < perfect balance, output differs but stays finite."""
+    cfg = dataclasses.replace(CFG, moe_capacity=0.25)
+    p = jax.tree.map(lambda a: a[0], _init_moe(KEY, cfg, 1))
+    x = jax.random.normal(KEY, (2, 8, 32))
+    out = moe_block(x, p, cfg, None)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_router_aux_loss_balanced_lower():
+    """A balanced random router scores lower aux loss than a skewed one."""
+    t = 512
+    # positive-mean features so a constant-column router reliably skews
+    x = jnp.abs(jax.random.normal(KEY, (1, t, 32))) + 0.5
+    balanced = jax.random.normal(jax.random.PRNGKey(1), (32, 4)) * 0.1
+    skewed = jnp.zeros((32, 4)).at[:, 0].set(1.0).at[:, 1].set(0.5)
+    l_b = router_aux_loss(x, balanced, 4, 2)
+    l_s = router_aux_loss(x, skewed, 4, 2)
+    assert float(l_b) < float(l_s)
+
+
+def test_moe_grads():
+    p = jax.tree.map(lambda a: a[0], _init_moe(KEY, CFG, 1))
+    x = jax.random.normal(KEY, (2, 8, 32))
+
+    def loss(p):
+        return (moe_block(x, p, CFG, None) ** 2).sum()
+
+    g = jax.grad(loss)(p)
+    assert all(bool(jnp.isfinite(v).all()) for v in jax.tree.leaves(g))
+    assert float(jnp.abs(g["w_gate"]).max()) > 0

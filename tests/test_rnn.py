@@ -1,0 +1,62 @@
+"""RNN/LSTM/GRU cells (paper §3.3.4) — exactness and approx compatibility."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_acu
+from repro.core.acu import AcuMode
+from repro.core.approx_ops import ApproxConfig
+from repro.models.rnn import (gru_cell, init_gru, init_lstm, init_rnn, lstm,
+                              lstm_cell, rnn_cell)
+
+KEY = jax.random.PRNGKey(0)
+APPROX = ApproxConfig(acu=make_acu("mul8s_1L2H", AcuMode.LUT))
+
+
+def test_lstm_cell_manual():
+    p = init_lstm(KEY, 4, 3)
+    x = jax.random.normal(KEY, (2, 4))
+    h = jnp.zeros((2, 3))
+    c = jnp.zeros((2, 3))
+    h1, c1 = lstm_cell(x, h, c, p, None)
+    gates = x @ p["wx"] + h @ p["wh"] + p["b"]
+    i, f, g, o = jnp.split(gates, 4, -1)
+    c_ref = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_ref = jax.nn.sigmoid(o) * jnp.tanh(c_ref)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h_ref), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c_ref), rtol=1e-5)
+
+
+def test_lstm_scan_vs_loop():
+    p = init_lstm(KEY, 4, 3)
+    xs = jax.random.normal(KEY, (2, 5, 4))
+    out = lstm(xs, p)
+    h = jnp.zeros((2, 3))
+    c = jnp.zeros((2, 3))
+    for t in range(5):
+        h, c = lstm_cell(xs[:, t], h, c, p, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(h), rtol=1e-5)
+
+
+def test_lstm_approx_runs_and_grads():
+    p = init_lstm(KEY, 8, 16)
+    xs = jax.random.normal(KEY, (4, 6, 8))
+
+    def loss(p):
+        return (lstm(xs, p, APPROX) ** 2).sum()
+
+    g = jax.grad(loss)(p)
+    assert all(bool(jnp.isfinite(v).all()) for v in jax.tree.leaves(g))
+
+
+def test_gru_and_rnn_cells():
+    pg = init_gru(KEY, 4, 3)
+    pr = init_rnn(KEY, 4, 3)
+    x = jax.random.normal(KEY, (2, 4))
+    h = jnp.zeros((2, 3))
+    hg = gru_cell(x, h, pg, None)
+    hr = rnn_cell(x, h, pr, None)
+    assert hg.shape == (2, 3) and bool(jnp.isfinite(hg).all())
+    np.testing.assert_allclose(
+        np.asarray(hr), np.asarray(jnp.tanh(x @ pr["wx"] + pr["b"] + h @ pr["wh"])),
+        rtol=1e-5)

@@ -1,0 +1,69 @@
+"""Roofline extractor: HLO collective parsing + two-point combination."""
+from repro.launch.roofline import (CellCost, collective_bytes, model_flops,
+                                   two_point)
+
+FAKE_HLO = """
+  %ar = f32[256,1024]{1,0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  %ag = bf16[512,2048]{1,0} all-gather(%y), dimensions={0}
+  %rs.1 = f32[64]{0} reduce-scatter(%z), dimensions={0}
+  %nota = f32[8]{0} add(%a, %b)
+  %cp = u8[128]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %a2a = (f32[16,16]{1,0}) all-to-all(%q), dimensions={1}
+"""
+
+
+def test_collective_parsing():
+    out = collective_bytes(FAKE_HLO)
+    assert out["all-reduce"] == 256 * 1024 * 4
+    assert out["all-gather"] == 512 * 2048 * 2
+    assert out["reduce-scatter"] == 64 * 4
+    assert out["collective-permute"] == 128
+    assert out["all-to-all"] == 16 * 16 * 4
+    assert "add" not in out
+
+
+def test_async_start_not_double_counted():
+    text = """
+  %s = f32[100]{0} all-reduce-start(%x), to_apply=%sum
+  %d = f32[100]{0} all-reduce-done(%s)
+"""
+    out = collective_bytes(text)
+    assert out.get("all-reduce", 0) == 400  # start counted, done skipped
+
+
+def make_cost(flops, by, coll):
+    return CellCost(flops=flops, bytes_accessed=by, coll_bytes=coll,
+                    coll_breakdown={"all-reduce": coll}, peak_memory=1e9,
+                    arg_bytes=5e8)
+
+
+def test_two_point_scaling():
+    u1 = make_cost(100.0, 1000.0, 10.0)   # outside + 1 group
+    u2 = make_cost(160.0, 1500.0, 14.0)   # outside + 2 groups
+    total = two_point(u1, u2, n_groups=10)
+    assert total.flops == 100 + 9 * 60
+    assert total.bytes_accessed == 1000 + 9 * 500
+    assert total.coll_bytes == 10 + 9 * 4
+    assert total.peak_memory == u1.peak_memory
+
+
+def test_bottleneck_and_terms():
+    c = make_cost(197e12 * 0.5, 819e9 * 0.1, 50e9 * 0.2)
+    assert abs(c.t_compute - 0.5) < 1e-9
+    assert abs(c.t_memory - 0.1) < 1e-9
+    assert abs(c.t_collective - 0.2) < 1e-9
+    assert c.bottleneck == "compute"
+    assert c.step_time == c.t_compute
+
+
+def test_model_flops_dense_vs_moe():
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+    dense = get_config("qwen2.5-14b")
+    moe = get_config("olmoe-1b-7b")
+    sh = SHAPES["train_4k"]
+    f_dense = model_flops(dense, sh, 256)
+    assert abs(f_dense - 6 * dense.n_params() * sh.global_batch * sh.seq_len / 256) < 1e6
+    # MoE: active params only
+    f_moe = model_flops(moe, sh, 256)
+    assert f_moe < 6 * moe.n_params() * sh.global_batch * sh.seq_len / 256 * 0.5

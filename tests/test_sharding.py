@@ -1,0 +1,102 @@
+"""Sharding planner invariants (no real mesh needed — specs only)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.specs import abstract_params, pick_microbatches
+from repro.parallel import planner
+from repro.parallel.sharding import MeshContext, DEFAULT_RULES
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) not in (1,), reason="host test")
+
+
+class FakeMesh:
+    """Duck-typed mesh for planner unit tests (shape/axis_names only)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        return int(np.prod(list(self.shape.values())))
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _check_divisibility(specs, params):
+    flat_s = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, P))[0]
+    flat_p = jax.tree.leaves(params)
+    for sp, leaf in zip(flat_s, flat_p):
+        for i, part in enumerate(sp):
+            if part is None:
+                continue
+            axes = (part,) if isinstance(part, str) else part
+            n = int(np.prod([MESH.shape.get(a, MESH_MP.shape.get(a, 1))
+                             for a in axes]))
+            assert leaf.shape[i] % n == 0, (sp, leaf.shape, i)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("mode", ["train", "serve"])
+def test_param_specs_divisible(arch, mode):
+    """Every sharded dim divides the axis product — for all 10 archs."""
+    cfg = get_config(arch)
+    params = abstract_params(cfg)
+    plan = planner.param_specs(cfg, params, MESH, mode=mode)
+    _check_divisibility(plan.specs, params)
+
+
+@pytest.mark.parametrize("arch", ["granite-moe-3b-a800m", "qwen2.5-14b",
+                                  "smollm-135m", "whisper-small"])
+def test_nondivisible_heads_reported(arch):
+    cfg = get_config(arch)
+    plan = planner.param_specs(cfg, abstract_params(cfg), MESH, mode="train")
+    assert any("heads" in r for r in plan.report)
+
+
+def test_batch_spec_fallbacks():
+    assert planner.batch_spec(MESH, 256) == P(("data",), None)
+    assert planner.batch_spec(MESH_MP, 256) == P(("pod", "data"), None)
+    assert planner.batch_spec(MESH, 1) == P(None, None)       # long_500k
+    assert planner.batch_spec(MESH_MP, 32) == P(("pod", "data"), None)
+
+
+def test_mesh_context_dedupes_axes():
+    """One mesh axis may appear at most once per spec (MoE regression)."""
+    mesh = FakeMesh({"data": 4, "model": 4})
+    ctx = MeshContext(mesh=mesh, rules=dict(DEFAULT_RULES))
+    sp = ctx.spec("experts", None, "expert_mlp", dim_sizes=(8, 3, 8))
+    flat = [a for part in sp if part for a in
+            ((part,) if isinstance(part, str) else part)]
+    assert len(flat) == len(set(flat))
+
+
+def test_mesh_context_divisibility_fallback():
+    mesh = FakeMesh({"data": 4, "model": 4})
+    ctx = MeshContext(mesh=mesh, rules=dict(DEFAULT_RULES))
+    assert ctx.spec("heads", dim_sizes=(9,)) == P(None)   # 9 % 4 != 0
+    assert ctx.spec("heads", dim_sizes=(8,)) == P("model")
+
+
+def test_microbatch_policy():
+    cfg = get_config("qwen2-vl-72b")
+    n = pick_microbatches(cfg, 256, 4096, MESH)
+    assert n >= 8                       # 80L x 8192d needs accumulation
+    assert 256 % n == 0
+    small = pick_microbatches(get_config("smollm-135m"), 256, 4096, MESH)
+    assert small == 1                   # tiny model: no accumulation
+
+
+def test_serve_fsdp_threshold():
+    big = get_config("command-r-plus-104b")
+    plan = planner.param_specs(big, abstract_params(big), MESH, mode="serve")
+    assert any("ZeRO-inference" in r for r in plan.report)
+    small = get_config("gemma2-27b")
+    plan2 = planner.param_specs(small, abstract_params(small), MESH, mode="serve")
+    assert not any("ZeRO-inference" in r for r in plan2.report)

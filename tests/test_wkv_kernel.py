@@ -1,0 +1,44 @@
+"""WKV-6 Pallas kernel vs lax.scan oracle (+ consistency with the model)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.wkv.ops import wkv
+from repro.kernels.wkv.ref import wkv_ref
+
+
+@pytest.mark.parametrize("shape", [(1, 8, 1, 4), (2, 16, 3, 8), (2, 33, 2, 16)])
+def test_wkv_matches_ref(shape):
+    B, T, H, hd = shape
+    rng = np.random.default_rng(T)
+    r, k, v = (jnp.asarray(rng.normal(size=shape), jnp.float32) for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.4, 0.999, shape), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, hd)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(B, H, hd, hd)), jnp.float32)
+    out, sT = wkv(r, k, v, w, u, s0, interpret=True)
+    for h in range(H):
+        o_ref, s_ref = wkv_ref(r[:, :, h], k[:, :, h], v[:, :, h], w[:, :, h],
+                               u[h], s0[:, h])
+        np.testing.assert_allclose(np.asarray(out[:, :, h]), np.asarray(o_ref),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sT[:, h]), np.asarray(s_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_wkv_zero_state_decay_one():
+    """w == 1 (no decay), u == 0: out_t = r_t . (sum_{s<t} k_s^T v_s)."""
+    B, T, H, hd = 1, 5, 1, 4
+    rng = np.random.default_rng(0)
+    r, k, v = (jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+               for _ in range(3))
+    w = jnp.ones((B, T, H, hd), jnp.float32)
+    u = jnp.zeros((H, hd), jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    out, _ = wkv(r, k, v, w, u, s0, interpret=True)
+    s = np.zeros((hd, hd), np.float32)
+    for t in range(T):
+        expect = np.asarray(r[0, t, 0]) @ s
+        np.testing.assert_allclose(np.asarray(out[0, t, 0]), expect,
+                                   rtol=1e-4, atol=1e-5)
+        s = s + np.outer(np.asarray(k[0, t, 0]), np.asarray(v[0, t, 0]))
