@@ -1,14 +1,24 @@
-"""Benchmark driver: one function per paper table (+ kernel microbench).
+"""Benchmark driver: one function per paper table (+ kernel microbench) and a
+machine-readable regression record.
 
-``python -m benchmarks.run [--fast]`` prints CSV sections:
+``python -m benchmarks.run [--fast] [--json BENCH_PR1.json]`` prints CSV
+sections:
   [table2]  accuracy: fp32/quant/approx/retrained per DNN x ACU   (paper Tab.2)
   [table4]  emulation wall-clock speedups per mode                (paper Tab.4)
   [fidelity] multiplier MAE/MRE + low-rank factorization fidelity (paper Tab.2 header)
   [kernels] Pallas kernel micro-shape timings (interpret mode, CPU)
+  [layers]  approx_dense wall-clock per dispatch route: fused single-kernel
+            vs unfused quantize->LUT-GEMM->dequant vs functional baseline
+
+``--json`` additionally writes the kernel and layer sections (plus host
+metadata) as a BENCH_*.json record — the perf trajectory future PRs append
+to. Schema documented in docs/benchmarks.md.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -17,12 +27,26 @@ def section(name):
     print(f"\n[{name}]", flush=True)
 
 
-def kernel_micro():
+def _time_call(fn, reps: int = 5) -> float:
+    """µs/call: warmup (compile) + min of ``reps`` timed calls (min, not
+    mean — interpret-mode timings on a shared CPU are noisy upward only)."""
     import jax
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.monotonic()
+        jax.block_until_ready(fn())
+        best = min(best, time.monotonic() - t0)
+    return best * 1e6
+
+
+def kernel_micro(records: list | None = None):
     import jax.numpy as jnp
     import numpy as np
     from repro.core import build_lut, factorize_error, get_multiplier
+    from repro.core.quantization import symmetric_qparams
     from repro.kernels.err_matmul.ops import err_matmul
+    from repro.kernels.fused_lut_dense.ops import fused_lut_dense
     from repro.kernels.lut_matmul.ops import lut_matmul
 
     mult = get_multiplier("mul8s_1L2H")
@@ -34,23 +58,79 @@ def kernel_micro():
     for (M, K, N) in [(128, 128, 128), (256, 256, 256)]:
         a = jnp.asarray(rng.integers(-128, 128, (M, K)), jnp.int32)
         w = jnp.asarray(rng.integers(-128, 128, (K, N)), jnp.int32)
+        x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+        xqp = symmetric_qparams(jnp.max(jnp.abs(x)), 8)
+        ws = jnp.full((N,), 0.01, jnp.float32)
         for name, fn in [
             ("lut_matmul", lambda: lut_matmul(a, w, lut, 128, interpret=True)),
             ("err_matmul", lambda: err_matmul(a, w, f, g, 128, interpret=True)),
+            ("fused_lut_dense", lambda: fused_lut_dense(
+                x, w, lut, 128, xqp.scale, xqp.zero_point, ws, bits=8,
+                interpret=True)),
         ]:
-            jax.block_until_ready(fn())
-            t0 = time.monotonic()
-            jax.block_until_ready(fn())
-            us = (time.monotonic() - t0) * 1e6
+            us = _time_call(fn)
             flops = 2 * M * K * N
             print(f"{name},{M},{K},{N},{us:.0f},{flops/1e6:.1f}MFLOP-equiv")
+            if records is not None:
+                records.append({"kernel": name, "M": M, "K": K, "N": N,
+                                "us_per_call": round(us, 1)})
+
+
+def layer_modes(records: list | None = None):
+    """approx_dense wall-clock per dispatch route (the fusion headline).
+
+    ``fused`` runs quantize -> LUT GEMM -> dequant as ONE Pallas kernel;
+    ``unfused_pallas`` is the three-stage pipeline with the Pallas LUT GEMM;
+    ``unfused_jnp`` the same pipeline with the chunked-gather jnp GEMM;
+    ``functional`` the paper's unoptimized closed-form baseline.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import make_acu
+    from repro.core.acu import AcuMode
+    from repro.core.approx_ops import ApproxConfig, approx_dense
+
+    pallas_acu = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True)
+    modes = {
+        "fused": ApproxConfig(acu=pallas_acu, fused=True),
+        "unfused_pallas": ApproxConfig(acu=pallas_acu),
+        "unfused_jnp": ApproxConfig(acu=make_acu("mul8s_1L2H", AcuMode.LUT)),
+        "functional": ApproxConfig(
+            acu=make_acu("mul8s_1L2H", AcuMode.FUNCTIONAL)),
+    }
+    rng = np.random.default_rng(1)
+    print("mode,M,K,N,us_per_call,vs_unfused_pallas")
+    for (M, K, N) in [(128, 128, 128), (256, 256, 256), (512, 256, 256),
+                      (256, 512, 512)]:
+        x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+        times = {}
+        for mode, cfg in modes.items():
+            fn = jax.jit(lambda x, w, cfg=cfg: approx_dense(x, w, None, cfg))
+            times[mode] = _time_call(lambda: fn(x, w), reps=8)
+        base = times["unfused_pallas"]
+        for mode, us in times.items():
+            print(f"{mode},{M},{K},{N},{us:.0f},{base/us:.2f}x")
+            if records is not None:
+                records.append({"mode": mode, "M": M, "K": K, "N": N,
+                                "us_per_call": round(us, 1),
+                                "speedup_vs_unfused_pallas":
+                                    round(base / us, 3)})
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip the accuracy table (slowest section)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write kernel/layer timings as a BENCH_*.json "
+                         "regression record (schema: docs/benchmarks.md)")
     args = ap.parse_args(argv)
+
+    if args.json:  # fail fast: don't discover an unwritable path after
+        with open(args.json, "a"):  # minutes of benchmarking
+            pass
 
     section("fidelity")
     from benchmarks import multiplier_fidelity
@@ -65,8 +145,30 @@ def main(argv=None):
         from benchmarks import table2_accuracy
         table2_accuracy.main()
 
+    kernel_records: list = []
+    layer_records: list = []
     section("kernels")
-    kernel_micro()
+    kernel_micro(kernel_records)
+    section("layers")
+    layer_modes(layer_records)
+
+    if args.json:
+        import jax
+        record = {
+            "schema": "adapt-bench-v1",
+            "unix_time": int(time.time()),
+            "host": {"platform": platform.platform(),
+                     "python": platform.python_version(),
+                     "jax": jax.__version__,
+                     "backend": jax.default_backend(),
+                     "interpret_mode": True},
+            "kernels": kernel_records,
+            "layers": layer_records,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(record, fh, indent=1)
+            fh.write("\n")
+        print(f"\n[json] wrote {args.json}", flush=True)
     return 0
 
 

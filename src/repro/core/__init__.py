@@ -1,5 +1,5 @@
 """AdaPT-JAX core: the paper's contribution as composable JAX modules."""
-from .acu import Acu, AcuMode, make_acu
+from .acu import Acu, AcuMode, MatmulPlan, make_acu, matmul_plan
 from .approx_ops import ApproxConfig, approx_dense, approx_matmul, conv2d, separable_conv2d
 from .calibration import HistogramObserver, calibrate_activation, calibrate_weight
 from .lut import build_error_table, build_lut, factorize_error, rank_for_fidelity
@@ -8,7 +8,8 @@ from .quantization import (QParams, acu_operand, affine_qparams, dequantize,
                            fake_quantize, quantize, symmetric_qparams)
 
 __all__ = [
-    "Acu", "AcuMode", "make_acu", "ApproxConfig", "approx_dense", "approx_matmul",
+    "Acu", "AcuMode", "MatmulPlan", "make_acu", "matmul_plan",
+    "ApproxConfig", "approx_dense", "approx_matmul",
     "conv2d", "separable_conv2d", "HistogramObserver", "calibrate_activation",
     "calibrate_weight", "build_error_table", "build_lut", "factorize_error",
     "rank_for_fidelity", "REGISTRY", "Multiplier", "error_stats", "get_multiplier",

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +53,9 @@ class Acu:
     lut_chunk: int = 256                      # K-chunk for LUT gathers; 0 = the
                                               # paper's unoptimized baseline
                                               # (full (M,K,N) materialization)
+    fused: bool = False                       # default routing for approx_ops:
+                                              # single-kernel quantize->LUT
+                                              # GEMM->dequant (LUT+Pallas only)
 
     @property
     def bits(self) -> int:
@@ -85,37 +88,12 @@ class Acu:
     # ------------------------------------------------------------------
     def matmul(self, a: Array, w: Array) -> Array:
         """Approximate GEMM on integer operands. Returns int32 (exact modes)
-        or float32 (LOWRANK — the SVD correction is real-valued)."""
-        if self.mode == AcuMode.EXACT:
-            return jax.lax.dot(a.astype(jnp.int8 if self.bits <= 8 else jnp.int32),
-                               w.astype(jnp.int8 if self.bits <= 8 else jnp.int32),
-                               preferred_element_type=jnp.int32) \
-                if self.bits <= 8 else a.astype(jnp.int32) @ w.astype(jnp.int32)
-        if self.mode == AcuMode.FACTORED:
-            am = (a & self.mask).astype(jnp.int32)
-            wm = (w & self.mask).astype(jnp.int32)
-            return am @ wm
-        if self.mode == AcuMode.LUT:
-            if self.use_pallas:
-                from repro.kernels.lut_matmul import ops as lops
-                return lops.lut_matmul(a, w, jnp.asarray(self.lut),
-                                       self.offset, interpret=self.interpret)
-            if self.lut_chunk == 0:
-                # paper's "baseline approximate": LUTs without the
-                # vectorization/chunking optimizations — one (M, K, N) gather
-                from repro.kernels.lut_matmul.ref import lut_matmul_ref
-                return lut_matmul_ref(a, w, jnp.asarray(self.lut).reshape(-1),
-                                      self.offset, self.multiplier.n_codes)
-            return self._lut_matmul_jnp(a, w, k_chunk=self.lut_chunk)
-        if self.mode == AcuMode.LOWRANK:
-            if self.use_pallas:
-                from repro.kernels.err_matmul import ops as eops
-                return eops.err_matmul(a, w, jnp.asarray(self.lowrank.f),
-                                       jnp.asarray(self.lowrank.g),
-                                       self.offset, interpret=self.interpret)
-            return self._lowrank_matmul_jnp(a, w)
-        # FUNCTIONAL: stream over K chunks to bound the (M, Kc, N) intermediate
-        return self._functional_matmul_jnp(a, w)
+        or float32 (LOWRANK — the SVD correction is real-valued).
+
+        Thin wrapper over :func:`matmul_plan` (the explicit dispatch layer);
+        always the unfused integer-operand form.
+        """
+        return _resolve_unfused(self)(a, w)
 
     # -- pure-jnp implementations (portable; Pallas kernels mirror these) --
 
@@ -187,8 +165,102 @@ class Acu:
         return acc.astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# explicit dispatch layer: (mode, bits, use_pallas, fused) -> callable
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MatmulPlan:
+    """A resolved GEMM route for one ACU.
+
+    ``fused=False`` plans consume shifted integer operands and return the raw
+    accumulator: ``plan(a, w) -> int32`` (float32 for LOWRANK). ``fused=True``
+    plans run the whole quantize -> LUT GEMM -> dequant pipeline in one Pallas
+    kernel: ``plan(x, wq, x_scale, x_zp, w_scale) -> float32`` where ``x`` is
+    the float activation matrix and ``wq`` the shifted weight codes.
+    """
+
+    mode: AcuMode
+    bits: int
+    use_pallas: bool
+    fused: bool
+    fn: Callable[..., Array]
+
+    def __call__(self, *args) -> Array:
+        return self.fn(*args)
+
+
+def _resolve_unfused(acu: Acu) -> Callable[[Array, Array], Array]:
+    """The unfused integer-operand GEMM for ``acu`` (pure-jnp oracles or the
+    per-mode Pallas kernels)."""
+    if acu.mode == AcuMode.EXACT:
+        def fn(a, w):
+            if acu.bits <= 8:
+                return jax.lax.dot(a.astype(jnp.int8), w.astype(jnp.int8),
+                                   preferred_element_type=jnp.int32)
+            return a.astype(jnp.int32) @ w.astype(jnp.int32)
+        return fn
+    if acu.mode == AcuMode.FACTORED:
+        def fn(a, w):
+            return (a & acu.mask).astype(jnp.int32) @ \
+                   (w & acu.mask).astype(jnp.int32)
+        return fn
+    if acu.mode == AcuMode.LUT:
+        if acu.use_pallas:
+            from repro.kernels.lut_matmul import ops as lops
+            return lambda a, w: lops.lut_matmul(
+                a, w, jnp.asarray(acu.lut), acu.offset, interpret=acu.interpret)
+        if acu.lut_chunk == 0:
+            # paper's "baseline approximate": LUTs without the
+            # vectorization/chunking optimizations — one (M, K, N) gather
+            from repro.kernels.lut_matmul.ref import lut_matmul_ref
+            return lambda a, w: lut_matmul_ref(
+                a, w, jnp.asarray(acu.lut).reshape(-1), acu.offset,
+                acu.multiplier.n_codes)
+        return lambda a, w: acu._lut_matmul_jnp(a, w, k_chunk=acu.lut_chunk)
+    if acu.mode == AcuMode.LOWRANK:
+        if acu.use_pallas:
+            from repro.kernels.err_matmul import ops as eops
+            return lambda a, w: eops.err_matmul(
+                a, w, jnp.asarray(acu.lowrank.f), jnp.asarray(acu.lowrank.g),
+                acu.offset, interpret=acu.interpret)
+        return acu._lowrank_matmul_jnp
+    # FUNCTIONAL: stream over K chunks to bound the (M, Kc, N) intermediate
+    return acu._functional_matmul_jnp
+
+
+def matmul_plan(acu: Acu, *, a_bits: Optional[int] = None,
+                fused: Optional[bool] = None) -> MatmulPlan:
+    """Resolve (mode, bits, use_pallas, fused) into a concrete GEMM callable.
+
+    ``a_bits`` is the activation code width a fused plan quantizes/clips to
+    (defaults to the ACU operand width). A fused request that cannot be
+    served — non-LUT mode, no Pallas routing, or no table — silently falls
+    back to the unfused plan, so callers can request fusion unconditionally
+    and keep the pure-jnp implementations as bit-exact oracles.
+    """
+    fused = acu.fused if fused is None else fused
+    a_bits = acu.bits if a_bits is None else a_bits
+    if fused and acu.mode == AcuMode.LUT and acu.use_pallas \
+            and acu.lut is not None:
+        from repro.kernels.fused_lut_dense import ops as fops
+
+        def fn(x, wq, x_scale, x_zp, w_scale):
+            # jnp.asarray stays inside fn: plans are cached across jit traces
+            # and a device constant created during one trace must not leak
+            # into another
+            return fops.fused_lut_dense(x, wq, jnp.asarray(acu.lut),
+                                        acu.offset, x_scale, x_zp, w_scale,
+                                        bits=a_bits, interpret=acu.interpret)
+        return MatmulPlan(mode=acu.mode, bits=acu.bits, use_pallas=True,
+                          fused=True, fn=fn)
+    return MatmulPlan(mode=acu.mode, bits=acu.bits, use_pallas=acu.use_pallas,
+                      fused=False, fn=_resolve_unfused(acu))
+
+
 def make_acu(name: str, mode: AcuMode | str = AcuMode.LUT, rank: int = 8,
-             use_pallas: bool = False, interpret: bool = True) -> Acu:
+             use_pallas: bool = False, interpret: bool = True,
+             fused: bool = False) -> Acu:
     """Build an ACU from a registered multiplier name.
 
     Large-bitwidth LUT requests fall back to FUNCTIONAL per the paper §3.4
@@ -212,4 +284,5 @@ def make_acu(name: str, mode: AcuMode | str = AcuMode.LUT, rank: int = 8,
             raise ValueError(f"{name} has no algebraic factorization; "
                              f"use LUT or LOWRANK")
     return Acu(multiplier=mult, mode=mode, lut=lut, lowrank=lowrank,
-               mask=mask, use_pallas=use_pallas, interpret=interpret)
+               mask=mask, use_pallas=use_pallas, interpret=interpret,
+               fused=fused)

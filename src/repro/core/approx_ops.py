@@ -15,7 +15,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .acu import Acu, AcuMode
+from .acu import Acu, AcuMode, matmul_plan
 from .quantization import QParams, acu_operand, dequantize, fake_quantize, quantize
 
 Array = jnp.ndarray
@@ -30,6 +30,10 @@ class ApproxConfig:
     a_bits: int = 8
     w_bits: int = 8
     fake_quant_only: bool = False   # QAT fake-quant path (no integer GEMM)
+    fused: Optional[bool] = None    # route the STE forward through the fused
+                                    # quantize->LUT-GEMM->dequant Pallas kernel
+                                    # (None = inherit acu.fused; only effective
+                                    # for LUT mode with use_pallas=True)
 
     def __post_init__(self):
         if max(self.a_bits, self.w_bits) > self.acu.bits:
@@ -60,21 +64,31 @@ def _affine_matmul_dequant(acc: Array, xqp: QParams, wqp: QParams) -> Array:
 _STE_CACHE: dict = {}
 
 
-def _get_ste_fn(acu: Acu, a_bits: int, w_bits: int):
+def _get_ste_fn(acu: Acu, a_bits: int, w_bits: int, fused: bool = False):
     """Per-ACU custom_vjp GEMM: approximate forward, exact STE backward
     (the paper's "approximate backward engine" — gradients flow through the
-    fake-quantized values with exact arithmetic)."""
-    key = (id(acu), a_bits, w_bits)
+    fake-quantized values with exact arithmetic).
+
+    The forward dispatches through :func:`matmul_plan`; a fused plan runs
+    quantize -> LUT GEMM -> dequant as one Pallas kernel (weights are still
+    quantized outside — their codes are produced once per layer, not per
+    tile), an unfused plan keeps the three-stage pipeline.
+    """
+    key = (id(acu), a_bits, w_bits, fused)
     if key in _STE_CACHE:
         return _STE_CACHE[key]
+
+    plan = matmul_plan(acu, a_bits=a_bits, fused=fused)
 
     @jax.custom_vjp
     def ste_matmul(x, w, xs, xz, ws, wz):
         xqp = QParams(scale=xs, zero_point=xz, bits=a_bits)
         wqp = QParams(scale=ws, zero_point=wz, bits=w_bits, axis=1)
-        xq = quantize(x, xqp)
-        wq = quantize(w, wqp)
-        acc = acu.matmul(acu_operand(xq, xqp), acu_operand(wq, wqp))
+        wq = acu_operand(quantize(w, wqp), wqp)
+        if plan.fused:
+            return plan(x, wq, xs, xz, ws)
+        xq = acu_operand(quantize(x, xqp), xqp)
+        acc = plan(xq, wq)
         return _affine_matmul_dequant(acc, xqp, wqp)
 
     def fwd(x, w, xs, xz, ws, wz):
@@ -103,7 +117,8 @@ def approx_matmul(x: Array, w: Array, cfg: ApproxConfig,
     ``w``: (K, N) float; ``wqp.axis`` must be 1 (per-out-channel) or None."""
     if cfg.fake_quant_only:
         return fake_quantize(x, xqp) @ fake_quantize(w, wqp)
-    fn = _get_ste_fn(cfg.acu, cfg.a_bits, cfg.w_bits)
+    fused = cfg.acu.fused if cfg.fused is None else cfg.fused
+    fn = _get_ste_fn(cfg.acu, cfg.a_bits, cfg.w_bits, fused)
     return fn(x, w, xqp.scale, xqp.zero_point, wqp.scale, wqp.zero_point)
 
 

@@ -35,12 +35,15 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, seq_k: int,
     else:
         n_kv_eff = n_kv
 
+    k_all = k_ref[...][0]                                # (seq_k, d), VMEM-resident
+    v_all = v_ref[...][0]
+
     def body(ki, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(ki * bk, bk), slice(None))
-                    ).astype(jnp.float32)                # (bk, d)
-        v = pl.load(v_ref, (0, pl.dslice(ki * bk, bk), slice(None))
-                    ).astype(jnp.float32)
+        k = jax.lax.dynamic_slice(k_all, (ki * bk, 0), (bk, d)
+                                  ).astype(jnp.float32)  # (bk, d)
+        v = jax.lax.dynamic_slice(v_all, (ki * bk, 0), (bk, d)
+                                  ).astype(jnp.float32)
         s = q @ k.T                                      # (bq, bk)
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: fused quantize -> LUT-gather GEMM -> affine dequant.
+
+One ``pallas_call`` for the whole approximate dense forward:
+
+``out[m, n] = xs * ws[n] * sum_k LUT[q(x[m, k]) - xz + off, wq[k, n] + off]``
+
+with ``q(x) = clip(round(x / xs + xz), lo, hi)`` — the per-tile activation
+quantizer. Compared to the unfused pipeline (``kernels/quantize`` ->
+``kernels/lut_matmul`` -> jnp dequant) this removes two HBM round-trips per
+layer: the (M, K) int32 activation-code tensor and the (M, N) int32
+accumulator never leave VMEM. The weight side stays pre-quantized (codes are
+produced once per layer, not once per tile), matching the paper's "LUTs are
+populated once" regime.
+
+Structure mirrors ``lut_matmul``: the (2^b, 2^b) product table is pinned in
+VMEM for the whole grid; each (bm, bk) x (bk, bn) tile quantizes its
+activation block on the VPU, performs vectorized gathers in ``inner``-row
+sub-slices, and accumulates int32 into a persistent VMEM scratch tile. The
+final K step applies the affine dequant (per-tensor activation scale x
+per-channel weight scale row) and writes the float32 output tile — the only
+HBM store.
+
+K-padding correction happens *in integer space* (``k_pad * LUT[off, off]``
+subtracted from the accumulator before dequant) so padded shapes stay
+bit-exact vs the unpadded oracle — a float-space correction after dequant
+would not round-trip exactly.
+
+VMEM @ defaults (bm=bk=bn=128, 8-bit, inner=32): LUT 256 KiB + gather working
+set 128*32*128*4 B = 2 MiB + acc tile 64 KiB — comfortably inside 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, lut_ref, xs_ref, xz_ref, ws_ref, o_ref, acc_ref, *,
+            offset: int, n_codes: int, lo: int, hi: int, inner: int,
+            k_pad: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xs = xs_ref[0]                                 # per-tensor activation scale
+    xz = xz_ref[0]                                 # activation zero-point (code)
+    x = x_ref[...].astype(jnp.float32)             # (bm, bk)
+    q = jnp.clip(jnp.round(x / xs + xz), lo, hi).astype(jnp.int32)
+    a = q - xz.astype(jnp.int32) + offset          # shifted code, index space
+    w = w_ref[...].astype(jnp.int32) + offset      # (bk, bn)
+    lut = lut_ref[...]                             # (n_codes * n_codes,)
+    bm, bk = a.shape
+    bn = w.shape[1]
+
+    def body(i, acc):
+        a_sl = jax.lax.dynamic_slice(a, (0, i * inner), (bm, inner))
+        w_sl = jax.lax.dynamic_slice(w, (i * inner, 0), (inner, bn))
+        idx = a_sl[:, :, None] * n_codes + w_sl[None, :, :]   # (bm, inner, bn)
+        prods = jnp.take(lut, idx.reshape(-1), unique_indices=False,
+                         indices_are_sorted=False).reshape(bm, inner, bn)
+        return acc + prods.sum(axis=1)
+
+    acc_ref[...] += jax.lax.fori_loop(0, bk // inner, body,
+                                      jnp.zeros((bm, bn), jnp.int32))
+
+    @pl.when(k_step == pl.num_programs(2) - 1)
+    def _dequant():
+        acc = acc_ref[...]
+        if k_pad:  # padded k entries each contributed LUT[off, off] = M[0, 0]
+            acc = acc - k_pad * lut[offset * n_codes + offset]
+        o_ref[...] = acc.astype(jnp.float32) * xs * ws_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("offset", "n_codes", "lo", "hi",
+                                             "k_pad", "bm", "bk", "bn",
+                                             "inner", "interpret"))
+def fused_lut_dense_kernel(x: jnp.ndarray, wq: jnp.ndarray,
+                           lut_flat: jnp.ndarray, x_scale: jnp.ndarray,
+                           x_zp: jnp.ndarray, w_scale_row: jnp.ndarray, *,
+                           offset: int, n_codes: int, lo: int, hi: int,
+                           k_pad: int = 0, bm: int = 128, bk: int = 128,
+                           bn: int = 128, inner: int = 32,
+                           interpret: bool = True) -> jnp.ndarray:
+    """x: (M, K) float; wq: (K, N) shifted int weight codes;
+    lut_flat: (n_codes**2,) int32; x_scale/x_zp: shape-(1,) f32;
+    w_scale_row: (1, N) f32. Returns (M, N) float32."""
+    M, K = x.shape
+    _, N = wq.shape
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    inner = min(inner, bk)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0 and bk % inner == 0, (
+        f"shape {(M, K, N)} not divisible by tile {(bm, bk, bn)}/{inner}")
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, offset=offset, n_codes=n_codes, lo=lo,
+                          hi=hi, inner=inner, k_pad=k_pad),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((n_codes * n_codes,), lambda i, j, k: (0,)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x, wq, lut_flat, x_scale, x_zp, w_scale_row)

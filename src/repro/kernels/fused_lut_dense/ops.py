@@ -1,0 +1,61 @@
+"""jit'd public wrapper for the fused quantize->LUT-GEMM->dequant kernel.
+
+Pads every dim to a tile multiple. Padding is exact end to end:
+
+* activation k-pad uses 0.0, which the in-kernel quantizer maps to the
+  zero-point and hence to shifted code 0 (``affine_qparams`` clips the
+  zero-point into the code range, so ``clip(round(z), lo, hi) == z``);
+* weight k-pad uses shifted code 0 directly;
+* each padded k therefore contributes ``LUT[off, off] = M[0, 0]`` per output,
+  which the kernel subtracts from the int32 accumulator *before* dequant
+  (float-space correction would break bit-exactness vs the unpadded oracle).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import fused_lut_dense_kernel
+
+
+def fused_lut_dense(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
+                    offset: int, x_scale, x_zp, w_scale, *, bits: int = 8,
+                    bm: int = 128, bk: int = 256, bn: int = 128,
+                    inner: int = 32, interpret: bool = True) -> jnp.ndarray:
+    """Fused approximate dense forward.
+
+    ``x``: (M, K) float activations; ``wq``: (K, N) shifted int weight codes
+    (``code - zero_point``); ``lut`` may be (n_codes, n_codes) or flattened;
+    ``x_scale``/``x_zp``: per-tensor activation qparams; ``w_scale``: scalar
+    or (N,) per-output-channel weight scale; ``bits``: activation code width
+    (clip range), which may be narrower than the ACU's operand width.
+    Returns (M, N) float32, bit-exact vs quantize -> LUT GEMM -> dequant.
+    """
+    n_codes = int(round(lut.size ** 0.5)) if lut.ndim == 1 else lut.shape[0]
+    lut_flat = lut.reshape(-1)
+    M, K = x.shape
+    _, N = wq.shape
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(1)
+    xz = jnp.asarray(x_zp, jnp.float32).reshape(1)
+    ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(1, -1),
+                          (1, N))
+    # M/N tiles cap at 128 so the padding granularity below always matches
+    # the tile the kernel picks (K is the streamed dim and handled apart)
+    bm, bn = min(bm, 128), min(bn, 128)
+    pm = (-M) % min(bm, 128)
+    pk = (-K) % 128
+    pn = (-N) % min(bn, 128)
+    if pm or pk or pn:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+        wq = jnp.pad(wq, ((0, pk), (0, pn)))
+        ws = jnp.pad(ws, ((0, 0), (0, pn)))
+    # single K grid step when the whole row strip fits VMEM comfortably;
+    # otherwise a k-tile that divides the (128-multiple) padded K
+    kp = K + pk
+    bk = kp if kp <= 512 else (bk if kp % bk == 0 else 128)
+    out = fused_lut_dense_kernel(x, wq, lut_flat, xs, xz, ws,
+                                 offset=offset, n_codes=n_codes, lo=lo, hi=hi,
+                                 k_pad=pk, bm=bm, bk=bk, bn=bn, inner=inner,
+                                 interpret=interpret)
+    return out[:M, :N]

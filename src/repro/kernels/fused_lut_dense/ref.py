@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused quantize->LUT-GEMM->dequant pipeline.
+
+Mirrors the unfused reference path operation for operation (same quantizer
+expression, same int32 accumulate, same ``acc * xs * ws`` dequant order) so
+the Pallas kernel can be checked for bit-exactness against it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_lut_dense_ref(x: jnp.ndarray, wq: jnp.ndarray,
+                        lut_flat: jnp.ndarray, offset: int, n_codes: int,
+                        x_scale, x_zp, w_scale, *, bits: int = 8) -> jnp.ndarray:
+    """out = xs * ws[n] * sum_k LUT[q(x[m,k]) - xz + off, wq[k,n] + off].
+
+    O(MKN) memory — test oracle only.
+    """
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    xs = jnp.asarray(x_scale, jnp.float32)
+    xz = jnp.asarray(x_zp, jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / xs + xz), lo, hi
+                 ).astype(jnp.int32)
+    a = q - xz.astype(jnp.int32) + offset
+    w = wq.astype(jnp.int32) + offset
+    idx = a[:, :, None] * n_codes + w[None, :, :]
+    acc = jnp.take(lut_flat, idx.reshape(-1)).reshape(idx.shape).sum(axis=1)
+    ws = jnp.asarray(w_scale, jnp.float32).reshape(1, -1)
+    return acc.astype(jnp.float32) * xs * ws

@@ -1,0 +1,141 @@
+"""Offline-safe ``hypothesis`` shim.
+
+The real library is used whenever it is importable. When it is not (this
+container has no network), a minimal fallback expands each ``@given`` into a
+fixed, deterministically-seeded sample of examples: boundary values of every
+strategy first (lo / hi / 0 / each ``sampled_from`` member), then pseudo-random
+draws seeded from the test's qualified name. No shrinking, no database — just
+enough of the API surface for this repo's property tests to run and stay
+reproducible offline.
+
+Usage (tests and conftest import from here, never from ``hypothesis``):
+
+    from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, strategies
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import assume, given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import zlib
+
+    import numpy as np
+
+    class _AssumeViolation(Exception):
+        """Raised by :func:`assume`; the current example is skipped."""
+
+    def assume(condition) -> bool:
+        if not condition:
+            raise _AssumeViolation()
+        return True
+
+    class _Strategy:
+        """A value source: fixed edge cases first, then seeded random draws."""
+
+        def __init__(self, draw, edges=()):
+            self._draw = draw
+            self._edges = tuple(edges)
+
+        def example_at(self, rng: np.random.Generator, i: int):
+            if i < len(self._edges):
+                return self._edges[i]
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 — mimics the `hypothesis.strategies` module
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            edges = [v for v in dict.fromkeys(
+                (min_value, max_value, 0, 1, -1, min_value + 1, max_value - 1))
+                if min_value <= v <= max_value]
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                edges=edges)
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, *, allow_nan=False,
+                   width: int = 64, allow_subnormal=True,
+                   allow_infinity=False) -> _Strategy:
+            cast = (lambda v: float(np.float32(v))) if width == 32 else float
+            edges = [cast(v) for v in dict.fromkeys(
+                (min_value, max_value, 0.0, min_value / 2, max_value / 2))
+                if min_value <= v <= max_value]
+            return _Strategy(
+                lambda rng: cast(rng.uniform(min_value, max_value)),
+                edges=edges)
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))],
+                edges=elements)
+
+        @staticmethod
+        def lists(elements: _Strategy, *, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example_at(rng, len(elements._edges) + j)
+                        for j in range(n)]
+
+            edges = []
+            if min_size <= 1 <= max_size and elements._edges:
+                edges = [[e] for e in elements._edges]
+            return _Strategy(draw, edges=edges)
+
+    class settings:  # noqa: N801 — mimics `hypothesis.settings`
+        _profiles: dict = {"default": {"max_examples": 25}}
+        _current: str = "default"
+
+        def __init__(self, max_examples=None, deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            if self.max_examples is not None:
+                fn._compat_max_examples = self.max_examples
+            return fn
+
+        @classmethod
+        def register_profile(cls, name: str, max_examples: int = 25,
+                             deadline=None, **_kw) -> None:
+            cls._profiles[name] = {"max_examples": max_examples}
+
+        @classmethod
+        def load_profile(cls, name: str) -> None:
+            cls._current = name
+
+        @classmethod
+        def _profile_max_examples(cls) -> int:
+            return cls._profiles[cls._current]["max_examples"]
+
+    def given(*args, **strategies_by_name):
+        assert not args, "fallback @given supports keyword strategies only"
+
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*wargs, **wkw):
+                n = (getattr(wrapper, "_compat_max_examples", None)
+                     or getattr(fn, "_compat_max_examples", None)
+                     or settings._profile_max_examples())
+                rng = np.random.default_rng(
+                    zlib.adler32(fn.__qualname__.encode()))
+                for i in range(n):
+                    drawn = {k: s.example_at(rng, i)
+                             for k, s in strategies_by_name.items()}
+                    try:
+                        fn(*wargs, **drawn, **wkw)
+                    except _AssumeViolation:
+                        continue
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"falsifying example (#{i}): {drawn!r}") from e
+            # pytest resolves fixtures through __wrapped__'s signature; the
+            # strategy-drawn parameters must not be mistaken for fixtures
+            del wrapper.__wrapped__
+            return wrapper
+        return decorate

@@ -1,0 +1,151 @@
+"""LUT vs FUNCTIONAL parity on exhaustive operand grids, plus direct coverage
+of the K-padding correction branches in the pure-jnp GEMMs.
+
+The exhaustive sweep encodes the paper's core invariant: the LUT engine is a
+*bit-exact* tabulation of the functional multiplier, so the two modes must
+agree on every (a, w) operand pair, for every registered 8-bit multiplier.
+The pair grid is driven through the GEMM path (constant-row x constant-column
+operands), so out[i, j] = 256 * M[code_i, code_j] — any single-pair
+disagreement surfaces as a mismatched entry.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_lut, get_multiplier, make_acu
+from repro.core.acu import Acu, AcuMode
+from repro.core.multipliers import REGISTRY, make_exact
+from repro.kernels.lut_matmul.ops import lut_matmul
+from repro.kernels.lut_matmul.ref import lut_matmul_ref
+
+EIGHT_BIT = sorted(n for n, m in REGISTRY.items() if m.bits == 8)
+
+CODES = jnp.arange(-128, 128, dtype=jnp.int32)
+A_GRID = jnp.tile(CODES[:, None], (1, 256))   # a[m, k] = code_m
+W_GRID = jnp.tile(CODES[None, :], (256, 1))   # w[k, n] = code_n
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("name", EIGHT_BIT)
+def test_exhaustive_grid_lut_equals_functional(name):
+    """Full 256 x 256 operand grid: LUT mode == FUNCTIONAL mode == the table
+    itself, for every registered 8-bit multiplier."""
+    lut = build_lut(get_multiplier(name))
+    expected = 256 * lut.astype(np.int64)     # fits int32: |M| <= 2^14
+    out_lut = np.asarray(make_acu(name, AcuMode.LUT).matmul(A_GRID, W_GRID),
+                         np.int64)
+    out_fun = np.asarray(
+        make_acu(name, AcuMode.FUNCTIONAL).matmul(A_GRID, W_GRID), np.int64)
+    assert np.array_equal(out_lut, expected), name
+    assert np.array_equal(out_fun, expected), name
+
+
+@pytest.mark.parametrize("name", ["mul8s_1L2H", "mul8s_mitchell"])
+def test_subsampled_grid_lut_equals_functional(name):
+    """Tier-1 spot check of the same invariant on a stride-16 code subgrid."""
+    codes = CODES[::16]
+    a = jnp.tile(codes[:, None], (1, 16))
+    w = jnp.tile(codes[None, :], (16, 1))
+    lut = build_lut(get_multiplier(name))
+    expected = 16 * lut[::16, ::16].astype(np.int64)
+    out_lut = np.asarray(make_acu(name, AcuMode.LUT).matmul(a, w), np.int64)
+    out_fun = np.asarray(make_acu(name, AcuMode.FUNCTIONAL).matmul(a, w),
+                         np.int64)
+    assert np.array_equal(out_lut, expected)
+    assert np.array_equal(out_fun, expected)
+
+
+# ---------------------------------------------------------------------------
+# K-padding correction branches (K % chunk != 0, nonzero M[0, 0])
+# ---------------------------------------------------------------------------
+
+def _biased_mult(bias: int = 7):
+    """Synthetic multiplier with M[0, 0] = bias != 0 — every registered
+    family annihilates zero, leaving the pad-correction term untested."""
+    return dataclasses.replace(
+        make_exact(8), name="mul8s_biased",
+        fn=lambda a, w: a.astype(jnp.int32) * w.astype(jnp.int32) + bias)
+
+
+def _brute(lut, a, w, off):
+    M, K = a.shape
+    _, N = w.shape
+    out = np.zeros((M, N), np.int64)
+    for i in range(M):
+        for j in range(N):
+            out[i, j] = lut[a[i, :] + off, w[:, j] + off].astype(np.int64).sum()
+    return out
+
+
+@pytest.fixture(scope="module")
+def biased():
+    mult = _biased_mult()
+    return mult, build_lut(mult)
+
+
+@pytest.fixture(scope="module")
+def odd_operands():
+    rng = np.random.default_rng(13)
+    a = rng.integers(-128, 128, (5, 30), dtype=np.int32)   # K=30: 30 % 16 != 0
+    w = rng.integers(-128, 128, (30, 4), dtype=np.int32)
+    return a, w
+
+
+def test_lut_matmul_jnp_k_pad_correction(biased, odd_operands):
+    """_lut_matmul_jnp with K % k_chunk != 0 must subtract pad * M[0, 0]."""
+    mult, lut = biased
+    a, w = odd_operands
+    acu = Acu(multiplier=mult, mode=AcuMode.LUT, lut=lut)
+    ref = _brute(lut, a, w, 128)
+    out = np.asarray(acu._lut_matmul_jnp(jnp.asarray(a), jnp.asarray(w),
+                                         k_chunk=16), np.int64)
+    assert np.array_equal(out, ref)
+
+
+def test_functional_matmul_jnp_k_pad_correction(biased, odd_operands):
+    """_functional_matmul_jnp pads with zero operands; nonzero M[0, 0] makes
+    the z0 correction term observable (K=30, k_chunk=16 -> pad=2)."""
+    mult, lut = biased
+    a, w = odd_operands
+    acu = Acu(multiplier=mult, mode=AcuMode.FUNCTIONAL)
+    ref = _brute(lut, a, w, 128)
+    out = np.asarray(acu._functional_matmul_jnp(jnp.asarray(a), jnp.asarray(w),
+                                                k_chunk=16), np.int64)
+    assert np.array_equal(out, ref)
+
+
+def test_pallas_lut_matmul_k_pad_correction(biased, odd_operands):
+    """The Pallas wrapper's post-kernel pk * LUT[off, off] correction, with
+    a table where that term is nonzero (K=30 pads to 128 -> pk=98)."""
+    mult, lut = biased
+    a, w = odd_operands
+    ref = _brute(lut, a, w, 128)
+    out = np.asarray(lut_matmul(jnp.asarray(a), jnp.asarray(w),
+                                jnp.asarray(lut), 128, interpret=True),
+                     np.int64)
+    assert np.array_equal(out, ref)
+
+
+def test_lut_matmul_jnp_chunk_larger_than_k(biased, odd_operands):
+    """k_chunk > K: chunk clamps to K, no padding branch, still exact."""
+    mult, lut = biased
+    a, w = odd_operands
+    acu = Acu(multiplier=mult, mode=AcuMode.LUT, lut=lut)
+    ref = _brute(lut, a, w, 128)
+    out = np.asarray(acu._lut_matmul_jnp(jnp.asarray(a), jnp.asarray(w),
+                                         k_chunk=512), np.int64)
+    assert np.array_equal(out, ref)
+
+
+def test_baseline_lut_chunk0_matches_ref(biased, odd_operands):
+    """lut_chunk=0 (paper's unoptimized baseline) routes through the O(MKN)
+    reference gather and agrees with the chunked path."""
+    mult, lut = biased
+    a, w = odd_operands
+    base = Acu(multiplier=mult, mode=AcuMode.LUT, lut=lut, lut_chunk=0)
+    ref = lut_matmul_ref(jnp.asarray(a), jnp.asarray(w),
+                         jnp.asarray(lut).reshape(-1), 128, 256)
+    out = base.matmul(jnp.asarray(a), jnp.asarray(w))
+    assert jnp.array_equal(out, ref)

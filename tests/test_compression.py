@@ -18,7 +18,8 @@ def test_compress_roundtrip_bound(rng):
 
 def test_error_feedback_unbiased_over_steps(rng):
     """Sum of transmitted values + residual == sum of true gradients."""
-    mesh = jax.make_mesh((1,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((1,), ("dp",))
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 

@@ -1,0 +1,169 @@
+"""Fused quantize->LUT-GEMM->dequant kernel: bit-exactness vs the pure-jnp
+oracle (``Acu._lut_matmul_jnp`` + ``_affine_matmul_dequant``), interpret mode.
+
+"Bit-exact" here is literal float equality: the kernel must perform the same
+quantize, the same int32 accumulate (with integer-space K-pad correction), and
+the same ``acc * xs * ws`` dequant order as the unfused reference pipeline.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_lut, get_multiplier, make_acu, matmul_plan
+from repro.core.acu import Acu, AcuMode
+from repro.core.approx_ops import (ApproxConfig, _affine_matmul_dequant,
+                                   approx_dense, approx_matmul)
+from repro.core.quantization import (QParams, acu_operand, affine_qparams,
+                                     quantize, symmetric_qparams)
+from repro.kernels.fused_lut_dense.ops import fused_lut_dense
+from repro.kernels.fused_lut_dense.ref import fused_lut_dense_ref
+
+MULT = get_multiplier("mul8s_1L2H")
+LUT = jnp.asarray(build_lut(MULT))
+ACU = make_acu("mul8s_1L2H", AcuMode.LUT)
+ACU_PALLAS = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True)
+
+
+def unfused_oracle(x, w, xqp, wqp, acu=ACU):
+    """The three-stage reference pipeline the fused kernel replaces."""
+    a = acu_operand(quantize(x, xqp), xqp)
+    wq = acu_operand(quantize(w, wqp), wqp)
+    acc = acu._lut_matmul_jnp(a, wq)
+    return _affine_matmul_dequant(acc, xqp, wqp)
+
+
+@pytest.mark.parametrize("shape", [(8, 16, 8), (128, 128, 128), (130, 70, 50),
+                                   (1, 257, 3), (256, 8, 384), (33, 64, 129)])
+def test_fused_matches_oracle_shapes(shape):
+    """Shape sweep incl. non-divisible M/K/N; per-channel weight scales."""
+    M, K, N = shape
+    rng = np.random.default_rng(M * K + N)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    xqp = symmetric_qparams(jnp.max(jnp.abs(x)), 8)
+    wqp = symmetric_qparams(jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-9),
+                            8, axis=1)
+    wq = acu_operand(quantize(w, wqp), wqp)
+    out = fused_lut_dense(x, wq, LUT, 128, xqp.scale, xqp.zero_point,
+                          wqp.scale, bits=8, interpret=True)
+    ref = unfused_oracle(x, w, xqp, wqp)
+    assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("zp_case", ["zero", "mid", "lo_edge", "hi_edge"])
+def test_fused_zero_point_edges(zp_case):
+    """Affine activation quantization: zero-point at 0, mid-range, and the
+    clip-range edges. a_bits=7 keeps shifted codes inside the 8-bit ACU's
+    operand range even at the edges."""
+    bits = 7
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    zp = {"zero": 0.0, "mid": 11.0, "lo_edge": float(lo),
+          "hi_edge": float(hi)}[zp_case]
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(20, 40)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(40, 9)), jnp.float32)
+    xqp = QParams(scale=jnp.float32(0.05), zero_point=jnp.float32(zp),
+                  bits=bits)
+    wqp = symmetric_qparams(jnp.max(jnp.abs(w)), 8)
+    wq = acu_operand(quantize(w, wqp), wqp)
+    out = fused_lut_dense(x, wq, LUT, 128, xqp.scale, xqp.zero_point,
+                          wqp.scale, bits=bits, interpret=True)
+    ref = unfused_oracle(x, w, xqp, wqp)
+    assert jnp.array_equal(out, ref)
+
+
+def test_fused_kernel_matches_own_ref():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(17, 130)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-128, 128, (130, 21)), jnp.int32)
+    ws = jnp.asarray(np.abs(rng.normal(size=(21,))) * 0.02 + 1e-4, jnp.float32)
+    out = fused_lut_dense(x, wq, LUT, 128, 0.03, -5.0, ws, bits=8,
+                          interpret=True)
+    ref = fused_lut_dense_ref(x, wq, LUT.reshape(-1), 128, 256, 0.03, -5.0,
+                              ws, bits=8)
+    assert jnp.array_equal(out, ref)
+
+
+def test_fused_k_pad_correction_nonzero_m00():
+    """K padding contributes LUT[off, off] = M[0, 0] per padded k; the kernel
+    must subtract it in integer space. Exercised with a synthetic multiplier
+    whose M[0, 0] != 0 (every registered family has M[0, 0] == 0)."""
+    import dataclasses
+
+    from repro.core.multipliers import make_exact
+
+    biased = dataclasses.replace(
+        make_exact(8), name="mul8s_biased",
+        fn=lambda a, w: a.astype(jnp.int32) * w.astype(jnp.int32) + 7)
+    lut = jnp.asarray(build_lut(biased))
+    assert int(lut[128, 128]) == 7
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(6, 30)), jnp.float32)  # K=30 -> pad 98
+    wq = jnp.asarray(rng.integers(-128, 128, (30, 5)), jnp.int32)
+    out = fused_lut_dense(x, wq, lut, 128, 0.04, 2.0, 0.01, bits=8,
+                          interpret=True)
+    ref = fused_lut_dense_ref(x, wq, lut.reshape(-1), 128, 256, 0.04, 2.0,
+                              0.01, bits=8)
+    assert jnp.array_equal(out, ref)
+
+
+def test_matmul_plan_fused_routing():
+    """matmul_plan serves a fused plan only when it can (LUT + pallas + table)
+    and falls back to unfused otherwise."""
+    assert matmul_plan(ACU_PALLAS, fused=True).fused
+    assert not matmul_plan(ACU_PALLAS, fused=False).fused
+    assert not matmul_plan(ACU, fused=True).fused            # no pallas
+    func = make_acu("mul8s_1L2H", AcuMode.FUNCTIONAL, use_pallas=True)
+    assert not matmul_plan(func, fused=True).fused           # not LUT mode
+    # acu-level default threads through
+    fused_acu = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True,
+                         fused=True)
+    assert matmul_plan(fused_acu).fused
+
+
+@pytest.mark.parametrize("shape", [(12, 40, 9), (64, 128, 32)])
+def test_ste_fused_equals_unfused(shape):
+    """Public approx_matmul: fused cfg == unfused cfg, bitwise, and the STE
+    backward (exact fp32 arithmetic) is identical for both."""
+    M, K, N = shape
+    rng = np.random.default_rng(K)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    xqp = affine_qparams(jnp.min(x), jnp.max(x), 8)
+    wqp = symmetric_qparams(jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-9),
+                            8, axis=1)
+    c0 = ApproxConfig(acu=ACU_PALLAS)
+    c1 = ApproxConfig(acu=ACU_PALLAS, fused=True)
+    y0 = approx_matmul(x, w, c0, xqp, wqp)
+    y1 = approx_matmul(x, w, c1, xqp, wqp)
+    assert jnp.array_equal(y0, y1)
+    g0 = jax.grad(lambda x: approx_matmul(x, w, c0, xqp, wqp).sum())(x)
+    g1 = jax.grad(lambda x: approx_matmul(x, w, c1, xqp, wqp).sum())(x)
+    assert jnp.array_equal(g0, g1)
+
+
+def test_approx_dense_fused_batched():
+    """approx_dense with leading batch dims routes through the fused kernel
+    (acu-level fused flag) and matches the unfused result bitwise."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(3, 5, 33)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(33, 14)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(14,)), jnp.float32)
+    fused_acu = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True,
+                         fused=True)
+    y0 = approx_dense(x, w, b, ApproxConfig(acu=ACU_PALLAS))
+    y1 = approx_dense(x, w, b, ApproxConfig(acu=fused_acu))
+    assert y1.shape == (3, 5, 14)
+    assert jnp.array_equal(y0, y1)
+
+
+def test_acu_matmul_unchanged_by_fused_flag():
+    """Acu.matmul stays the unfused integer-operand GEMM regardless of the
+    fused default (it has no qparams to fuse with)."""
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.integers(-128, 128, (7, 19)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (19, 4)), jnp.int32)
+    import dataclasses
+    fused_acu = dataclasses.replace(ACU, fused=True)
+    assert jnp.array_equal(fused_acu.matmul(a, w), ACU.matmul(a, w))

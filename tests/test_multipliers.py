@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, strategies as st
 
 from repro.core.multipliers import (REGISTRY, error_stats, get_multiplier,
                                     make_bam, make_drum, make_exact,
@@ -56,11 +56,13 @@ def test_mitchell_relative_error(a, w):
 
 @given(a=i12, w=i12)
 def test_drum_relative_error(a, w):
-    """DRUM k-bit windows: relative error <= ~2^-(k-1)."""
+    """DRUM k-bit windows: per-operand relative error <= 2^(1-k), so the
+    product error is bounded by (1 + 2^-10)^2 - 1 = 2^-9 + 2^-20 for k=11
+    (attained at exact powers of two, e.g. a = w = -2048)."""
     m = make_drum(12, 11)
     out = int(m(jnp.int32(a), jnp.int32(w)))
     if a * w != 0:
-        assert abs(out - a * w) / abs(a * w) <= 2 ** -9
+        assert abs(out - a * w) / abs(a * w) <= 2 ** -9 + 2 ** -20
     else:
         assert out == 0
 
