@@ -1,0 +1,67 @@
+"""Benchmark regression gate for the adapt-bench-v1 trajectory.
+
+``python benchmarks/check_regression.py [OLD.json NEW.json] [--tol 0.10]``
+
+With no positional args, compares the two newest committed ``BENCH_PR<n>.json``
+records at the repo root (sorted by ``n``), so the gate self-maintains as PRs
+append to the series. Fails (exit 1) when the new record's ``layers`` entry
+for ``mode=fused`` at (256, 256, 256) is more than ``tol`` slower than the
+old record's — the headline number docs/benchmarks.md says every PR must
+hold. Records are only comparable within the same host/backend pair; the
+committed series is produced on the dev container, so CI gates on the
+committed files rather than re-timing on shared runners.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+GATE = {"mode": "fused", "M": 256, "K": 256, "N": 256}
+
+
+def latest_pair() -> tuple[str, str]:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    recs = sorted(
+        ((int(m.group(1)), p) for p in glob.glob(os.path.join(root, "BENCH_PR*.json"))
+         if (m := re.fullmatch(r"BENCH_PR(\d+)\.json", os.path.basename(p)))))
+    if len(recs) < 2:
+        raise SystemExit(f"need >= 2 BENCH_PR<n>.json records at {root}, "
+                         f"found {[p for _, p in recs]}")
+    return recs[-2][1], recs[-1][1]
+
+
+def _fused_256(record: dict, path: str) -> float:
+    assert record.get("schema") == "adapt-bench-v1", (path, record.get("schema"))
+    for row in record.get("layers", []):
+        if all(row.get(k) == v for k, v in GATE.items()):
+            return float(row["us_per_call"])
+    raise SystemExit(f"{path}: no layers entry matching {GATE}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old", nargs="?")
+    ap.add_argument("new", nargs="?")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="allowed fractional slowdown (default 10%%)")
+    args = ap.parse_args(argv)
+    if args.old is None or args.new is None:
+        args.old, args.new = latest_pair()
+        print(f"comparing newest committed records: {args.old} -> {args.new}")
+    with open(args.old) as fh:
+        old = _fused_256(json.load(fh), args.old)
+    with open(args.new) as fh:
+        new = _fused_256(json.load(fh), args.new)
+    ratio = new / old
+    verdict = "OK" if ratio <= 1.0 + args.tol else "REGRESSION"
+    print(f"layers.fused@256^3: {old:.0f}us -> {new:.0f}us "
+          f"({ratio:.3f}x, tol {1 + args.tol:.2f}x) {verdict}")
+    return 0 if verdict == "OK" else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

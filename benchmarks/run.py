@@ -9,6 +9,9 @@ sections:
   [kernels] Pallas kernel micro-shape timings (interpret mode, CPU)
   [layers]  approx_dense wall-clock per dispatch route: fused single-kernel
             vs unfused quantize->LUT-GEMM->dequant vs functional baseline
+  [sharded] the same routes under a 2x4 host-platform (data, model) mesh
+            (needs XLA_FLAGS=--xla_force_host_platform_device_count=8;
+            printed as skipped otherwise)
 
 ``--json`` additionally writes the kernel and layer sections (plus host
 metadata) as a BENCH_*.json record — the perf trajectory future PRs append
@@ -119,6 +122,54 @@ def layer_modes(records: list | None = None):
                                     round(base / us, 3)})
 
 
+def sharded_modes(records: list | None = None):
+    """approx_dense under an active 2x4 host mesh vs replicated (docs/
+    sharding.md). On the CPU interpreter the sharded numbers mostly measure
+    shard_map/collective overhead — 8 emulated devices share one physical
+    CPU — so the interesting trajectory is the overhead ratio, not a win;
+    the fusion speedup story stays in [layers]."""
+    import jax
+    if len(jax.devices()) < 8:
+        print("skipped: needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import make_acu
+    from repro.core.acu import AcuMode
+    from repro.core.approx_ops import ApproxConfig, approx_dense
+    from repro.launch.mesh import make_host_multi_mesh
+    from repro.parallel.sharding import use_mesh
+
+    mesh = make_host_multi_mesh((2, 4))
+    acu = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True)
+    modes = {
+        "sharded_fused": ApproxConfig(acu=acu, fused=True),
+        "sharded_unfused_pallas": ApproxConfig(acu=acu),
+        "sharded_unfused_jnp": ApproxConfig(
+            acu=make_acu("mul8s_1L2H", AcuMode.LUT)),
+    }
+    rng = np.random.default_rng(3)
+    print("mode,mesh,M,K,N,us_per_call,vs_replicated")
+    for (M, K, N) in [(256, 256, 256), (512, 256, 256)]:
+        x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+        for mode, cfg in modes.items():
+            rep = jax.jit(lambda x, w, cfg=cfg: approx_dense(x, w, None, cfg))
+            t_rep = _time_call(lambda: rep(x, w), reps=5)
+            with use_mesh(mesh):
+                sh = jax.jit(
+                    lambda x, w, cfg=cfg: approx_dense(x, w, None, cfg))
+                t_sh = _time_call(lambda: sh(x, w), reps=5)
+            print(f"{mode},2x4,{M},{K},{N},{t_sh:.0f},{t_rep/t_sh:.2f}x")
+            if records is not None:
+                records.append({"mode": mode, "mesh": "2x4",
+                                "M": M, "K": K, "N": N,
+                                "us_per_call": round(t_sh, 1),
+                                "replicated_us_per_call": round(t_rep, 1),
+                                "speedup_vs_replicated":
+                                    round(t_rep / t_sh, 3)})
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -147,10 +198,13 @@ def main(argv=None):
 
     kernel_records: list = []
     layer_records: list = []
+    sharded_records: list = []
     section("kernels")
     kernel_micro(kernel_records)
     section("layers")
     layer_modes(layer_records)
+    section("sharded")
+    sharded_modes(sharded_records)
 
     if args.json:
         import jax
@@ -164,6 +218,7 @@ def main(argv=None):
                      "interpret_mode": True},
             "kernels": kernel_records,
             "layers": layer_records,
+            "sharded": sharded_records,
         }
         with open(args.json, "w") as fh:
             json.dump(record, fh, indent=1)

@@ -16,6 +16,14 @@ An :class:`Acu` packages one approximate multiplier with an emulation *mode*:
 * ``EXACT`` — no approximation (quantization-only reference).
 
 All modes consume *shifted-code* integer operands (``code - zero_point``).
+
+Dispatch is two-level: :func:`matmul_plan` first resolves (mode, bits,
+use_pallas, fused) to a kernel, then — when a
+:class:`~repro.parallel.sharding.MeshContext` is active — wraps it in a
+``shard_map`` over the production mesh (``parallel/acu_shard.py``): LUT
+replicated, rows over ``("pod", "data")``, columns over ``("model",)``,
+optional contraction sharding with an int32 psum before dequant. Every
+route stays bit-exact against the single-device jnp oracle.
 """
 from __future__ import annotations
 
@@ -65,6 +73,17 @@ class Acu:
     def offset(self) -> int:
         return -self.multiplier.lo  # code shift into table index space
 
+    def m00(self) -> int:
+        """The multiplier's product at shifted code (0, 0) — the integer every
+        padded-K entry contributes to an accumulator (0 for exact-at-zero
+        families; the synthetic biased multipliers exercise the general case)."""
+        if self.mode == AcuMode.LUT and self.lut is not None:
+            return int(np.asarray(self.lut)[self.offset, self.offset])
+        if self.mode in (AcuMode.EXACT, AcuMode.FACTORED, AcuMode.LOWRANK):
+            return 0
+        return int(self.multiplier(np.zeros((), np.int32),
+                                   np.zeros((), np.int32)))
+
     # ------------------------------------------------------------------
     # elementwise multiply (used by tests and conv inner loops)
     # ------------------------------------------------------------------
@@ -91,9 +110,10 @@ class Acu:
         or float32 (LOWRANK — the SVD correction is real-valued).
 
         Thin wrapper over :func:`matmul_plan` (the explicit dispatch layer);
-        always the unfused integer-operand form.
+        always the unfused integer-operand form. Mesh-aware: under an active
+        :func:`~repro.parallel.sharding.use_mesh` the GEMM runs sharded.
         """
-        return _resolve_unfused(self)(a, w)
+        return matmul_plan(self, fused=False)(a, w)
 
     # -- pure-jnp implementations (portable; Pallas kernels mirror these) --
 
@@ -178,6 +198,10 @@ class MatmulPlan:
     plans run the whole quantize -> LUT GEMM -> dequant pipeline in one Pallas
     kernel: ``plan(x, wq, x_scale, x_zp, w_scale) -> float32`` where ``x`` is
     the float activation matrix and ``wq`` the shifted weight codes.
+
+    ``partition`` records the mesh partition the plan executes under
+    (``None`` = single-device); the wrapped ``fn`` already contains the
+    ``shard_map`` — callers never change.
     """
 
     mode: AcuMode
@@ -185,6 +209,7 @@ class MatmulPlan:
     use_pallas: bool
     fused: bool
     fn: Callable[..., Array]
+    partition: Optional[object] = None   # parallel.planner.GemmPartition
 
     def __call__(self, *args) -> Array:
         return self.fn(*args)
@@ -229,33 +254,73 @@ def _resolve_unfused(acu: Acu) -> Callable[[Array, Array], Array]:
     return acu._functional_matmul_jnp
 
 
+def _resolve_mesh(mesh):
+    """``mesh`` arg -> active MeshContext or None. ``None`` auto-detects the
+    ambient :func:`~repro.parallel.sharding.use_mesh` context; ``False``
+    forces single-device resolution."""
+    if mesh is False:
+        return None
+    if mesh is None:
+        from repro.parallel.sharding import current_mesh_context
+        return current_mesh_context()
+    return mesh
+
+
 def matmul_plan(acu: Acu, *, a_bits: Optional[int] = None,
-                fused: Optional[bool] = None) -> MatmulPlan:
-    """Resolve (mode, bits, use_pallas, fused) into a concrete GEMM callable.
+                fused: Optional[bool] = None, mesh=None) -> MatmulPlan:
+    """Resolve (mode, bits, use_pallas, fused) x mesh into a concrete GEMM
+    callable.
 
     ``a_bits`` is the activation code width a fused plan quantizes/clips to
     (defaults to the ACU operand width). A fused request that cannot be
     served — non-LUT mode, no Pallas routing, or no table — silently falls
     back to the unfused plan, so callers can request fusion unconditionally
     and keep the pure-jnp implementations as bit-exact oracles.
+
+    ``mesh``: ``None`` auto-detects the active
+    :class:`~repro.parallel.sharding.MeshContext` (plans resolved under
+    :func:`~repro.parallel.sharding.use_mesh` run sharded — LUT replicated,
+    rows over the ``acu_rows`` axes, columns over ``acu_cols``, optional
+    ``acu_k`` contraction sharding with an int32 psum before dequant); a
+    :class:`MeshContext` pins one explicitly; ``False`` forces the
+    single-device route. Sharded plans stay bit-exact vs their single-device
+    counterparts — the wrap only changes where tiles execute.
     """
     fused = acu.fused if fused is None else fused
     a_bits = acu.bits if a_bits is None else a_bits
+    ctx = _resolve_mesh(mesh)
+    partition = None
+    if ctx is not None:
+        from repro.parallel import acu_shard
+        partition = acu_shard.resolve_partition(
+            ctx, float_accum=acu.mode == AcuMode.LOWRANK)
+
     if fused and acu.mode == AcuMode.LUT and acu.use_pallas \
             and acu.lut is not None:
         from repro.kernels.fused_lut_dense import ops as fops
 
-        def fn(x, wq, x_scale, x_zp, w_scale):
+        def fused_call(x, wq, x_scale, x_zp, w_scale, *, emit_acc=False):
             # jnp.asarray stays inside fn: plans are cached across jit traces
             # and a device constant created during one trace must not leak
             # into another
             return fops.fused_lut_dense(x, wq, jnp.asarray(acu.lut),
                                         acu.offset, x_scale, x_zp, w_scale,
-                                        bits=a_bits, interpret=acu.interpret)
+                                        bits=a_bits, interpret=acu.interpret,
+                                        emit_acc=emit_acc)
+        fn = fused_call
+        if partition is not None:
+            fn = acu_shard.wrap_fused(
+                fused_call,
+                lambda *args: fused_call(*args, emit_acc=True),
+                ctx, partition, acu.m00())
         return MatmulPlan(mode=acu.mode, bits=acu.bits, use_pallas=True,
-                          fused=True, fn=fn)
+                          fused=True, fn=fn, partition=partition)
+
+    fn = _resolve_unfused(acu)
+    if partition is not None:
+        fn = acu_shard.wrap_unfused(fn, ctx, partition, acu.m00())
     return MatmulPlan(mode=acu.mode, bits=acu.bits, use_pallas=acu.use_pallas,
-                      fused=False, fn=_resolve_unfused(acu))
+                      fused=False, fn=fn, partition=partition)
 
 
 def make_acu(name: str, mode: AcuMode | str = AcuMode.LUT, rank: int = 8,

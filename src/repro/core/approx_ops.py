@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from .acu import Acu, AcuMode, matmul_plan
-from .quantization import QParams, acu_operand, dequantize, fake_quantize, quantize
+from .quantization import (QParams, acu_operand, dequantize, fake_quantize,
+                           pin_rounding, quantize)
 
 Array = jnp.ndarray
 
@@ -53,18 +54,38 @@ def _affine_matmul_dequant(acc: Array, xqp: QParams, wqp: QParams) -> Array:
     ``sum (q1-z1)(q2-z2)`` and the dequant is a pure scale product.
     Weight scale may be per-output-channel (axis 0 of w^T layout handled by
     caller passing wqp with axis=1 on the (K, N) matrix).
+
+    The two scales combine into ONE multiply, ``acc * (s1 * s2)``, and the
+    combined scale sits behind an optimization barrier: a ``acc * s1 * s2``
+    chain gets reassociated by the XLA simplifier inside shard_map-partitioned
+    programs, and letting inline scale *computations* (amax -> divide) fuse
+    into the big multiply perturbs its rounding between compilation contexts.
+    Bit-exactness across every fused/unfused/sharded route — jitted or eager —
+    is the contract here, so the scale product is pinned to one f32 rounding.
     """
     s1 = xqp.scale  # per-tensor
     s2 = wqp.scale  # scalar or (N,)
     if wqp.axis is not None:
         s2 = jnp.reshape(s2, (1, -1))
-    return acc.astype(jnp.float32) * s1 * s2
+    s = pin_rounding(jnp.asarray(s1, jnp.float32) * jnp.asarray(s2, jnp.float32))
+    return acc.astype(jnp.float32) * s
 
 
 _STE_CACHE: dict = {}
 
 
-def _get_ste_fn(acu: Acu, a_bits: int, w_bits: int, fused: bool = False):
+def _mesh_cache_key(ctx):
+    """Hashable fingerprint of a MeshContext for the STE cache (meshes are
+    hashable in jax; the acu_* rules are what the plan resolution reads)."""
+    if ctx is None:
+        return None
+    rules = tuple(sorted((k, v) for k, v in ctx.rules.items()
+                         if k.startswith("acu_")))
+    return (ctx.mesh, rules)
+
+
+def _get_ste_fn(acu: Acu, a_bits: int, w_bits: int, fused: bool = False,
+                ctx=None):
     """Per-ACU custom_vjp GEMM: approximate forward, exact STE backward
     (the paper's "approximate backward engine" — gradients flow through the
     fake-quantized values with exact arithmetic).
@@ -72,13 +93,23 @@ def _get_ste_fn(acu: Acu, a_bits: int, w_bits: int, fused: bool = False):
     The forward dispatches through :func:`matmul_plan`; a fused plan runs
     quantize -> LUT GEMM -> dequant as one Pallas kernel (weights are still
     quantized outside — their codes are produced once per layer, not per
-    tile), an unfused plan keeps the three-stage pipeline.
+    tile), an unfused plan keeps the three-stage pipeline. With an active
+    mesh the plan runs sharded, and the backward GEMMs carry matching specs
+    (``gx`` row-sharded like the activations, ``gw`` column-sharded like the
+    weights; the contraction of each stays device-local, so sharded QAT
+    gradients are bitwise identical to single-device ones).
     """
-    key = (id(acu), a_bits, w_bits, fused)
+    key = (id(acu), a_bits, w_bits, fused, _mesh_cache_key(ctx))
     if key in _STE_CACHE:
         return _STE_CACHE[key]
 
-    plan = matmul_plan(acu, a_bits=a_bits, fused=fused)
+    plan = matmul_plan(acu, a_bits=a_bits, fused=fused, mesh=ctx or False)
+    if plan.partition is not None:
+        from repro.parallel.acu_shard import bwd_gemms
+        gx_gemm, gw_gemm = bwd_gemms(ctx, plan.partition)
+    else:
+        gx_gemm = lambda g, wf: g @ wf.T
+        gw_gemm = lambda xf, g: xf.T @ g
 
     @jax.custom_vjp
     def ste_matmul(x, w, xs, xz, ws, wz):
@@ -102,8 +133,8 @@ def _get_ste_fn(acu: Acu, a_bits: int, w_bits: int, fused: bool = False):
     def bwd(res, g):
         xf, wf = res
         g = g.astype(jnp.float32)
-        gx = (g @ wf.astype(jnp.float32).T).astype(xf.dtype)
-        gw = (xf.astype(jnp.float32).T @ g).astype(wf.dtype)
+        gx = gx_gemm(g, wf.astype(jnp.float32)).astype(xf.dtype)
+        gw = gw_gemm(xf.astype(jnp.float32), g).astype(wf.dtype)
         return (gx, gw, None, None, None, None)
 
     ste_matmul.defvjp(fwd, bwd)
@@ -114,11 +145,14 @@ def _get_ste_fn(acu: Acu, a_bits: int, w_bits: int, fused: bool = False):
 def approx_matmul(x: Array, w: Array, cfg: ApproxConfig,
                   xqp: QParams, wqp: QParams) -> Array:
     """2-D approximate GEMM with STE backward. ``x``: (M, K) float,
-    ``w``: (K, N) float; ``wqp.axis`` must be 1 (per-out-channel) or None."""
+    ``w``: (K, N) float; ``wqp.axis`` must be 1 (per-out-channel) or None.
+    Mesh-aware: resolved against the active MeshContext at call time."""
     if cfg.fake_quant_only:
         return fake_quantize(x, xqp) @ fake_quantize(w, wqp)
     fused = cfg.acu.fused if cfg.fused is None else cfg.fused
-    fn = _get_ste_fn(cfg.acu, cfg.a_bits, cfg.w_bits, fused)
+    from repro.parallel.sharding import current_mesh_context
+    fn = _get_ste_fn(cfg.acu, cfg.a_bits, cfg.w_bits, fused,
+                     ctx=current_mesh_context())
     return fn(x, w, xqp.scale, xqp.zero_point, wqp.scale, wqp.zero_point)
 
 
@@ -146,6 +180,12 @@ def approx_dense(x: Array, w: Array, b: Optional[Array], cfg: Optional[ApproxCon
         y = approx_matmul(x2, w, cfg, xqp, wqp).reshape(*lead, w.shape[1])
         y = y.astype(x.dtype)   # dequant is f32; keep the model's dtype
     if b is not None:
+        if cfg is not None:
+            # best-effort: keep dequant-multiply and bias-add as two separate
+            # roundings so flat-jit and shard_map-partitioned programs agree;
+            # the SPMD partitioner can still FMA-contract them (1-ulp, see
+            # docs/sharding.md) — the GEMM+dequant itself is always bitwise
+            y = pin_rounding(y)
         y = y + b
     return y
 
@@ -211,17 +251,21 @@ def conv2d(x: Array, w: Array, b: Optional[Array] = None, *,
         y = approx_dense(m, wblk, None, cfg)
         y = y.reshape(n, ho, wo, cout).transpose(0, 3, 1, 2)
     else:
-        outs = []
+        # grouped conv as ONE vmapped GEMM over the group axis: patch
+        # features from a single im2col are channel-major, so each group's
+        # block is a contiguous (cpg_in*kh*kw) slice. Traces O(1)
+        # approx_dense calls instead of O(groups), and the per-group
+        # activation qparams (amax inside the vmapped call) match the old
+        # per-group loop bitwise.
         cpg_in, cpg_out = cin // groups, cout // groups
-        for g in range(groups):
-            xg = x[:, g * cpg_in:(g + 1) * cpg_in]
-            wg = w[g * cpg_out:(g + 1) * cpg_out]
-            cols, (ho, wo) = _im2col(xg, kh, kw, stride, pad, dilation)
-            wmat = wg.reshape(cpg_out, -1).T
-            m = cols.reshape(-1, cols.shape[-1])
-            yg = approx_dense(m, wmat, None, cfg)
-            outs.append(yg.reshape(n, ho, wo, cpg_out).transpose(0, 3, 1, 2))
-        y = jnp.concatenate(outs, axis=1)
+        cols, (ho, wo) = _im2col(x, kh, kw, stride, pad, dilation)
+        kk = kh * kw
+        m = cols.reshape(n, ho * wo, groups, cpg_in * kk)
+        m = m.transpose(2, 0, 1, 3).reshape(groups, n * ho * wo, cpg_in * kk)
+        wg = w.reshape(groups, cpg_out, cpg_in * kk).transpose(0, 2, 1)
+        yg = jax.vmap(lambda mg, wgg: approx_dense(mg, wgg, None, cfg))(m, wg)
+        y = yg.reshape(groups, n, ho * wo, cpg_out).transpose(1, 2, 0, 3)
+        y = y.reshape(n, ho, wo, cout).transpose(0, 3, 1, 2)
     if b is not None:
         y = y + b.reshape(1, -1, 1, 1)
     return y

@@ -47,10 +47,62 @@ class QParams:
         return jnp.reshape(v, shape)
 
 
+def _register_barrier_batcher() -> None:
+    """``optimization_barrier`` has no vmap rule in this jax version; it is
+    an elementwise identity, so the batched rule is the barrier itself with
+    unchanged batch dims (needed for the vmapped grouped-conv GEMM)."""
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+        from jax.interpreters import batching
+        if optimization_barrier_p not in batching.primitive_batchers:
+            def _batcher(args, dims, **params):
+                return optimization_barrier_p.bind(*args, **params), dims
+            batching.primitive_batchers[optimization_barrier_p] = _batcher
+    except (ImportError, AttributeError):
+        # newer jax: the rule exists or the internals moved/were pruned —
+        # degrade to the one feature needing it (vmapped grouped conv)
+        # rather than failing the whole package at import time
+        pass
+
+
+_register_barrier_batcher()
+
+
+_PIN_INT = {2: jnp.int16, 4: jnp.int32, 8: jnp.int64}
+
+
+@jax.custom_jvp
+def pin_rounding(x: Array) -> Array:
+    """Identity that pins its input to one canonical set of float roundings.
+
+    XLA fuses value-producing chains into consumers differently in
+    differently-structured programs (flat jit vs shard_map-partitioned vs
+    eager) — reassociating scale chains, contracting multiply+add into FMA —
+    and those 1-ulp differences break bitwise reproducibility between the
+    single-device and mesh-sharded ACU routes. Two layers of defense — an int
+    bitcast round-trip plus ``optimization_barrier`` — because neither alone
+    is load-bearing everywhere: the SPMD partitioner strips the barrier from
+    sharded programs and the simplifier can fold the bitcast pair. Together
+    they pin every GEMM+dequant route bitwise across eager/jit/mesh (see
+    docs/sharding.md for the one residual caveat: bias-add FMA contraction
+    in partitioned programs). Gradients pass straight through (custom_jvp —
+    neither primitive differentiates in this jax version)."""
+    i = _PIN_INT.get(jnp.dtype(x.dtype).itemsize)
+    if i is not None and jnp.issubdtype(x.dtype, jnp.floating):
+        x = jax.lax.bitcast_convert_type(
+            jax.lax.bitcast_convert_type(x, i), x.dtype)
+    return jax.lax.optimization_barrier(x)
+
+
+@pin_rounding.defjvp
+def _pin_rounding_jvp(primals, tangents):
+    return pin_rounding(primals[0]), tangents[0]
+
+
 def symmetric_qparams(calib_max: Array, bits: int, axis: Optional[int] = None) -> QParams:
     """Symmetric quantizer from a calibrated absolute max."""
     hi = (1 << (bits - 1)) - 1
-    scale = jnp.maximum(jnp.asarray(calib_max, jnp.float32), 1e-12) / hi
+    scale = pin_rounding(jnp.maximum(jnp.asarray(calib_max, jnp.float32), 1e-12) / hi)
     return QParams(scale=scale, zero_point=jnp.zeros_like(scale), bits=bits, axis=axis)
 
 
@@ -60,7 +112,7 @@ def affine_qparams(xmin: Array, xmax: Array, bits: int, axis: Optional[int] = No
     hi = (1 << (bits - 1)) - 1
     xmin = jnp.minimum(jnp.asarray(xmin, jnp.float32), 0.0)
     xmax = jnp.maximum(jnp.asarray(xmax, jnp.float32), 0.0)
-    scale = jnp.maximum((xmax - xmin) / (hi - lo), 1e-12)
+    scale = pin_rounding(jnp.maximum((xmax - xmin) / (hi - lo), 1e-12))
     zp = jnp.clip(jnp.round(lo - xmin / scale), lo, hi)
     return QParams(scale=scale, zero_point=zp, bits=bits, axis=axis)
 

@@ -40,7 +40,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _kernel(x_ref, w_ref, lut_ref, xs_ref, xz_ref, ws_ref, o_ref, acc_ref, *,
             offset: int, n_codes: int, lo: int, hi: int, inner: int,
-            k_pad: int):
+            k_pad: int, emit_acc: bool):
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
@@ -73,22 +73,32 @@ def _kernel(x_ref, w_ref, lut_ref, xs_ref, xz_ref, ws_ref, o_ref, acc_ref, *,
         acc = acc_ref[...]
         if k_pad:  # padded k entries each contributed LUT[off, off] = M[0, 0]
             acc = acc - k_pad * lut[offset * n_codes + offset]
-        o_ref[...] = acc.astype(jnp.float32) * xs * ws_ref[...]
+        if emit_acc:
+            # mesh contraction sharding: partial int32 accumulators leave the
+            # kernel, psum across K shards, dequant once after the collective
+            o_ref[...] = acc
+        else:
+            # one combined-scale multiply: a * xs * ws chains get reassociated
+            # by the XLA simplifier under shard_map, breaking bit-exactness
+            o_ref[...] = acc.astype(jnp.float32) * (xs * ws_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("offset", "n_codes", "lo", "hi",
                                              "k_pad", "bm", "bk", "bn",
-                                             "inner", "interpret"))
+                                             "inner", "interpret", "emit_acc"))
 def fused_lut_dense_kernel(x: jnp.ndarray, wq: jnp.ndarray,
                            lut_flat: jnp.ndarray, x_scale: jnp.ndarray,
                            x_zp: jnp.ndarray, w_scale_row: jnp.ndarray, *,
                            offset: int, n_codes: int, lo: int, hi: int,
                            k_pad: int = 0, bm: int = 128, bk: int = 128,
                            bn: int = 128, inner: int = 32,
-                           interpret: bool = True) -> jnp.ndarray:
+                           interpret: bool = True,
+                           emit_acc: bool = False) -> jnp.ndarray:
     """x: (M, K) float; wq: (K, N) shifted int weight codes;
     lut_flat: (n_codes**2,) int32; x_scale/x_zp: shape-(1,) f32;
-    w_scale_row: (1, N) f32. Returns (M, N) float32."""
+    w_scale_row: (1, N) f32. Returns (M, N) float32 — or the raw (M, N)
+    int32 accumulator with ``emit_acc=True`` (sharded contraction: the
+    caller psums partials across K shards and dequantizes after)."""
     M, K = x.shape
     _, N = wq.shape
     bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
@@ -98,7 +108,7 @@ def fused_lut_dense_kernel(x: jnp.ndarray, wq: jnp.ndarray,
     grid = (M // bm, N // bn, K // bk)
     return pl.pallas_call(
         functools.partial(_kernel, offset=offset, n_codes=n_codes, lo=lo,
-                          hi=hi, inner=inner, k_pad=k_pad),
+                          hi=hi, inner=inner, k_pad=k_pad, emit_acc=emit_acc),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
@@ -109,7 +119,8 @@ def fused_lut_dense_kernel(x: jnp.ndarray, wq: jnp.ndarray,
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((M, N),
+                                       jnp.int32 if emit_acc else jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(x, wq, lut_flat, x_scale, x_zp, w_scale_row)

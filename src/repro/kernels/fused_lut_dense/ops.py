@@ -20,7 +20,8 @@ from .kernel import fused_lut_dense_kernel
 def fused_lut_dense(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
                     offset: int, x_scale, x_zp, w_scale, *, bits: int = 8,
                     bm: int = 128, bk: int = 256, bn: int = 128,
-                    inner: int = 32, interpret: bool = True) -> jnp.ndarray:
+                    inner: int = 32, interpret: bool = True,
+                    emit_acc: bool = False) -> jnp.ndarray:
     """Fused approximate dense forward.
 
     ``x``: (M, K) float activations; ``wq``: (K, N) shifted int weight codes
@@ -29,6 +30,11 @@ def fused_lut_dense(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
     or (N,) per-output-channel weight scale; ``bits``: activation code width
     (clip range), which may be narrower than the ACU's operand width.
     Returns (M, N) float32, bit-exact vs quantize -> LUT GEMM -> dequant.
+
+    ``emit_acc=True`` skips the in-kernel dequant and returns the raw (M, N)
+    int32 accumulator (tile padding still corrected in integer space) — the
+    mesh contraction-sharded route psums these partials across K shards and
+    dequantizes once after the collective.
     """
     n_codes = int(round(lut.size ** 0.5)) if lut.ndim == 1 else lut.shape[0]
     lut_flat = lut.reshape(-1)
@@ -57,5 +63,5 @@ def fused_lut_dense(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
     out = fused_lut_dense_kernel(x, wq, lut_flat, xs, xz, ws,
                                  offset=offset, n_codes=n_codes, lo=lo, hi=hi,
                                  k_pad=pk, bm=bm, bk=bk, bn=bn, inner=inner,
-                                 interpret=interpret)
+                                 interpret=interpret, emit_acc=emit_acc)
     return out[:M, :N]

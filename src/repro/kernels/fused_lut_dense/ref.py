@@ -1,8 +1,9 @@
 """Pure-jnp oracle for the fused quantize->LUT-GEMM->dequant pipeline.
 
 Mirrors the unfused reference path operation for operation (same quantizer
-expression, same int32 accumulate, same ``acc * xs * ws`` dequant order) so
-the Pallas kernel can be checked for bit-exactness against it.
+expression, same int32 accumulate, same single combined-scale dequant
+``acc * (xs * ws)``) so the Pallas kernel can be checked for bit-exactness
+against it.
 """
 from __future__ import annotations
 
@@ -27,4 +28,4 @@ def fused_lut_dense_ref(x: jnp.ndarray, wq: jnp.ndarray,
     idx = a[:, :, None] * n_codes + w[None, :, :]
     acc = jnp.take(lut_flat, idx.reshape(-1)).reshape(idx.shape).sum(axis=1)
     ws = jnp.asarray(w_scale, jnp.float32).reshape(1, -1)
-    return acc.astype(jnp.float32) * xs * ws
+    return acc.astype(jnp.float32) * (xs * ws)

@@ -29,3 +29,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-device mesh for CPU tests (1x1, same axis names)."""
     return compat_make_mesh((1, 1), ("data", "model"))
+
+
+def make_host_multi_mesh(shape=(2, 4)):
+    """Multi-device host-platform mesh for sharded-ACU tests and the
+    ``[sharded]`` benchmark section (same ``(data, model)`` axis names as
+    production). Needs ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (N >= prod(shape)) exported *before* jax initializes; raises otherwise so
+    callers fail loudly instead of silently benchmarking a 1-device mesh."""
+    import numpy as np
+    need = int(np.prod(shape))
+    have = len(jax.devices())
+    if have < need:
+        raise RuntimeError(
+            f"host mesh {shape} needs {need} devices, found {have}; export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} before "
+            f"importing jax")
+    return compat_make_mesh(shape, ("data", "model"))

@@ -1,0 +1,165 @@
+"""Mesh-aware execution of ACU GEMM plans (the second level of dispatch).
+
+``core/acu.py`` resolves *what* kernel runs (mode x fused); this module
+resolves *where*: with an active :class:`~repro.parallel.sharding.MeshContext`
+every plan is wrapped in a ``shard_map`` that
+
+* replicates the (2^b, 2^b) product table (<= 256 KiB) to every device,
+* shards activation/output rows over the ``acu_rows`` axes (``("pod",
+  "data")`` by default), weight/output columns over ``acu_cols``
+  (``("model",)``),
+* optionally shards the contraction dim over ``acu_k`` and psum-reduces the
+  int32 partial accumulators *before* dequant,
+* pads M/N/K up to the axis products and slices the result back — padding
+  rows/columns only produce discarded outputs, while the K shard-padding
+  contributes ``M[0, 0]`` per padded k and is corrected **exactly once
+  globally** (after the psum), not once per shard.
+
+Everything stays bit-exact against the single-device kernels: each local
+kernel sees the full contraction (or an exact K slice whose int32 partials
+add associatively), so the int accumulators — and hence the dequantized
+floats — are identical element-for-element.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .planner import GemmPartition, acu_gemm_partition
+from .sharding import MeshContext
+
+Array = jnp.ndarray
+
+
+def resolve_partition(ctx: MeshContext, *, float_accum: bool = False
+                      ) -> Optional[GemmPartition]:
+    """Partition for the active mesh, or None when every axis is trivial
+    (1x1 host mesh: the wrap would be a no-op, so the plan stays local)."""
+    part, _ = acu_gemm_partition(ctx, float_accum=float_accum)
+    return part if part.total > 1 else None
+
+
+def _pad2(x: Array, pr: int, pc: int) -> Array:
+    return jnp.pad(x, ((0, pr), (0, pc))) if (pr or pc) else x
+
+
+def wrap_unfused(base_fn: Callable[[Array, Array], Array], ctx: MeshContext,
+                 part: GemmPartition, m00: int) -> Callable[[Array, Array], Array]:
+    """Shard an unfused integer-operand GEMM ``fn(a, w) -> acc``.
+
+    ``m00`` is the multiplier's product at shifted code (0, 0) — what every
+    K shard-pad entry contributes to the accumulator.
+    """
+    mesh = ctx.mesh
+
+    def fn(a: Array, w: Array) -> Array:
+        M, K = a.shape
+        N = w.shape[1]
+        pm, pk, pn = (-M) % part.n_rows, (-K) % part.n_k, (-N) % part.n_cols
+        a_p = _pad2(a, pm, pk)          # code 0 == shifted zero-point
+        w_p = _pad2(w, pk, pn)
+
+        def local(a_blk, w_blk):
+            acc = base_fn(a_blk, w_blk)
+            if part.k:
+                acc = jax.lax.psum(acc, part.k)
+            return acc
+
+        out = shard_map(local, mesh=mesh,
+                        in_specs=(part.a_spec(), part.w_spec()),
+                        out_specs=part.out_spec(), check_rep=False)(a_p, w_p)
+        if pk and m00:
+            # global K shard-padding correction: applied once, after the
+            # psum — each pad entry contributed m00 to exactly one k shard
+            out = out - jnp.asarray(pk * m00, out.dtype)
+        return out[:M, :N]
+
+    return fn
+
+
+def wrap_fused(fused_call: Callable[..., Array],
+               acc_call: Callable[..., Array], ctx: MeshContext,
+               part: GemmPartition, m00: int) -> Callable[..., Array]:
+    """Shard a fused quantize->LUT-GEMM->dequant plan
+    ``fn(x, wq, xs, xz, ws) -> f32``.
+
+    Without K sharding each shard runs the full fused kernel (dequant stays
+    in-kernel). With K sharding the kernel emits the raw int32 accumulator
+    (``acc_call``), partials psum in integer space, the global K-pad
+    correction lands once, and the dequant — the same ``acc * xs * ws``
+    expression the kernel uses — runs on the reduced accumulator.
+    """
+    mesh = ctx.mesh
+
+    def fn(x: Array, wq: Array, xs, xz, ws) -> Array:
+        M, K = x.shape
+        N = wq.shape[1]
+        pm, pk, pn = (-M) % part.n_rows, (-K) % part.n_k, (-N) % part.n_cols
+        x_p = _pad2(x, pm, pk)          # 0.0 quantizes to the zero-point
+        wq_p = _pad2(wq, pk, pn)        # shifted code 0
+        ws_row = jnp.broadcast_to(
+            jnp.asarray(ws, jnp.float32).reshape(1, -1), (1, N))
+        ws_p = _pad2(ws_row, 0, pn)
+        xs_a = jnp.asarray(xs, jnp.float32).reshape(1)
+        xz_a = jnp.asarray(xz, jnp.float32).reshape(1)
+
+        if not part.k:
+            def local(x_blk, wq_blk, xs_b, xz_b, ws_blk):
+                return fused_call(x_blk, wq_blk, xs_b, xz_b, ws_blk[0])
+        else:
+            def local(x_blk, wq_blk, xs_b, xz_b, ws_blk):
+                acc = acc_call(x_blk, wq_blk, xs_b, xz_b, ws_blk[0])
+                acc = jax.lax.psum(acc, part.k)
+                if pk and m00:
+                    acc = acc - jnp.asarray(pk * m00, acc.dtype)
+                # same single combined-scale multiply as the kernel's in-VMEM
+                # dequant — bit-exact vs the single-device output
+                return acc.astype(jnp.float32) * (xs_b[0] * ws_blk)
+
+        out = shard_map(
+            local, mesh=mesh,
+            in_specs=(part.a_spec(), part.w_spec(), P(None), P(None),
+                      P(None, part._dim(part.cols))),
+            out_specs=part.out_spec(), check_rep=False,
+        )(x_p, wq_p, xs_a, xz_a, ws_p)
+        return out[:M, :N]
+
+    return fn
+
+
+def bwd_gemms(ctx: MeshContext, part: GemmPartition
+              ) -> tuple[Callable[[Array, Array], Array],
+                         Callable[[Array, Array], Array]]:
+    """The STE backward GEMMs with specs matching the forward partition:
+    ``gx = g @ wf.T`` comes back row-sharded like the activations, ``gw =
+    xf.T @ g`` column-sharded like the weights. Each local matmul contracts
+    the *full* reduction dim (the counterpart operand is replicated), so
+    gradients are bitwise identical to the unsharded backward.
+    """
+    mesh = ctx.mesh
+
+    def gx_fn(g: Array, wf: Array) -> Array:
+        M = g.shape[0]
+        pm = (-M) % part.n_rows
+        g_p = jnp.pad(g, ((0, pm), (0, 0))) if pm else g
+        out = shard_map(lambda gb, wb: gb @ wb.T, mesh=mesh,
+                        in_specs=(P(part._dim(part.rows), None), P(None, None)),
+                        out_specs=P(part._dim(part.rows), None),
+                        check_rep=False)(g_p, wf)
+        return out[:M]
+
+    def gw_fn(xf: Array, g: Array) -> Array:
+        N = g.shape[1]
+        pn = (-N) % part.n_cols
+        g_p = jnp.pad(g, ((0, 0), (0, pn))) if pn else g
+        out = shard_map(lambda xb, gb: xb.T @ gb, mesh=mesh,
+                        in_specs=(P(None, None), P(None, part._dim(part.cols))),
+                        out_specs=P(None, part._dim(part.cols)),
+                        check_rep=False)(xf, g_p)
+        return out[:, :N]
+
+    return gx_fn, gw_fn

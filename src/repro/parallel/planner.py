@@ -226,6 +226,81 @@ def cache_specs(cfg: ModelConfig, cache, mesh: Mesh, *, global_batch: int,
     return Plan(mesh=mesh, specs=tdef.unflatten(specs), report=report)
 
 
+# ---------------------------------------------------------------------------
+# approximate-GEMM partitions (core/acu.py matmul_plan routes)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GemmPartition:
+    """Resolved mesh partition for one ACU GEMM: ``a (M, K) @ w (K, N)``.
+
+    ``rows``/``cols``/``k`` are mesh-axis tuples (possibly empty). The product
+    LUT is always replicated (``acu_lut`` rule; it is <= 256 KiB). A non-empty
+    ``k`` means contraction sharding: both operands split on K and the int32
+    partial accumulators are psum-reduced over ``k`` before dequant.
+    ``report`` carries the audited fallback decisions that shaped this
+    partition (inspectable on ``MatmulPlan.partition`` in the dispatch path).
+    """
+
+    rows: tuple[str, ...]
+    cols: tuple[str, ...]
+    k: tuple[str, ...]
+    n_rows: int
+    n_cols: int
+    n_k: int
+    report: tuple[str, ...] = ()
+
+    @property
+    def total(self) -> int:
+        return self.n_rows * self.n_cols * self.n_k
+
+    @staticmethod
+    def _dim(axes: tuple[str, ...]):
+        return None if not axes else (axes[0] if len(axes) == 1 else axes)
+
+    def a_spec(self) -> P:
+        return P(self._dim(self.rows), self._dim(self.k))
+
+    def w_spec(self) -> P:
+        return P(self._dim(self.k), self._dim(self.cols))
+
+    def out_spec(self) -> P:
+        return P(self._dim(self.rows), self._dim(self.cols))
+
+
+def acu_gemm_partition(ctx, *, float_accum: bool = False
+                       ) -> tuple[GemmPartition, list[str]]:
+    """Resolve the ``acu_rows``/``acu_cols``/``acu_k`` logical rules of an
+    active :class:`~repro.parallel.sharding.MeshContext` into a
+    :class:`GemmPartition`, with the planner's usual audited fallbacks:
+
+    * each mesh axis is claimed by at most one GEMM dim — ``k`` first (it is
+      an explicit opt-in), then ``cols``, then ``rows``;
+    * ``float_accum`` (LOWRANK: the SVD correction makes partial accumulators
+      real-valued) drops ``k``: a float psum would not be bit-exact against
+      the single-device oracle.
+    """
+    report: list[str] = []
+    k = ctx.axes_for("acu_k")
+    if k and float_accum:
+        report.append("acu_k dropped: float accumulator (LOWRANK) cannot "
+                      "psum bit-exactly; K replicated")
+        k = ()
+    used = set(k)
+    cols = tuple(a for a in ctx.axes_for("acu_cols") if a not in used)
+    if len(cols) != len(ctx.axes_for("acu_cols")):
+        report.append("acu_cols overlaps acu_k -> shared axes dropped from "
+                      "cols (contraction sharding wins)")
+    used.update(cols)
+    rows = tuple(a for a in ctx.axes_for("acu_rows") if a not in used)
+    part = GemmPartition(rows=rows, cols=cols, k=k,
+                         n_rows=ctx.axis_prod(rows),
+                         n_cols=ctx.axis_prod(cols),
+                         n_k=ctx.axis_prod(k),
+                         report=tuple(report))
+    return part, report
+
+
 def opt_state_specs(param_plan: Plan, opt_state) -> Any:
     """Optimizer moments shard exactly like their params; scalars replicate."""
     pspecs = param_plan.specs

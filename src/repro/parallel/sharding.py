@@ -39,6 +39,16 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "tokens": ("pod", "data"),  # flattened token rows (B*S order, batch-major)
     "conv_dim": ("model",),
     "state": (),
+    # ---- quantized ACU GEMM operands (core/acu.py matmul_plan routes) ----
+    # The (2^b, 2^b) product table is <= 256 KiB and replicates to every
+    # device; activation code rows shard like tokens, weight code columns
+    # like any TP output dim. "acu_k" opts in to contraction sharding: the
+    # K dim of both operands splits over the named axes and the int32
+    # partial accumulators are psum-reduced before dequant.
+    "acu_rows": ("pod", "data"),   # activation / output rows (M)
+    "acu_cols": ("model",),        # weight / output columns (N)
+    "acu_k": (),                   # contraction dim (K); empty = replicated
+    "acu_lut": (),                 # product table: always replicated
 }
 
 
@@ -80,6 +90,19 @@ class MeshContext:
     def sharding(self, *logical, dim_sizes=None) -> NamedSharding:
         return NamedSharding(self.mesh, self.spec(*logical, dim_sizes=dim_sizes))
 
+    def axes_for(self, logical: str) -> tuple[str, ...]:
+        """Mesh axes a logical rule resolves to on *this* mesh (missing mesh
+        axes dropped, order preserved)."""
+        return tuple(a for a in self.rules.get(logical, ())
+                     if a in self.mesh.axis_names)
+
+    def axis_prod(self, axes: Sequence[str]) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+
+    @property
+    def size(self) -> int:
+        return int(self.mesh.size)
+
 
 def current_mesh_context() -> Optional[MeshContext]:
     return getattr(_STATE, "ctx", None)
@@ -91,6 +114,19 @@ def use_mesh(mesh: Mesh, rules: dict[str, tuple[str, ...]] | None = None):
     _STATE.ctx = MeshContext(mesh=mesh, rules={**DEFAULT_RULES, **(rules or {})})
     try:
         yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+@contextlib.contextmanager
+def use_mesh_context(ctx: "MeshContext"):
+    """Activate an existing :class:`MeshContext` verbatim — no DEFAULT_RULES
+    re-merge, so a context whose ``rules`` dict deliberately omits keys (a
+    missing rule means *replicated*) keeps exactly that meaning."""
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ctx
+    try:
+        yield ctx
     finally:
         _STATE.ctx = prev
 

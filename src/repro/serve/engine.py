@@ -12,6 +12,7 @@ which is what the multi-pod config proves out.)
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable, Optional
 
@@ -21,6 +22,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import apply_model, init_cache
+from repro.parallel.sharding import MeshContext, use_mesh, use_mesh_context
 
 
 @dataclasses.dataclass
@@ -31,13 +33,30 @@ class Request:
 
 
 class ServeEngine:
+    """``mesh`` (a ``jax.sharding.Mesh`` or an existing
+    :class:`~repro.parallel.sharding.MeshContext`) activates mesh-aware
+    execution for both jits: prefill/decode trace under
+    :func:`~repro.parallel.sharding.use_mesh`, so every ``matmul_plan``
+    inside `apply_model` resolves to its sharded route (and the models'
+    logical-axis ``shard()`` annotations become real constraints) instead of
+    silently running replicated. ``mesh=None`` keeps the single-device
+    behavior bit-for-bit."""
+
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 max_seq: int = 512, acfg=None):
+                 max_seq: int = 512, acfg=None, mesh=None):
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
         self.acfg = acfg
+        if mesh is None:
+            self._mesh_scope = contextlib.nullcontext
+        elif isinstance(mesh, MeshContext):
+            # verbatim: a context whose rules omit keys means "replicated
+            # there" — re-entering via use_mesh would re-merge DEFAULT_RULES
+            self._mesh_scope = lambda: use_mesh_context(mesh)
+        else:
+            self._mesh_scope = lambda: use_mesh(mesh)
 
         def prefill(params, cache, tokens):
             logits, cache = apply_model(params, tokens, cfg, acfg=acfg,
@@ -60,7 +79,9 @@ class ServeEngine:
         for i, r in enumerate(reqs):
             toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
         cache = init_cache(self.cfg, b, self.max_seq)
-        logits, cache = self._prefill(self.params, cache, jnp.asarray(toks))
+        with self._mesh_scope():
+            logits, cache = self._prefill(self.params, cache,
+                                          jnp.asarray(toks))
         cur = np.asarray(jnp.argmax(logits, -1))
         for r in reqs:
             r.out = np.array([], np.int32)
@@ -76,8 +97,10 @@ class ServeEngine:
                         alive[i] = False
             if not alive.any():
                 break
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(cur)[:, None], plen + t)
+            with self._mesh_scope():
+                logits, cache = self._decode(self.params, cache,
+                                             jnp.asarray(cur)[:, None],
+                                             plen + t)
             cur = np.asarray(jnp.argmax(logits, -1))
 
     def run(self, requests: list[Request],

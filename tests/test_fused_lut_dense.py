@@ -3,7 +3,8 @@ oracle (``Acu._lut_matmul_jnp`` + ``_affine_matmul_dequant``), interpret mode.
 
 "Bit-exact" here is literal float equality: the kernel must perform the same
 quantize, the same int32 accumulate (with integer-space K-pad correction), and
-the same ``acc * xs * ws`` dequant order as the unfused reference pipeline.
+the same single combined-scale dequant ``acc * (xs * ws)`` as the unfused
+reference pipeline.
 """
 import jax
 import jax.numpy as jnp
@@ -106,6 +107,28 @@ def test_fused_k_pad_correction_nonzero_m00():
     ref = fused_lut_dense_ref(x, wq, lut.reshape(-1), 128, 256, 0.04, 2.0,
                               0.01, bits=8)
     assert jnp.array_equal(out, ref)
+
+
+def test_fused_emit_acc_is_raw_accumulator():
+    """emit_acc=True returns the int32 accumulator (tile K-pad already
+    corrected) — what the mesh contraction route psums — and dequantizing it
+    reproduces the normal fused output bitwise."""
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(9, 40)), jnp.float32)   # K=40 -> pad 88
+    w = jnp.asarray(rng.normal(size=(40, 7)), jnp.float32)
+    xqp = symmetric_qparams(jnp.max(jnp.abs(x)), 8)
+    wqp = symmetric_qparams(jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-9),
+                            8, axis=1)
+    wq = acu_operand(quantize(w, wqp), wqp)
+    acc = fused_lut_dense(x, wq, LUT, 128, xqp.scale, xqp.zero_point,
+                          wqp.scale, bits=8, interpret=True, emit_acc=True)
+    assert acc.dtype == jnp.int32
+    a = acu_operand(quantize(x, xqp), xqp)
+    assert jnp.array_equal(acc, ACU._lut_matmul_jnp(a, wq))
+    out = fused_lut_dense(x, wq, LUT, 128, xqp.scale, xqp.zero_point,
+                          wqp.scale, bits=8, interpret=True)
+    dq = acc.astype(jnp.float32) * (xqp.scale * wqp.scale.reshape(1, -1))
+    assert jnp.array_equal(out, dq)
 
 
 def test_matmul_plan_fused_routing():

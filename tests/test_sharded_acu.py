@@ -1,0 +1,195 @@
+"""Sharded <-> single-device bit-exactness for every ``matmul_plan`` route.
+
+These run on a 2x4 host-platform ``(data, model)`` mesh and need
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` exported before jax
+initializes (the multi-device CI job does exactly that); with fewer devices
+the whole module skips.
+
+"Bit-exact" is literal equality — ``jnp.array_equal`` on the int32
+accumulators and on the dequantized float outputs — including K-pad branches
+and M/N that do not divide the mesh axes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_lut, make_acu, matmul_plan
+from repro.core.acu import AcuMode
+from repro.core.approx_ops import ApproxConfig, approx_dense, approx_matmul, conv2d
+from repro.core.multipliers import make_exact
+from repro.core.quantization import symmetric_qparams
+from repro.parallel.sharding import use_mesh
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    from repro.launch.mesh import make_host_multi_mesh
+    return make_host_multi_mesh((2, 4))
+
+
+def _int_operands(M, K, N, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-120, 120, (M, K)), jnp.int32)
+    w = jnp.asarray(rng.integers(-120, 120, (K, N)), jnp.int32)
+    return a, w
+
+
+ALL_MODE_ACUS = [
+    ("lut_jnp", lambda: make_acu("mul8s_1L2H", AcuMode.LUT)),
+    ("lut_pallas", lambda: make_acu("mul8s_1L2H", AcuMode.LUT,
+                                    use_pallas=True)),
+    ("functional", lambda: make_acu("mul8s_1L2H", AcuMode.FUNCTIONAL)),
+    ("factored", lambda: make_acu("mul8s_trunc2", AcuMode.FACTORED)),
+    ("lowrank", lambda: make_acu("mul8s_1L2H", AcuMode.LOWRANK)),
+    ("exact", lambda: make_acu("mul8s_exact", AcuMode.EXACT)),
+]
+
+
+@pytest.mark.parametrize("name,mk", ALL_MODE_ACUS, ids=[n for n, _ in ALL_MODE_ACUS])
+@pytest.mark.parametrize("shape", [(32, 64, 16), (36, 70, 21)])
+def test_unfused_modes_bit_exact(mesh, name, mk, shape):
+    """Every AcuMode, divisible and non-divisible M/N: the sharded plan's
+    accumulator equals the single-device one element-for-element."""
+    acu = mk()
+    a, w = _int_operands(*shape, seed=sum(shape))
+    ref = matmul_plan(acu, mesh=False)(a, w)
+    with use_mesh(mesh):
+        plan = matmul_plan(acu)
+        assert plan.partition is not None and plan.partition.total == 8
+        out = jax.jit(plan.fn)(a, w)
+    assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("shape", [(32, 128, 16), (33, 70, 21), (1, 257, 3)])
+def test_fused_sharded_bit_exact(mesh, shape):
+    """Fused quantize->LUT-GEMM->dequant under the mesh, incl. in-kernel
+    K-pad branches and odd M/N that don't divide the mesh."""
+    M, K, N = shape
+    rng = np.random.default_rng(K)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    xqp = symmetric_qparams(jnp.max(jnp.abs(x)), 8)
+    wqp = symmetric_qparams(jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-9),
+                            8, axis=1)
+    acu = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True, fused=True)
+    cfg = ApproxConfig(acu=acu)
+    ref = approx_matmul(x, w, cfg, xqp, wqp)
+    with use_mesh(mesh):
+        out = approx_matmul(x, w, cfg, xqp, wqp)
+    assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_jit_regime_parity(mesh, fused):
+    """Compiled parity: jit(approx_dense) under the mesh equals the flat
+    single-device jit bitwise, fused and unfused, with the activation
+    qparams computed *inside* the program (the pinned-rounding guarantee
+    from core/quantization.pin_rounding — see docs/sharding.md)."""
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(4, 37, 96)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(96, 48)), jnp.float32)
+    acu = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True)
+    cfg = ApproxConfig(acu=acu, fused=fused)
+    ref = jax.jit(lambda x: approx_dense(x, w, None, cfg))(x)
+    with use_mesh(mesh):
+        out = jax.jit(lambda x: approx_dense(x, w, None, cfg))(x)
+    assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_contracting_shard_kpad_once(mesh, fused):
+    """K sharded over model (``acu_k`` rule): partial int32 accumulators
+    psum, and the K shard-padding correction lands exactly once globally.
+    Uses a biased multiplier (M[0, 0] = 7) so a per-shard correction — or a
+    missing one — would show up as an integer offset."""
+    biased = dataclasses.replace(
+        make_exact(8), name="mul8s_biased",
+        fn=lambda a, w: a.astype(jnp.int32) * w.astype(jnp.int32) + 7)
+    lut = build_lut(biased)
+    acu = dataclasses.replace(
+        make_acu("mul8s_exact", AcuMode.LUT, use_pallas=True, fused=fused),
+        multiplier=biased, lut=lut)
+    assert acu.m00() == 7
+    rules = {"acu_k": ("model",), "acu_cols": ()}
+    M, K, N = 12, 70, 9          # K=70: pads to 72 across 4 shards
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    cfg = ApproxConfig(acu=acu, fused=fused)
+    ref = approx_dense(x, w, None, cfg)
+    with use_mesh(mesh, rules):
+        plan = matmul_plan(acu, fused=fused)
+        assert plan.partition.k == ("model",)
+        out = approx_dense(x, w, None, cfg)
+    assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_ste_backward_bitwise(mesh, fused):
+    """QAT: sharded STE gradients (for activations AND weights) are bitwise
+    identical to single-device ones, fused and unfused."""
+    M, K, N = 18, 40, 11
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    xqp = symmetric_qparams(jnp.max(jnp.abs(x)), 8)
+    wqp = symmetric_qparams(jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-9),
+                            8, axis=1)
+    acu = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True)
+    cfg = ApproxConfig(acu=acu, fused=fused)
+
+    def loss(x, w):
+        return (approx_matmul(x, w, cfg, xqp, wqp) ** 2).sum()
+
+    gx_ref, gw_ref = jax.grad(loss, argnums=(0, 1))(x, w)
+    with use_mesh(mesh):
+        gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert jnp.array_equal(gx, gx_ref)
+    assert jnp.array_equal(gw, gw_ref)
+
+
+def test_grouped_conv_sharded(mesh):
+    """The vmapped grouped-conv GEMM also runs under the mesh, matching the
+    single-device result bitwise."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(2, 8, 6, 6)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(8, 4, 3, 3)), jnp.float32)
+    cfg = ApproxConfig(acu=make_acu("mul8s_1L2H", AcuMode.LUT))
+    ref = conv2d(x, w, groups=2, cfg=cfg)
+    with use_mesh(mesh):
+        out = conv2d(x, w, groups=2, cfg=cfg)
+    assert jnp.array_equal(out, ref)
+
+
+def test_serve_engine_mesh_parity(mesh):
+    """ServeEngine(mesh=...) decodes the same tokens as the replicated
+    engine — sharded plans change where tiles run, not what they compute."""
+    from repro.configs import reduced_config
+    from repro.models.transformer import init_params
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = reduced_config("smollm-135m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompt = np.asarray([5, 17, 3], np.int32)
+    ref = ServeEngine(params, cfg, slots=2, max_seq=32).run(
+        [Request(prompt=prompt, max_new_tokens=4)])
+    out = ServeEngine(params, cfg, slots=2, max_seq=32, mesh=mesh).run(
+        [Request(prompt=prompt, max_new_tokens=4)])
+    assert list(out[0].out) == list(ref[0].out)
+
+
+def test_acu_matmul_mesh_aware(mesh):
+    """Acu.matmul itself resolves against the active mesh."""
+    acu = make_acu("mul8s_1L2H", AcuMode.LUT)
+    a, w = _int_operands(10, 30, 6, seed=1)
+    ref = acu.matmul(a, w)
+    with use_mesh(mesh):
+        out = acu.matmul(a, w)
+    assert jnp.array_equal(out, ref)

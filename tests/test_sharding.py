@@ -93,6 +93,55 @@ def test_microbatch_policy():
     assert small == 1                   # tiny model: no accumulation
 
 
+def test_acu_gemm_partition_defaults():
+    """Default ACU rules: rows over (pod,)data, cols over model, K
+    replicated — and the specs shard_map consumes."""
+    ctx = MeshContext(mesh=MESH, rules=dict(DEFAULT_RULES))
+    part, report = planner.acu_gemm_partition(ctx)
+    assert (part.rows, part.cols, part.k) == (("data",), ("model",), ())
+    assert (part.n_rows, part.n_cols, part.n_k) == (16, 16, 1)
+    assert part.a_spec() == P("data", None)
+    assert part.w_spec() == P(None, "model")
+    assert part.out_spec() == P("data", "model")
+    assert not report
+    mp, _ = planner.acu_gemm_partition(
+        MeshContext(mesh=MESH_MP, rules=dict(DEFAULT_RULES)))
+    assert mp.rows == ("pod", "data") and mp.n_rows == 32
+
+
+def test_acu_gemm_partition_contracting_claims_model():
+    """acu_k wins the model axis; cols fall back with an audited report."""
+    rules = dict(DEFAULT_RULES, acu_k=("model",))
+    part, report = planner.acu_gemm_partition(
+        MeshContext(mesh=MESH, rules=rules))
+    assert part.k == ("model",) and part.cols == ()
+    assert part.a_spec() == P("data", "model")
+    assert part.w_spec() == P("model", None)
+    assert any("contraction" in r for r in report)
+
+
+def test_acu_gemm_partition_lowrank_drops_k():
+    """Float accumulators (LOWRANK) cannot psum bit-exactly -> K replicated."""
+    rules = dict(DEFAULT_RULES, acu_k=("model",))
+    part, report = planner.acu_gemm_partition(
+        MeshContext(mesh=MESH, rules=rules), float_accum=True)
+    assert part.k == () and part.cols == ("model",)
+    assert any("LOWRANK" in r for r in report)
+    assert part.report == tuple(report)   # surfaced on the dispatch path
+
+
+def test_use_mesh_context_verbatim():
+    """use_mesh_context must not re-merge DEFAULT_RULES: a context whose
+    rules omit a key means 'replicated there'."""
+    from repro.parallel.sharding import current_mesh_context, use_mesh_context
+    ctx = MeshContext(mesh=MESH, rules={"acu_rows": ("data",)})
+    with use_mesh_context(ctx):
+        active = current_mesh_context()
+        assert active is ctx
+        assert active.axes_for("acu_cols") == ()   # omitted -> replicated
+    assert current_mesh_context() is None
+
+
 def test_serve_fsdp_threshold():
     big = get_config("command-r-plus-104b")
     plan = planner.param_specs(big, abstract_params(big), MESH, mode="serve")
