@@ -4,12 +4,20 @@
 
 With no positional args, compares the two newest committed ``BENCH_PR<n>.json``
 records at the repo root (sorted by ``n``), so the gate self-maintains as PRs
-append to the series. Fails (exit 1) when the new record's ``layers`` entry
-for ``mode=fused`` at (256, 256, 256) is more than ``tol`` slower than the
-old record's — the headline number docs/benchmarks.md says every PR must
-hold. Records are only comparable within the same host/backend pair; the
-committed series is produced on the dev container, so CI gates on the
-committed files rather than re-timing on shared runners.
+append to the series. Fails (exit 1) when any gated ``layers`` entry in the
+new record is more than ``tol`` slower than the old record's:
+
+* ``mode=fused`` at (256, 256, 256) — the fused-dense headline
+  docs/benchmarks.md says every PR must hold;
+* ``mode=conv_fused`` at the VGG-ish conv shape (M=2048, K=576, N=128) —
+  the patch-streaming conv kernel (docs/fused_conv.md), gated from the first
+  record that carries it (a gate entry absent from the *old* record is
+  reported as a new baseline, not a failure; absent from the *new* record is
+  a failure — trajectory entries must never disappear).
+
+Records are only comparable within the same host/backend pair; the committed
+series is produced on the dev container, so CI gates on the committed files
+rather than re-timing on shared runners.
 """
 from __future__ import annotations
 
@@ -20,7 +28,12 @@ import os
 import re
 import sys
 
-GATE = {"mode": "fused", "M": 256, "K": 256, "N": 256}
+GATES = [
+    ("layers.fused@256^3",
+     {"mode": "fused", "M": 256, "K": 256, "N": 256}),
+    ("layers.conv_fused@vgg3x3",
+     {"mode": "conv_fused", "M": 2048, "K": 576, "N": 128}),
+]
 
 
 def latest_pair() -> tuple[str, str]:
@@ -34,12 +47,12 @@ def latest_pair() -> tuple[str, str]:
     return recs[-2][1], recs[-1][1]
 
 
-def _fused_256(record: dict, path: str) -> float:
+def _layers_entry(record: dict, path: str, gate: dict) -> float | None:
     assert record.get("schema") == "adapt-bench-v1", (path, record.get("schema"))
     for row in record.get("layers", []):
-        if all(row.get(k) == v for k, v in GATE.items()):
+        if all(row.get(k) == v for k, v in gate.items()):
             return float(row["us_per_call"])
-    raise SystemExit(f"{path}: no layers entry matching {GATE}")
+    return None
 
 
 def main(argv=None) -> int:
@@ -53,14 +66,32 @@ def main(argv=None) -> int:
         args.old, args.new = latest_pair()
         print(f"comparing newest committed records: {args.old} -> {args.new}")
     with open(args.old) as fh:
-        old = _fused_256(json.load(fh), args.old)
+        old_rec = json.load(fh)
     with open(args.new) as fh:
-        new = _fused_256(json.load(fh), args.new)
-    ratio = new / old
-    verdict = "OK" if ratio <= 1.0 + args.tol else "REGRESSION"
-    print(f"layers.fused@256^3: {old:.0f}us -> {new:.0f}us "
-          f"({ratio:.3f}x, tol {1 + args.tol:.2f}x) {verdict}")
-    return 0 if verdict == "OK" else 1
+        new_rec = json.load(fh)
+
+    failed = False
+    for name, gate in GATES:
+        old = _layers_entry(old_rec, args.old, gate)
+        new = _layers_entry(new_rec, args.new, gate)
+        if old is None and new is None:
+            print(f"{name}: absent from both records (gate not yet active)")
+            continue
+        if old is None:
+            print(f"{name}: new baseline {new:.0f}us (no prior entry)")
+            continue
+        if new is None:
+            print(f"{name}: MISSING from {args.new} (present in {args.old}) "
+                  f"REGRESSION")
+            failed = True
+            continue
+        ratio = new / old
+        ok = ratio <= 1.0 + args.tol
+        print(f"{name}: {old:.0f}us -> {new:.0f}us "
+              f"({ratio:.3f}x, tol {1 + args.tol:.2f}x) "
+              f"{'OK' if ok else 'REGRESSION'}")
+        failed |= not ok
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

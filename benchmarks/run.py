@@ -8,7 +8,9 @@ sections:
   [fidelity] multiplier MAE/MRE + low-rank factorization fidelity (paper Tab.2 header)
   [kernels] Pallas kernel micro-shape timings (interpret mode, CPU)
   [layers]  approx_dense wall-clock per dispatch route: fused single-kernel
-            vs unfused quantize->LUT-GEMM->dequant vs functional baseline
+            vs unfused quantize->LUT-GEMM->dequant vs functional baseline;
+            plus conv2d routes (conv_fused patch-streaming kernel vs the
+            eager im2col path) at a VGG-ish 3x3 and a 1x1 pointwise layer
   [sharded] the same routes under a 2x4 host-platform (data, model) mesh
             (needs XLA_FLAGS=--xla_force_host_platform_device_count=8;
             printed as skipped otherwise)
@@ -122,6 +124,50 @@ def layer_modes(records: list | None = None):
                                     round(base / us, 3)})
 
 
+def conv_modes(records: list | None = None):
+    """conv2d wall-clock: the fused patch-streaming conv kernel vs the eager
+    im2col + fused-dense path it retired (``route="im2col"``), at a VGG-ish
+    3x3 layer and a 1x1 pointwise layer. Rows join the ``layers`` record
+    section with modes ``conv_fused`` / ``conv_im2col`` (M/K/N are the
+    implicit im2col GEMM dims); the regression gate covers ``conv_fused`` at
+    the VGG-ish shape (benchmarks/check_regression.py)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import make_acu
+    from repro.core.acu import AcuMode
+    from repro.core.approx_ops import ApproxConfig, conv2d
+
+    cfg = ApproxConfig(
+        acu=make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True, fused=True))
+    rng = np.random.default_rng(2)
+    print("mode,conv,M,K,N,us_per_call,vs_im2col")
+    for tag, n, c, h, w_sz, cout, k in [
+        ("vgg3x3", 2, 64, 32, 32, 128, 3),       # SAME, stride 1
+        ("pointwise1x1", 2, 256, 16, 16, 256, 1),
+    ]:
+        x = jnp.asarray(rng.normal(size=(n, c, h, w_sz)), jnp.float32)
+        wt = jnp.asarray(rng.normal(size=(cout, c, k, k)), jnp.float32)
+        fns = {
+            "conv_fused": jax.jit(
+                lambda x, wt: conv2d(x, wt, None, cfg=cfg)),
+            "conv_im2col": jax.jit(
+                lambda x, wt: conv2d(x, wt, None, cfg=cfg, route="im2col")),
+        }
+        times = {m: _time_call(lambda fn=fn: fn(x, wt), reps=8)
+                 for m, fn in fns.items()}
+        base = times["conv_im2col"]
+        m_rows, k_dim = n * h * w_sz, c * k * k   # SAME/stride-1 geometry
+        for mode, us in times.items():
+            print(f"{mode},{tag},{m_rows},{k_dim},{cout},{us:.0f},"
+                  f"{base/us:.2f}x")
+            if records is not None:
+                records.append({"mode": mode, "conv": tag, "M": m_rows,
+                                "K": k_dim, "N": cout,
+                                "us_per_call": round(us, 1),
+                                "speedup_vs_im2col": round(base / us, 3)})
+
+
 def sharded_modes(records: list | None = None):
     """approx_dense under an active 2x4 host mesh vs replicated (docs/
     sharding.md). On the CPU interpreter the sharded numbers mostly measure
@@ -203,6 +249,7 @@ def main(argv=None):
     kernel_micro(kernel_records)
     section("layers")
     layer_modes(layer_records)
+    conv_modes(layer_records)
     section("sharded")
     sharded_modes(sharded_records)
 

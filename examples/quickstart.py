@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.core import error_stats, get_multiplier, make_acu
 from repro.core.acu import AcuMode
-from repro.core.approx_ops import ApproxConfig
+from repro.core.approx_ops import ApproxConfig, conv_plan_report
 from repro.data.pipeline import image_task
 from repro.models.vision import cnn_forward, init_cnn
 
@@ -23,6 +23,18 @@ task = image_task(n_classes=4, size=16)
 #    emulated bit-exactly through its VMEM look-up table
 print("multiplier stats:", error_stats(get_multiplier("mul8s_1L2H")))
 acfg = ApproxConfig(acu=make_acu("mul8s_1L2H", AcuMode.LUT))
+
+# which conv route will this model's first layer take? conv_plan resolves
+# (geometry x mode x fusion x mesh) before anything runs — the jnp-LUT ACU
+# lowers to eager im2col + LUT GEMM, while a Pallas ACU with fused=True
+# rides the patch-streaming fused kernel (docs/fused_conv.md)
+first_conv = dict(x_shape=(64, 3, 16, 16), w_shape=(8, 3, 3, 3))
+print("conv_plan (this ACU):   ", conv_plan_report(
+    first_conv["x_shape"], first_conv["w_shape"], acfg))
+fused_cfg = ApproxConfig(acu=make_acu("mul8s_1L2H", AcuMode.LUT,
+                                      use_pallas=True, fused=True))
+print("conv_plan (fused Pallas):", conv_plan_report(
+    first_conv["x_shape"], first_conv["w_shape"], fused_cfg))
 
 # 3. quick training (exact fp32), then accuracy under exact vs approx compute
 def accuracy(p, acfg=None, n=3):

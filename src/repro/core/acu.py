@@ -17,9 +17,12 @@ An :class:`Acu` packages one approximate multiplier with an emulation *mode*:
 
 All modes consume *shifted-code* integer operands (``code - zero_point``).
 
-Dispatch is two-level: :func:`matmul_plan` first resolves (mode, bits,
-use_pallas, fused) to a kernel, then — when a
-:class:`~repro.parallel.sharding.MeshContext` is active — wraps it in a
+Dispatch is two-level: :func:`matmul_plan` (dense GEMMs) and
+:func:`conv_plan` (conv2d sites, mirroring it at static geometry) first
+resolve (mode, bits, use_pallas, fused) to a kernel — the conv fused route
+is the patch-streaming ``kernels/fused_lut_conv`` kernel, which never
+materializes the im2col patch tensor — then, when a
+:class:`~repro.parallel.sharding.MeshContext` is active, wrap it in a
 ``shard_map`` over the production mesh (``parallel/acu_shard.py``): LUT
 replicated, rows over ``("pod", "data")``, columns over ``("model",)``,
 optional contraction sharding with an int32 psum before dequant. Every
@@ -321,6 +324,246 @@ def matmul_plan(acu: Acu, *, a_bits: Optional[int] = None,
         fn = acu_shard.wrap_unfused(fn, ctx, partition, acu.m00())
     return MatmulPlan(mode=acu.mode, bits=acu.bits, use_pallas=acu.use_pallas,
                       fused=False, fn=fn, partition=partition)
+
+
+# ---------------------------------------------------------------------------
+# conv planning layer: geometry x (mode, bits, use_pallas, fused) x mesh
+# ---------------------------------------------------------------------------
+
+def resolve_conv_padding(padding, x_shape, w_shape, stride, dilation
+                         ) -> tuple[tuple[int, int], tuple[int, int]]:
+    """Normalize SAME/VALID/explicit conv padding to per-edge pairs, with
+    XLA's SAME split (lo = total // 2) so every route — fused kernel, eager
+    im2col, exact lax.conv — sees identical geometry."""
+    if not isinstance(padding, str):
+        (p0, p1) = tuple(padding)
+        return (tuple(p0), tuple(p1))
+    if padding.upper() == "VALID":
+        return ((0, 0), (0, 0))
+    if padding.upper() != "SAME":
+        raise ValueError(f"unsupported padding {padding!r}")
+    pads = []
+    for d in range(2):
+        size = x_shape[2 + d]
+        eff_k = (w_shape[2 + d] - 1) * dilation[d] + 1
+        out = -(-size // stride[d])
+        total = max((out - 1) * stride[d] + eff_k - size, 0)
+        pads.append((total // 2, total - total // 2))
+    return (pads[0], pads[1])
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Static geometry of one conv2d site (hashable: plan / STE cache key).
+
+    ``x_shape``: (N, Cin, H, W); ``w_shape``: (Cout, Cin/groups, kh, kw);
+    ``padding``: explicit ((ph_lo, ph_hi), (pw_lo, pw_hi)) — use
+    :func:`resolve_conv_padding` to normalize SAME/VALID first.
+    """
+
+    x_shape: tuple[int, int, int, int]
+    w_shape: tuple[int, int, int, int]
+    stride: tuple[int, int] = (1, 1)
+    padding: tuple[tuple[int, int], tuple[int, int]] = ((0, 0), (0, 0))
+    dilation: tuple[int, int] = (1, 1)
+    groups: int = 1
+
+    @property
+    def out_spatial(self) -> tuple[int, int]:
+        from repro.kernels.fused_lut_conv.ops import conv_out_size
+        return (conv_out_size(self.x_shape[2], self.w_shape[2],
+                              self.stride[0], self.dilation[0],
+                              self.padding[0]),
+                conv_out_size(self.x_shape[3], self.w_shape[3],
+                              self.stride[1], self.dilation[1],
+                              self.padding[1]))
+
+    @property
+    def gemm_shape(self) -> tuple[int, int, int]:
+        """(M, K, N) of the implicit im2col GEMM."""
+        ho, wo = self.out_spatial
+        cout, cg, kh, kw = self.w_shape
+        return (self.x_shape[0] * ho * wo, cg * kh * kw, cout)
+
+
+# conservative per-core VMEM budget for the whole-image-resident fused conv
+# kernel; images whose working set exceeds it fall back to the eager route
+CONV_VMEM_BUDGET = 12 << 20
+
+
+def _conv_vmem_estimate(spec: ConvSpec, n_codes: int) -> int:
+    """Working-set bytes of the fused conv kernel at this geometry, using
+    the kernel's own tile picks (``pick_conv_tiling`` — one source of
+    truth)."""
+    from repro.kernels.fused_lut_conv.ops import pick_conv_tiling
+    _, c, h, w = spec.x_shape
+    cout, _, kh, kw = spec.w_shape
+    ho, wo = spec.out_spatial
+    inner, bh, bn = pick_conv_tiling(c, ho, wo, cout)
+    c_pad = c + (-c) % inner
+    hp = h + sum(spec.padding[0]) + bh * spec.stride[0]
+    wp = w + sum(spec.padding[1])
+    bm = bh * wo
+    return (8 * c_pad * hp * wp                # f32 image block + i32 scratch
+            + 4 * n_codes * n_codes            # LUT
+            + 4 * kh * kw * c_pad * bn         # tap-major weight codes
+            + 8 * bm * inner * bn              # gather: idx + prods tensors
+            + 8 * bm * c_pad                   # tap window + a_t tile
+            + 8 * bm * bn)                     # acc + out tile
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """A resolved conv2d route for one ACU at one static geometry.
+
+    ``route`` is one of
+
+    * ``"fused_conv"`` — the patch-streaming Pallas kernel
+      (``kernels/fused_lut_conv``): im2col, quantize, LUT-GEMM and dequant in
+      one pass, the patch tensor never materialized. ``fn(x, wq, xs, xz, ws)
+      -> (N, Ho, Wo, Cout) f32`` with ``x`` the float NCHW activations and
+      ``wq`` the (Cout, Cin, kh, kw) shifted weight codes; mesh-wrapped when
+      a partition is active (callers never change).
+    * ``"im2col"`` — eager patch extraction + the dense ``matmul_plan`` route
+      (which itself resolves fused/unfused x mesh). The audited fallback for
+      non-LUT modes, non-Pallas ACUs, and VMEM-exceeding images; also the
+      oracle the fused kernel is tested against. ``fn`` is None: the caller
+      composes quantize -> GEMM -> dequant as before.
+    * ``"im2col_depthwise"`` / ``"im2col_grouped"`` — the block-diagonal and
+      single-vmapped-GEMM group routes (PR 2 semantics, bitwise preserved).
+      ``fn`` is None.
+
+    ``partition`` is the ``acu_conv`` partition for the fused route (batch x
+    output-pixel rows over ``acu_conv_rows``, output channels over
+    ``acu_conv_cols``, opt-in input-channel contraction over ``acu_conv_k``),
+    or the dense GEMM partition the im2col routes will resolve. ``report``
+    carries every audited fallback decision.
+    """
+
+    mode: AcuMode
+    bits: int
+    use_pallas: bool
+    fused: bool
+    route: str
+    spec: ConvSpec
+    fn: Optional[Callable[..., Array]] = None
+    partition: Optional[object] = None
+    report: tuple[str, ...] = ()
+
+    def __call__(self, *args) -> Array:
+        assert self.fn is not None, f"route {self.route} has no direct kernel"
+        return self.fn(*args)
+
+    def describe(self) -> dict:
+        """Human-readable resolution report (examples/quickstart.py prints
+        this so users can see which path their model took)."""
+        part = self.partition
+        m, k, n = self.spec.gemm_shape
+        return {
+            "route": self.route,
+            "mode": self.mode.value,
+            "fused": self.fused,
+            "gemm": f"M={m} K={k} N={n}",
+            "partition": None if part is None else
+                f"rows{part.rows}x cols{part.cols}x k{part.k} "
+                f"({part.n_rows}x{part.n_cols}x{part.n_k} way)",
+            "report": list(self.report) + (list(part.report) if part else []),
+        }
+
+
+def conv_plan(acu: Acu, spec: ConvSpec, *, a_bits: Optional[int] = None,
+              fused: Optional[bool] = None, mesh=None,
+              route: Optional[str] = None) -> ConvPlan:
+    """Resolve one conv2d site: geometry x (mode, bits, use_pallas, fused) x
+    mesh -> a concrete route. Mirrors :func:`matmul_plan`, with the same
+    silent-but-audited fallback contract: a fused request that cannot be
+    served (groups, non-LUT mode, no Pallas, no table, VMEM) resolves to the
+    eager im2col route and records why in ``plan.report``.
+
+    ``route`` pins a route explicitly (``"im2col"`` forces the eager path —
+    the benchmark baseline and test oracle; ``"fused_conv"`` raises if the
+    kernel cannot serve the request instead of falling back).
+    """
+    fused = acu.fused if fused is None else fused
+    a_bits = acu.bits if a_bits is None else a_bits
+    ctx = _resolve_mesh(mesh)
+    report: list[str] = []
+
+    cout, cin_g, kh, kw = spec.w_shape
+    cin = spec.x_shape[1]
+    want_fused = fused or route == "fused_conv"
+    can_fuse = True
+    if spec.groups != 1:
+        can_fuse = False
+        if want_fused:
+            report.append(f"groups={spec.groups}: fused conv serves groups=1 "
+                          f"only; grouped route keeps the single-vmapped-GEMM "
+                          f"semantics")
+    if not (acu.mode == AcuMode.LUT and acu.use_pallas
+            and acu.lut is not None):
+        can_fuse = False
+        if want_fused and spec.groups == 1:
+            report.append(f"fused conv needs LUT mode + use_pallas + a built "
+                          f"table (have mode={acu.mode.value}, "
+                          f"use_pallas={acu.use_pallas})")
+    if can_fuse:
+        est = _conv_vmem_estimate(spec, acu.multiplier.n_codes)
+        if est > CONV_VMEM_BUDGET:
+            can_fuse = False
+            if want_fused:
+                report.append(f"image working set ~{est >> 20} MiB exceeds "
+                              f"the {CONV_VMEM_BUDGET >> 20} MiB VMEM "
+                              f"budget; falling back to eager im2col")
+
+    if route == "fused_conv" and not can_fuse:
+        raise ValueError(f"fused_conv route unavailable: {report}")
+    if route == "im2col":
+        can_fuse = False
+        report.append("route pinned to eager im2col by caller")
+    elif route not in (None, "fused_conv", "im2col"):
+        raise ValueError(f"unknown conv route {route!r}")
+
+    if (fused or route == "fused_conv") and can_fuse:
+        from repro.kernels.fused_lut_conv import ops as cops
+        from repro.parallel import acu_shard
+        partition = None
+        if ctx is not None:
+            partition = acu_shard.resolve_conv_partition(
+                ctx, float_accum=acu.mode == AcuMode.LOWRANK)
+        geom = dict(stride=spec.stride, padding=spec.padding,
+                    dilation=spec.dilation)
+
+        def fused_call(x, wq, xs, xz, ws, *, emit_acc=False):
+            # jnp.asarray stays inside: plans are cached across jit traces
+            return cops.fused_lut_conv(
+                x, wq, jnp.asarray(acu.lut), acu.offset, xs, xz, ws,
+                bits=a_bits, interpret=acu.interpret, emit_acc=emit_acc,
+                **geom)
+
+        fn = fused_call
+        if partition is not None:
+            fn = acu_shard.wrap_fused_conv(
+                fused_call,
+                lambda *args: fused_call(*args, emit_acc=True),
+                ctx, partition, acu.m00(), kh * kw)
+        return ConvPlan(mode=acu.mode, bits=acu.bits, use_pallas=True,
+                        fused=True, route="fused_conv", spec=spec, fn=fn,
+                        partition=partition, report=tuple(report))
+
+    if spec.groups == 1:
+        r = "im2col"
+    elif spec.groups == cin and cin_g == 1:
+        r = "im2col_depthwise"
+    else:
+        r = "im2col_grouped"
+    partition = None
+    if ctx is not None:
+        from repro.parallel import acu_shard
+        partition = acu_shard.resolve_partition(
+            ctx, float_accum=acu.mode == AcuMode.LOWRANK)
+    return ConvPlan(mode=acu.mode, bits=acu.bits, use_pallas=acu.use_pallas,
+                    fused=fused, route=r, spec=spec, partition=partition,
+                    report=tuple(report))
 
 
 def make_acu(name: str, mode: AcuMode | str = AcuMode.LUT, rank: int = 8,

@@ -191,7 +191,12 @@ def approx_dense(x: Array, w: Array, b: Optional[Array], cfg: Optional[ApproxCon
 
 
 # ---------------------------------------------------------------------------
-# Conv2D via im2col (paper §3.3.1) and separable conv (§3.3.2)
+# Conv2D (paper §3.3.1) and separable conv (§3.3.2)
+#
+# Every approximate conv resolves a ConvPlan (core/acu.py): the fused route
+# streams im2col patches inside one Pallas kernel (the patch tensor never
+# reaches HBM); the eager im2col composition below is the audited fallback
+# and the bit-exactness oracle.
 # ---------------------------------------------------------------------------
 
 def _im2col(x: Array, kh: int, kw: int, stride: Sequence[int],
@@ -206,33 +211,173 @@ def _im2col(x: Array, kh: int, kw: int, stride: Sequence[int],
     return patches.reshape(n, ckk, ho * wo).transpose(0, 2, 1), (ho, wo)
 
 
+def _conv_qparams(x: Array, w: Array, cfg: ApproxConfig,
+                  xqp: Optional[QParams], wqp: Optional[QParams]
+                  ) -> tuple[QParams, QParams]:
+    """Shared quantizers for the groups=1 conv routes: per-tensor activation
+    scale calibrated on the *input* (every patch entry is an input pixel or a
+    0.0 pad, and 0.0 never raises an amax, so the input bound covers the
+    patch tensor) and per-output-channel weight scales. Both the fused
+    patch-streaming route and the eager im2col oracle use exactly these, so
+    the two stay bitwise comparable end to end."""
+    from .quantization import symmetric_qparams
+    if xqp is None:
+        xqp = symmetric_qparams(jnp.maximum(jnp.max(jnp.abs(x)), 1e-6),
+                                cfg.a_bits)
+    if wqp is None:
+        wqp = symmetric_qparams(
+            jnp.maximum(jnp.max(jnp.abs(w), axis=(1, 2, 3)), 1e-9),
+            cfg.w_bits, axis=0)
+    return xqp, wqp
+
+
+def _get_conv_ste_fn(acu: Acu, a_bits: int, w_bits: int, plan, ctx=None):
+    """Per-(ACU, geometry) custom_vjp conv: fused patch-streaming forward,
+    exact STE backward.
+
+    ``plan`` is the caller's already-resolved fused-conv
+    :class:`~repro.core.acu.ConvPlan` (the route dispatches through it;
+    under an active mesh it runs sharded per the ``acu_conv`` partition).
+    The backward keeps explicit im2col — the weight-grad GEMM needs the
+    patch matrix — but its two GEMMs route through the same spec-matched
+    sharded wrappers as the dense STE (``gcols`` row-sharded like the output
+    pixels, ``gw`` column-sharded like the output channels), so sharded QAT
+    gradients stay bitwise identical to single-device ones.
+    """
+    assert plan.route == "fused_conv", plan.route
+    spec = plan.spec
+    key = ("conv", id(acu), a_bits, w_bits, spec, _mesh_cache_key(ctx))
+    if key in _STE_CACHE:
+        return _STE_CACHE[key]
+
+    cout, _, kh, kw = spec.w_shape
+    if plan.partition is not None:
+        from repro.parallel.acu_shard import bwd_gemms
+        gx_gemm, gw_gemm = bwd_gemms(ctx, plan.partition)
+    else:
+        gx_gemm = lambda g, wf: g @ wf.T
+        gw_gemm = lambda xf, g: xf.T @ g
+
+    @jax.custom_vjp
+    def ste_conv(x, w, xs, xz, ws, wz):
+        wqp = QParams(scale=ws, zero_point=wz, bits=w_bits, axis=0)
+        wq = acu_operand(quantize(w, wqp), wqp)
+        return plan(x, wq, xs, xz, ws)          # (N, Ho, Wo, Cout) f32
+
+    def fwd(x, w, xs, xz, ws, wz):
+        y = ste_conv(x, w, xs, xz, ws, wz)
+        xqp = QParams(scale=xs, zero_point=xz, bits=a_bits)
+        wqp = QParams(scale=ws, zero_point=wz, bits=w_bits, axis=0)
+        xf = fake_quantize(x, xqp).astype(x.dtype)
+        wf = fake_quantize(w, wqp).astype(w.dtype)
+        return y, (xf, wf)
+
+    def bwd(res, g):
+        xf, wf = res
+        g2 = g.reshape(-1, cout).astype(jnp.float32)        # (N*P, Cout)
+        wfmat = wf.reshape(cout, -1).T.astype(jnp.float32)  # (C*kh*kw, Cout)
+        colsf, col_vjp = jax.vjp(
+            lambda t: _im2col(t, kh, kw, spec.stride, spec.padding,
+                              spec.dilation)[0],
+            xf.astype(jnp.float32))
+        gcols = gx_gemm(g2, wfmat)                          # (N*P, C*kh*kw)
+        gw = gw_gemm(colsf.reshape(-1, colsf.shape[-1]), g2)
+        (gx,) = col_vjp(gcols.reshape(colsf.shape))
+        return (gx.astype(xf.dtype), gw.T.reshape(wf.shape).astype(wf.dtype),
+                None, None, None, None)
+
+    ste_conv.defvjp(fwd, bwd)
+    _STE_CACHE[key] = ste_conv
+    return ste_conv
+
+
+def conv_plan_report(x_shape: Sequence[int], w_shape: Sequence[int],
+                     cfg: ApproxConfig, *, stride: Sequence[int] = (1, 1),
+                     padding="SAME", dilation: Sequence[int] = (1, 1),
+                     groups: int = 1) -> dict:
+    """Resolve (without running) the conv route one layer would take under
+    the current mesh context — route, fusion, partition spec, and every
+    audited fallback. What ``examples/quickstart.py`` prints."""
+    from .acu import ConvSpec, conv_plan, resolve_conv_padding
+    stride, dilation = tuple(stride), tuple(dilation)
+    pad = resolve_conv_padding(padding, tuple(x_shape), tuple(w_shape),
+                               stride, dilation)
+    spec = ConvSpec(x_shape=tuple(x_shape), w_shape=tuple(w_shape),
+                    stride=stride, padding=pad, dilation=dilation,
+                    groups=groups)
+    fused = cfg.acu.fused if cfg.fused is None else cfg.fused
+    return conv_plan(cfg.acu, spec, a_bits=cfg.a_bits,
+                     fused=fused).describe()
+
+
 def conv2d(x: Array, w: Array, b: Optional[Array] = None, *,
            stride: Sequence[int] = (1, 1), padding="SAME",
            dilation: Sequence[int] = (1, 1), groups: int = 1,
-           cfg: Optional[ApproxConfig] = None) -> Array:
+           cfg: Optional[ApproxConfig] = None, route: Optional[str] = None,
+           xqp: Optional[QParams] = None, wqp: Optional[QParams] = None) -> Array:
     """2-D convolution with the full vanilla-PyTorch parameter surface
-    (stride/padding/dilation/groups), computed as im2col + (approx) GEMM.
+    (stride/padding/dilation/groups).
 
-    ``x``: (N, Cin, H, W); ``w``: (Cout, Cin/groups, kh, kw).
+    ``x``: (N, Cin, H, W); ``w``: (Cout, Cin/groups, kh, kw). With an
+    ``ApproxConfig`` the execution route is resolved by
+    :func:`~repro.core.acu.conv_plan`: LUT-mode Pallas ACUs stream im2col
+    patches inside one fused quantize->LUT-GEMM->dequant kernel; everything
+    else lowers to eager im2col + (approx) GEMM exactly as in the paper
+    (§3.3.1, Fig. 3). ``route="im2col"`` pins the eager path (benchmark
+    baseline / test oracle). ``xqp``/``wqp`` override the groups=1 quantizers
+    (``wqp`` per-output-channel, axis=0).
     """
     n, cin, _, _ = x.shape
     cout, cin_g, kh, kw = w.shape
     assert cin == cin_g * groups, (cin, cin_g, groups)
-    pad = padding if isinstance(padding, str) else tuple(padding)
 
     if cfg is None:
         # exact substrate path: native conv (XLA picks the fast algorithm)
+        pad = padding if isinstance(padding, str) else tuple(padding)
         y = jax.lax.conv_general_dilated(
             x, w, tuple(stride), pad, rhs_dilation=tuple(dilation),
             feature_group_count=groups,
             dimension_numbers=("NCHW", "OIHW", "NCHW"))
-    elif groups == 1:
+        if b is not None:
+            y = y + b.reshape(1, -1, 1, 1)
+        return y
+
+    from .acu import ConvSpec, conv_plan, resolve_conv_padding
+    stride, dilation = tuple(stride), tuple(dilation)
+    pad = resolve_conv_padding(padding, x.shape, w.shape, stride, dilation)
+    spec = ConvSpec(x_shape=tuple(x.shape), w_shape=tuple(w.shape),
+                    stride=stride, padding=pad, dilation=dilation,
+                    groups=groups)
+    if cfg.fake_quant_only:
+        # the fake-quant QAT path runs through approx_dense — the integer
+        # LUT kernel would silently break the fake_quantize(x)@fake_quantize(w)
+        # contract, so a pinned fused route is a caller error
+        if route == "fused_conv":
+            raise ValueError("route='fused_conv' contradicts "
+                             "cfg.fake_quant_only (the fused kernel runs the "
+                             "integer ACU GEMM, not fake-quant)")
+        route = "im2col"
+    fused = cfg.acu.fused if cfg.fused is None else cfg.fused
+    from repro.parallel.sharding import current_mesh_context
+    ctx = current_mesh_context()
+    plan = conv_plan(cfg.acu, spec, a_bits=cfg.a_bits, fused=fused,
+                     mesh=ctx or False, route=route)
+
+    if plan.route == "fused_conv":
+        xqp, wqp = _conv_qparams(x, w, cfg, xqp, wqp)
+        fn = _get_conv_ste_fn(cfg.acu, cfg.a_bits, cfg.w_bits, plan, ctx=ctx)
+        y = fn(x, w, xqp.scale, xqp.zero_point, wqp.scale, wqp.zero_point)
+        y = y.transpose(0, 3, 1, 2).astype(x.dtype)
+    elif plan.route == "im2col":
+        xqp, wqp = _conv_qparams(x, w, cfg, xqp, wqp)
         cols, (ho, wo) = _im2col(x, kh, kw, stride, pad, dilation)
         wmat = w.reshape(cout, -1).T                       # (C*kh*kw, Cout)
         m = cols.reshape(-1, cols.shape[-1])               # (N*Ho*Wo, C*kh*kw)
-        y = approx_dense(m, wmat, None, cfg)
+        wqp_mat = QParams(scale=wqp.scale, zero_point=wqp.zero_point,
+                          bits=wqp.bits, axis=1)
+        y = approx_dense(m, wmat, None, cfg, xqp=xqp, wqp=wqp_mat)
         y = y.reshape(n, ho, wo, cout).transpose(0, 3, 1, 2)
-    elif groups == cin and cin_g == 1:
+    elif plan.route == "im2col_depthwise":
         # depthwise through the ACU: single GEMM against a block-diagonal
         # weight. M[0, x] == 0 for every multiplier family here, so the
         # structural zeros are exact through the ACU.
@@ -267,7 +412,11 @@ def conv2d(x: Array, w: Array, b: Optional[Array] = None, *,
         y = yg.reshape(groups, n, ho * wo, cpg_out).transpose(1, 2, 0, 3)
         y = y.reshape(n, ho, wo, cout).transpose(0, 3, 1, 2)
     if b is not None:
-        y = y + b.reshape(1, -1, 1, 1)
+        # same best-effort as approx_dense: keep dequant-multiply and
+        # bias-add as two separate roundings across compilation contexts
+        # (residual 1-ulp FMA caveat under jitted mesh programs —
+        # docs/sharding.md)
+        y = pin_rounding(y) + b.reshape(1, -1, 1, 1)
     return y
 
 

@@ -1,0 +1,161 @@
+"""Pallas TPU kernel: patch-streaming im2col -> quantize -> LUT-GEMM -> dequant.
+
+One ``pallas_call`` for the whole approximate conv2d forward. The eager conv
+path materialized the (N*Ho*Wo, C*kh*kw) im2col patch tensor in HBM before
+handing it to ``fused_lut_dense`` — an HBM round-trip ``kh*kw`` times larger
+than the input itself. Here the patch tensor never exists anywhere: the
+BlockSpec index maps stream whole padded *images* (the raw input bytes, no
+duplication) into VMEM, and the kernel gathers each (stride, dilation)
+tap window straight out of the resident image.
+
+Grid: ``(N, Ho/bh, Cout/bn)`` — one step computes a ``(bh, Wo)`` strip of
+output rows for one image and one output-channel tile. Per image the float
+block is quantized ONCE into a persistent int32 VMEM scratch (at the first
+``(i, j)`` step for that ``n``), so the quantizer runs per input pixel — not
+per patch entry, which duplicates every pixel up to ``kh*kw`` times in the
+im2col formulation. Each grid step then loops over the ``kh*kw`` taps:
+
+1. **tap window slice (VPU)** — a strided ``lax.slice`` of the resident code
+   image picks the ``(C, bh, Wo)`` window for tap ``(u, v)`` under
+   (stride, dilation); transposed to a ``(bh*Wo, C)`` operand tile.
+2. **LUT gathers** — the (2^b, 2^b) product table is pinned in VMEM for the
+   whole grid (same trick as ``fused_lut_dense``); gathers run in ``inner``-
+   channel sub-slices against the tap's ``(C, bn)`` weight-code slab.
+3. **int32 accumulate** — taps and channel chunks add associatively, so the
+   accumulator equals the im2col GEMM's bit for bit, in any order.
+4. **affine dequant** — ``acc * (x_scale * w_scale[n])``, the same single
+   combined-scale multiply as ``fused_lut_dense``; the f32 output strip is
+   the only HBM store. ``emit_acc=True`` skips it and emits the raw int32
+   accumulator for the channel-contraction-sharded route.
+
+Channel padding (C up to a multiple of ``inner``) feeds shifted code 0
+through every tap, contributing ``kh*kw * LUT[off, off] = kh*kw * M[0, 0]``
+per padded channel per output; the correction is subtracted *in integer
+space* before dequant (``c_pad_corr``), exactly like the K-pad correction in
+the dense kernel. Spatial (SAME) padding needs NO correction: the im2col
+oracle also quantizes its 0.0 pad entries to shifted code 0, so both paths
+accumulate the same ``M[0, 0]`` terms and stay bit-exact.
+
+VMEM @ a VGG-ish layer (C=64, 34x34 padded, bh=8, Wo=32, bn=128, 8-bit):
+image block 295 KiB f32 + code scratch 295 KiB + LUT 256 KiB + weight slab
+(kh*kw, C, bn) 288 KiB + gather working set 256*32*128*4 = 4 MiB — inside
+16 MiB. The whole-image residency bounds this kernel to images that fit
+VMEM; ``conv_plan`` audits the estimate and falls back to the eager im2col
+route for larger ones.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, lut_ref, xs_ref, xz_ref, ws_ref, o_ref, aimg_ref, *,
+            offset: int, n_codes: int, lo: int, hi: int, inner: int,
+            kh: int, kw: int, sh: int, sw: int, dh: int, dw: int,
+            bh: int, wo: int, c_pad_corr: int, emit_acc: bool):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    xs = xs_ref[0]                                  # per-tensor activation scale
+    xz = xz_ref[0]                                  # activation zero-point (code)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _quantize_image():
+        # once per image (scratch persists across the (i, j) sub-grid): float
+        # image -> shifted codes in LUT index space. Spatial pad pixels are
+        # 0.0, which quantizes to the zero-point, i.e. index `offset` —
+        # exactly what the im2col oracle's 0.0 patch entries produce.
+        img = x_ref[...][0].astype(jnp.float32)     # (C, Hp, Wp)
+        q = jnp.clip(jnp.round(img / xs + xz), lo, hi).astype(jnp.int32)
+        aimg_ref[...] = q - xz.astype(jnp.int32) + offset
+
+    a_img = aimg_ref[...]                           # (C, Hp, Wp) index space
+    w = w_ref[...].astype(jnp.int32) + offset       # (kh*kw, C, bn)
+    lut = lut_ref[...]                              # (n_codes * n_codes,)
+    c = a_img.shape[0]
+    bn = w.shape[2]
+    bm = bh * wo
+    row0 = i * bh * sh                              # first input row this strip
+
+    acc = jnp.zeros((bm, bn), jnp.int32)
+    for t in range(kh * kw):                        # static tap loop
+        u, v = divmod(t, kw)
+        win = jax.lax.dynamic_slice(
+            a_img, (0, row0 + u * dh, v * dw),
+            (c, (bh - 1) * sh + 1, (wo - 1) * sw + 1))
+        win = jax.lax.slice(win, (0, 0, 0), win.shape, (1, sh, sw))  # (C, bh, wo)
+        a_t = win.transpose(1, 2, 0).reshape(bm, c)  # (bm, C) patch rows
+        w_t = w[t]                                   # (C, bn)
+
+        def body(ci, acc):
+            a_sl = jax.lax.dynamic_slice(a_t, (0, ci * inner), (bm, inner))
+            w_sl = jax.lax.dynamic_slice(w_t, (ci * inner, 0), (inner, bn))
+            idx = a_sl[:, :, None] * n_codes + w_sl[None, :, :]
+            prods = jnp.take(lut, idx.reshape(-1), unique_indices=False,
+                             indices_are_sorted=False).reshape(bm, inner, bn)
+            return acc + prods.sum(axis=1)
+
+        acc = jax.lax.fori_loop(0, c // inner, body, acc)
+
+    if c_pad_corr:  # padded channels contributed LUT[off, off] = M[0, 0]
+        acc = acc - c_pad_corr * lut[offset * n_codes + offset]
+    if emit_acc:
+        # channel-contraction sharding: partial int32 accumulators leave the
+        # kernel, psum across C shards, dequant once after the collective
+        o_ref[...] = acc.reshape(1, bh, wo, bn)
+    else:
+        # one combined-scale multiply, same expression as fused_lut_dense
+        out = acc.astype(jnp.float32) * (xs * ws_ref[...])
+        o_ref[...] = out.reshape(1, bh, wo, bn)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "offset", "n_codes", "lo", "hi", "inner", "kh", "kw", "sh", "sw",
+    "dh", "dw", "bh", "bn", "wo", "ho_pad", "c_pad_corr", "interpret",
+    "emit_acc"))
+def fused_lut_conv_kernel(xp: jnp.ndarray, wq: jnp.ndarray,
+                          lut_flat: jnp.ndarray, x_scale: jnp.ndarray,
+                          x_zp: jnp.ndarray, w_scale_row: jnp.ndarray, *,
+                          offset: int, n_codes: int, lo: int, hi: int,
+                          inner: int, kh: int, kw: int, sh: int, sw: int,
+                          dh: int, dw: int, bh: int, bn: int, wo: int,
+                          ho_pad: int, c_pad_corr: int = 0,
+                          interpret: bool = True,
+                          emit_acc: bool = False) -> jnp.ndarray:
+    """xp: (N, C, Hp, Wp) float, spatially pre-padded, C a multiple of
+    ``inner``; wq: (kh*kw, C, Cout) shifted int weight codes, tap-major;
+    lut_flat: (n_codes**2,) int32; x_scale/x_zp: shape-(1,) f32;
+    w_scale_row: (1, Cout) f32. Returns (N, ho_pad, Wo, Cout) float32 — or
+    the raw int32 accumulator with ``emit_acc=True``."""
+    n, c, hp, wp = xp.shape
+    cout = wq.shape[2]
+    assert c % inner == 0 and cout % bn == 0 and ho_pad % bh == 0, (
+        f"conv tiling mismatch: C={c}/inner={inner}, Cout={cout}/bn={bn}, "
+        f"Ho_pad={ho_pad}/bh={bh}")
+    grid = (n, ho_pad // bh, cout // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, offset=offset, n_codes=n_codes, lo=lo,
+                          hi=hi, inner=inner, kh=kh, kw=kw, sh=sh, sw=sw,
+                          dh=dh, dw=dw, bh=bh, wo=wo, c_pad_corr=c_pad_corr,
+                          emit_acc=emit_acc),
+        grid=grid,
+        in_specs=[
+            # the whole padded image streams in once per n (the block index
+            # is constant over the (i, j) sub-grid) — raw input bytes, never
+            # the kh*kw-times-larger patch tensor
+            pl.BlockSpec((1, c, hp, wp), lambda n, i, j: (n, 0, 0, 0)),
+            pl.BlockSpec((kh * kw, c, bn), lambda n, i, j: (0, 0, j)),
+            pl.BlockSpec((n_codes * n_codes,), lambda n, i, j: (0,)),
+            pl.BlockSpec((1,), lambda n, i, j: (0,)),
+            pl.BlockSpec((1,), lambda n, i, j: (0,)),
+            pl.BlockSpec((1, bn), lambda n, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bh, wo, bn), lambda n, i, j: (n, i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, ho_pad, wo, cout), jnp.int32 if emit_acc else jnp.float32),
+        scratch_shapes=[pltpu.VMEM((c, hp, wp), jnp.int32)],
+        interpret=interpret,
+    )(xp, wq, lut_flat, x_scale, x_zp, w_scale_row)

@@ -1,0 +1,114 @@
+"""jit'd public wrapper for the patch-streaming fused conv kernel.
+
+Resolves geometry and padding so every pad stays exact end to end:
+
+* **spatial padding** (explicit per-edge pairs, resolved from SAME/VALID by
+  the planning layer) uses 0.0, which the in-kernel quantizer maps to the
+  zero-point and hence to shifted code 0 — identical to the 0.0 entries the
+  im2col oracle's patch tensor carries, so no correction is needed;
+* **row padding** (Ho up to a multiple of the row-strip tile ``bh``) only
+  produces output rows that are sliced away; the input is padded tall enough
+  that the extra strips read zeros;
+* **channel padding** (C up to a multiple of the gather chunk ``inner``)
+  feeds shifted code 0 through every tap; the kernel subtracts
+  ``pad_c * kh * kw * LUT[off, off]`` from the int32 accumulator *before*
+  dequant (integer-space correction, like the dense kernel's K-pad);
+* **output-channel padding** (Cout up to a multiple of ``bn``) uses shifted
+  code 0 weights and scale 0 — discarded columns.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import fused_lut_conv_kernel
+
+
+def conv_out_size(size: int, k: int, stride: int, dilation: int,
+                  pad: tuple[int, int]) -> int:
+    """Output extent of one spatial dim under explicit padding."""
+    eff_k = (k - 1) * dilation + 1
+    return (size + pad[0] + pad[1] - eff_k) // stride + 1
+
+
+def pick_conv_tiling(c: int, ho: int, wo: int, cout: int, *,
+                     inner: int = 32, bh: int = 0, bn: int = 128
+                     ) -> tuple[int, int, int]:
+    """The (inner, bh, bn) tile sizes the kernel runs with at this geometry —
+    the single source of truth shared by :func:`fused_lut_conv` and the
+    planning layer's VMEM estimate (``core.acu._conv_vmem_estimate``), so
+    tuning one can never silently diverge from the other."""
+    inner = min(inner, c)
+    if bh <= 0:  # target ~256 patch rows per strip
+        bh = max(1, min(ho, 256 // max(wo, 1)))
+    bh = min(bh, ho)
+    bn = min(bn, cout)
+    return inner, bh, bn
+
+
+def fused_lut_conv(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
+                   offset: int, x_scale, x_zp, w_scale, *,
+                   stride=(1, 1), padding=((0, 0), (0, 0)), dilation=(1, 1),
+                   bits: int = 8, inner: int = 32, bh: int = 0, bn: int = 128,
+                   interpret: bool = True, emit_acc: bool = False
+                   ) -> jnp.ndarray:
+    """Fused approximate conv2d forward.
+
+    ``x``: (N, C, H, W) float activations; ``wq``: (Cout, C, kh, kw) shifted
+    int weight codes (``code - zero_point``); ``lut`` may be (n_codes,
+    n_codes) or flattened; ``x_scale``/``x_zp``: per-tensor activation
+    qparams; ``w_scale``: scalar or (Cout,) per-output-channel scale;
+    ``padding``: explicit ((ph_lo, ph_hi), (pw_lo, pw_hi)) pairs (resolve
+    SAME/VALID in the planning layer). Returns (N, Ho, Wo, Cout) float32,
+    bit-exact vs eager im2col + ``fused_lut_dense``. ``bh=0`` auto-picks the
+    output-row strip height. ``emit_acc=True`` returns the raw int32
+    accumulator (channel padding already corrected) for the
+    channel-contraction-sharded route.
+    """
+    n_codes = int(round(lut.size ** 0.5)) if lut.ndim == 1 else lut.shape[0]
+    lut_flat = lut.reshape(-1)
+    n, c, h, w_in = x.shape
+    cout, cin_w, kh, kw = wq.shape
+    assert cin_w == c, (cin_w, c)
+    sh, sw = stride
+    dh, dw = dilation
+    (ph0, ph1), (pw0, pw1) = padding
+    ho = conv_out_size(h, kh, sh, dh, (ph0, ph1))
+    wo = conv_out_size(w_in, kw, sw, dw, (pw0, pw1))
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+
+    inner, bh, bn = pick_conv_tiling(c, ho, wo, cout, inner=inner, bh=bh,
+                                     bn=bn)
+    pad_c = (-c) % inner
+    ho_pad = -(-ho // bh) * bh
+    pad_n = (-cout) % bn
+
+    # pad the image: conv padding + enough extra rows/cols that every tap of
+    # every (padded) output row stays in bounds
+    need_h = (ho_pad - 1) * sh + (kh - 1) * dh + 1
+    need_w = (wo - 1) * sw + (kw - 1) * dw + 1
+    extra_h = max(0, need_h - (h + ph0 + ph1))
+    extra_w = max(0, need_w - (w_in + pw0 + pw1))
+    xp = jnp.pad(x, ((0, 0), (0, pad_c), (ph0, ph1 + extra_h),
+                     (pw0, pw1 + extra_w)))
+
+    # weight codes to tap-major (kh*kw, C_pad, Cout_pad): each tap's (C, bn)
+    # slab is a contiguous block for the kernel's per-tap GEMM
+    wq_t = wq.transpose(2, 3, 1, 0).reshape(kh * kw, c, cout)
+    if pad_c or pad_n:
+        wq_t = jnp.pad(wq_t, ((0, 0), (0, pad_c), (0, pad_n)))
+
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(1)
+    xz = jnp.asarray(x_zp, jnp.float32).reshape(1)
+    ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(1, -1),
+                          (1, cout))
+    if pad_n:
+        ws = jnp.pad(ws, ((0, 0), (0, pad_n)))
+
+    out = fused_lut_conv_kernel(
+        xp, wq_t, lut_flat, xs, xz, ws,
+        offset=offset, n_codes=n_codes, lo=lo, hi=hi, inner=inner,
+        kh=kh, kw=kw, sh=sh, sw=sw, dh=dh, dw=dw, bh=bh, bn=bn, wo=wo,
+        ho_pad=ho_pad, c_pad_corr=pad_c * kh * kw, interpret=interpret,
+        emit_acc=emit_acc)
+    return out[:, :ho, :, :cout]

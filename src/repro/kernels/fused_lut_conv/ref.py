@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the patch-streaming fused conv kernel.
+
+The reference IS the retired eager path: materialize the im2col patch tensor,
+then run the fused dense reference (same quantizer expression, same int32
+accumulate, same single combined-scale dequant). The Pallas kernel must match
+it bit for bit — that equality is the whole contract of the refactor.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.fused_lut_dense.ref import fused_lut_dense_ref
+
+
+def fused_lut_conv_ref(x: jnp.ndarray, wq: jnp.ndarray, lut_flat: jnp.ndarray,
+                       offset: int, n_codes: int, x_scale, x_zp, w_scale, *,
+                       stride=(1, 1), padding=((0, 0), (0, 0)),
+                       dilation=(1, 1), bits: int = 8) -> jnp.ndarray:
+    """x: (N, C, H, W) float; wq: (Cout, C, kh, kw) shifted weight codes.
+    Returns (N, Ho, Wo, Cout) float32. O(N*P*C*kh*kw*Cout) memory — test
+    oracle only."""
+    # the oracle uses the SAME patch extraction as the production eager
+    # route — two copies could drift apart and green-light a broken
+    # bit-exactness claim
+    from repro.core.approx_ops import _im2col
+    cout, _, kh, kw = wq.shape
+    cols, (ho, wo) = _im2col(x, kh, kw, stride, padding, dilation)
+    m = cols.reshape(-1, cols.shape[-1])                 # (N*P, C*kh*kw)
+    wmat = wq.reshape(cout, -1).T                        # (C*kh*kw, Cout)
+    out = fused_lut_dense_ref(m, wmat, lut_flat, offset, n_codes,
+                              x_scale, x_zp, w_scale, bits=bits)
+    return out.reshape(x.shape[0], ho, wo, cout)

@@ -11,10 +11,34 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.approx_ops import ApproxConfig, approx_dense
+from repro.core.approx_ops import ApproxConfig, approx_dense, conv2d
 from repro.parallel.sharding import shard
 
 Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# conv building block (vision stacks, GAN generators, audio frontends)
+# ---------------------------------------------------------------------------
+
+def conv2d_block(x: Array, w: Array, b: Optional[Array] = None, *,
+                 stride=(1, 1), padding="SAME", dilation=(1, 1),
+                 groups: int = 1, acfg: Optional[ApproxConfig] = None,
+                 activation=None) -> Array:
+    """Conv2d + optional bias + optional activation — the shared conv
+    call site for every model in this package.
+
+    Routing is resolved per layer by :func:`repro.core.acu.conv_plan`:
+    LUT-mode Pallas ACUs run the fused patch-streaming
+    im2col->quantize->LUT-GEMM->dequant kernel (the patch tensor never
+    reaches HBM) and everything else takes the audited eager im2col
+    fallback; under an active mesh the plan shards batch x output-pixel
+    rows over ``acu_conv_rows`` and output channels over ``acu_conv_cols``.
+    ``acfg=None`` is the exact substrate conv.
+    """
+    y = conv2d(x, w, b, stride=stride, padding=padding, dilation=dilation,
+               groups=groups, cfg=acfg)
+    return y if activation is None else activation(y)
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.approx_ops import ApproxConfig, approx_dense, conv2d, separable_conv2d
+from repro.core.approx_ops import ApproxConfig, approx_dense, separable_conv2d
+from repro.models.layers import conv2d_block
 
 Array = jnp.ndarray
 
@@ -47,11 +48,11 @@ def cnn_forward(p: dict, x: Array, acfg: Optional[ApproxConfig] = None) -> Array
     """x: (N, C, 32, 32) -> logits (N, n_classes)."""
     pool = lambda t: jax.lax.reduce_window(
         t, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
-    x = jax.nn.relu(conv2d(x, p["c1"], p["b1"], cfg=acfg))
+    x = conv2d_block(x, p["c1"], p["b1"], acfg=acfg, activation=jax.nn.relu)
     x = pool(x)
-    x = jax.nn.relu(conv2d(x, p["c2"], p["b2"], cfg=acfg))
+    x = conv2d_block(x, p["c2"], p["b2"], acfg=acfg, activation=jax.nn.relu)
     x = pool(x)
-    x = jax.nn.relu(conv2d(x, p["c3"], p["b3"], cfg=acfg))
+    x = conv2d_block(x, p["c3"], p["b3"], acfg=acfg, activation=jax.nn.relu)
     x = pool(x)                                        # (N, 4w, 4, 4)
     x = x.reshape(x.shape[0], -1)
     x = jax.nn.relu(approx_dense(x, p["f1"], p["fb1"], acfg))
@@ -85,15 +86,16 @@ def init_resnet(key, n_classes: int = 10, width: int = 16, n_blocks: int = 3) ->
 
 def resnet_forward(p: dict, x: Array, acfg: Optional[ApproxConfig] = None,
                    n_blocks: int = 3) -> Array:
-    x = jax.nn.relu(conv2d(x, p["stem"], p["stem_b"], cfg=acfg))
+    x = conv2d_block(x, p["stem"], p["stem_b"], acfg=acfg, activation=jax.nn.relu)
     for stage in range(3):
         for blk in range(n_blocks):
             pre = f"s{stage}b{blk}"
             stride = (2, 2) if (blk == 0 and stage > 0) else (1, 1)
-            h = jax.nn.relu(conv2d(x, p[f"{pre}_c1"], None, stride=stride, cfg=acfg))
-            h = conv2d(h, p[f"{pre}_c2"], None, cfg=acfg)
-            sc = x if f"{pre}_sc" not in p else conv2d(
-                x, p[f"{pre}_sc"], None, stride=stride, padding="VALID", cfg=acfg)
+            h = conv2d_block(x, p[f"{pre}_c1"], None, stride=stride,
+                             acfg=acfg, activation=jax.nn.relu)
+            h = conv2d_block(h, p[f"{pre}_c2"], None, acfg=acfg)
+            sc = x if f"{pre}_sc" not in p else conv2d_block(
+                x, p[f"{pre}_sc"], None, stride=stride, padding="VALID", acfg=acfg)
             x = jax.nn.relu(h + sc)
     x = x.mean(axis=(2, 3))
     return approx_dense(x, p["head"], p["head_b"], acfg)
@@ -122,11 +124,15 @@ def init_squeezenet(key, n_classes: int = 10, width: int = 16) -> dict:
 def squeezenet_forward(p: dict, x: Array, acfg: Optional[ApproxConfig] = None) -> Array:
     pool = lambda t: jax.lax.reduce_window(
         t, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
-    x = pool(jax.nn.relu(conv2d(x, p["stem"], p["stem_b"], cfg=acfg)))
+    x = pool(conv2d_block(x, p["stem"], p["stem_b"], acfg=acfg,
+                          activation=jax.nn.relu))
     for i in range(3):
-        s = jax.nn.relu(conv2d(x, p[f"f{i}_s"], None, padding="VALID", cfg=acfg))
-        e1 = jax.nn.relu(conv2d(s, p[f"f{i}_e1"], None, padding="VALID", cfg=acfg))
-        e3 = jax.nn.relu(conv2d(s, p[f"f{i}_e3"], None, cfg=acfg))
+        s = conv2d_block(x, p[f"f{i}_s"], None, padding="VALID", acfg=acfg,
+                         activation=jax.nn.relu)
+        e1 = conv2d_block(s, p[f"f{i}_e1"], None, padding="VALID", acfg=acfg,
+                          activation=jax.nn.relu)
+        e3 = conv2d_block(s, p[f"f{i}_e3"], None, acfg=acfg,
+                          activation=jax.nn.relu)
         x = jnp.concatenate([e1, e3], axis=1)
         if i < 2:
             x = pool(x)

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from .planner import GemmPartition, acu_gemm_partition
+from .planner import GemmPartition, acu_conv_partition, acu_gemm_partition
 from .sharding import MeshContext
 
 Array = jnp.ndarray
@@ -40,6 +40,15 @@ def resolve_partition(ctx: MeshContext, *, float_accum: bool = False
     """Partition for the active mesh, or None when every axis is trivial
     (1x1 host mesh: the wrap would be a no-op, so the plan stays local)."""
     part, _ = acu_gemm_partition(ctx, float_accum=float_accum)
+    return part if part.total > 1 else None
+
+
+def resolve_conv_partition(ctx: MeshContext, *, float_accum: bool = False
+                           ) -> Optional[GemmPartition]:
+    """The ``acu_conv`` partition for the active mesh (rows = batch x
+    output pixels, cols = output channels, k = input channels), or None when
+    every axis is trivial."""
+    part, _ = acu_conv_partition(ctx, float_accum=float_accum)
     return part if part.total > 1 else None
 
 
@@ -127,6 +136,77 @@ def wrap_fused(fused_call: Callable[..., Array],
             out_specs=part.out_spec(), check_rep=False,
         )(x_p, wq_p, xs_a, xz_a, ws_p)
         return out[:M, :N]
+
+    return fn
+
+
+def wrap_fused_conv(conv_call: Callable[..., Array],
+                    acc_call: Callable[..., Array], ctx: MeshContext,
+                    part: GemmPartition, m00: int, n_taps: int
+                    ) -> Callable[..., Array]:
+    """Shard a fused patch-streaming conv plan
+    ``fn(x, wq, xs, xz, ws) -> (N, Ho, Wo, Cout) f32``.
+
+    ``x``: (N, C, H, W) float; ``wq``: (Cout, C, kh, kw) shifted weight
+    codes. The batch dim shards over ``part.rows`` (the output-pixel rows of
+    the implicit im2col GEMM follow their image), output channels over
+    ``part.cols``, and the LUT replicates — every shard runs the full fused
+    kernel on its (batch, Cout) tile, so there are no collectives and the
+    wrap is bit-exact by construction. With ``part.k`` the *input channels*
+    split: each shard's kernel emits its raw int32 partial accumulator
+    (``acc_call``), partials psum in integer space, and the global
+    channel-shard-padding correction — ``pad_c * n_taps * M[0, 0]``, one
+    ``M[0, 0]`` per padded channel per kernel tap — lands exactly once,
+    after the collective, before the single combined-scale dequant.
+
+    ``n_taps`` is ``kh * kw`` (each padded channel feeds every tap).
+    """
+    mesh = ctx.mesh
+
+    def fn(x: Array, wq: Array, xs, xz, ws) -> Array:
+        n, c = x.shape[0], x.shape[1]
+        cout = wq.shape[0]
+        pb = (-n) % part.n_rows
+        pk = (-c) % part.n_k
+        pn = (-cout) % part.n_cols
+        if pb or pk:
+            x = jnp.pad(x, ((0, pb), (0, pk), (0, 0), (0, 0)))
+        if pn or pk:  # pad channels: shifted code 0; pad couts: discarded
+            wq = jnp.pad(wq, ((0, pn), (0, pk), (0, 0), (0, 0)))
+        ws_row = jnp.broadcast_to(
+            jnp.asarray(ws, jnp.float32).reshape(1, -1), (1, cout))
+        if pn:
+            ws_row = jnp.pad(ws_row, ((0, 0), (0, pn)))
+        xs_a = jnp.asarray(xs, jnp.float32).reshape(1)
+        xz_a = jnp.asarray(xz, jnp.float32).reshape(1)
+
+        rows = part._dim(part.rows)
+        cols = part._dim(part.cols)
+        kdim = part._dim(part.k)
+
+        if not part.k:
+            def local(x_blk, wq_blk, xs_b, xz_b, ws_blk):
+                return conv_call(x_blk, wq_blk, xs_b, xz_b, ws_blk[0])
+        else:
+            def local(x_blk, wq_blk, xs_b, xz_b, ws_blk):
+                acc = acc_call(x_blk, wq_blk, xs_b, xz_b, ws_blk[0])
+                acc = jax.lax.psum(acc, part.k)
+                if pk and m00:
+                    # global channel-shard-padding correction: each padded
+                    # channel contributed m00 through every tap, to exactly
+                    # one channel shard — corrected once, after the psum
+                    acc = acc - jnp.asarray(pk * n_taps * m00, acc.dtype)
+                # same single combined-scale multiply as the in-kernel dequant
+                return acc.astype(jnp.float32) * \
+                    (xs_b[0] * ws_blk).reshape(1, 1, 1, -1)
+
+        out = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(rows, kdim, None, None), P(cols, kdim, None, None),
+                      P(None), P(None), P(None, cols)),
+            out_specs=P(rows, None, None, cols), check_rep=False,
+        )(x, wq, xs_a, xz_a, ws_row)
+        return out[:n, :, :, :cout]
 
     return fn
 

@@ -301,6 +301,38 @@ def acu_gemm_partition(ctx, *, float_accum: bool = False
     return part, report
 
 
+def acu_conv_partition(ctx, *, float_accum: bool = False
+                       ) -> tuple[GemmPartition, list[str]]:
+    """The ``acu_conv`` partition rule: resolve ``acu_conv_rows`` /
+    ``acu_conv_cols`` / ``acu_conv_k`` into a :class:`GemmPartition` for one
+    approximate conv — ``rows`` shards the batch x output-pixel dim (the GEMM
+    M of the implicit im2col), ``cols`` the output channels, ``k`` the
+    input-channel contraction (opt-in; int32 psum before dequant). The
+    product LUT is always replicated (``acu_lut``). Same audited-fallback
+    discipline as :func:`acu_gemm_partition`: one mesh axis per conv dim,
+    ``k`` claims first, and a float accumulator (LOWRANK) drops ``k``.
+    """
+    report: list[str] = []
+    k = ctx.axes_for("acu_conv_k")
+    if k and float_accum:
+        report.append("acu_conv_k dropped: float accumulator (LOWRANK) "
+                      "cannot psum bit-exactly; channels replicated")
+        k = ()
+    used = set(k)
+    cols = tuple(a for a in ctx.axes_for("acu_conv_cols") if a not in used)
+    if len(cols) != len(ctx.axes_for("acu_conv_cols")):
+        report.append("acu_conv_cols overlaps acu_conv_k -> shared axes "
+                      "dropped from cols (contraction sharding wins)")
+    used.update(cols)
+    rows = tuple(a for a in ctx.axes_for("acu_conv_rows") if a not in used)
+    part = GemmPartition(rows=rows, cols=cols, k=k,
+                         n_rows=ctx.axis_prod(rows),
+                         n_cols=ctx.axis_prod(cols),
+                         n_k=ctx.axis_prod(k),
+                         report=tuple(report))
+    return part, report
+
+
 def opt_state_specs(param_plan: Plan, opt_state) -> Any:
     """Optimizer moments shard exactly like their params; scalars replicate."""
     pspecs = param_plan.specs

@@ -49,6 +49,13 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "acu_cols": ("model",),        # weight / output columns (N)
     "acu_k": (),                   # contraction dim (K); empty = replicated
     "acu_lut": (),                 # product table: always replicated
+    # ---- approximate conv (core/acu.py conv_plan routes): the "acu_conv"
+    # partition rule family. Batch x output-pixel rows shard like tokens,
+    # output channels like any TP output dim; "acu_conv_k" opts in to
+    # input-channel contraction sharding (int32 psum before dequant).
+    "acu_conv_rows": ("pod", "data"),  # batch x output-pixel rows
+    "acu_conv_cols": ("model",),       # output channels (Cout)
+    "acu_conv_k": (),                  # input channels (C); empty = replicated
 }
 
 

@@ -1,4 +1,4 @@
-"""Serving engine: batched prefill + KV-cache decode.
+"""Serving engines: batched LM prefill/decode and batched vision inference.
 
 Requests are served in *waves*: up to ``slots`` prompts are padded to a
 common length, prefilled in one batched call, then decoded in lockstep (one
@@ -114,3 +114,52 @@ class ServeEngine:
                                     max_new_tokens=1))
             self._wave(wave, on_token)
         return requests
+
+
+class VisionServeEngine:
+    """Batched image-inference serving: fixed-size waves through one jitted
+    forward, mesh-aware like :class:`ServeEngine`.
+
+    ``forward_fn(params, images, acfg) -> logits`` is any vision model
+    forward (``repro.models.vision.cnn_forward`` / ``resnet_forward`` / ...);
+    every conv inside it resolves a :func:`~repro.core.acu.conv_plan`, so
+    with a LUT-Pallas ``acfg`` the whole stack rides the fused
+    patch-streaming conv kernel, and with ``mesh=...`` the waves run under
+    the ``acu_conv`` partition (batch over ``("pod", "data")``, output
+    channels over ``("model",)``) — bit-for-bit the single-device logits.
+    """
+
+    def __init__(self, params, forward_fn: Callable, *, slots: int = 8,
+                 acfg=None, mesh=None):
+        self.params = params
+        self.slots = slots
+        if mesh is None:
+            self._mesh_scope = contextlib.nullcontext
+        elif isinstance(mesh, MeshContext):
+            self._mesh_scope = lambda: use_mesh_context(mesh)
+        else:
+            self._mesh_scope = lambda: use_mesh(mesh)
+        self._infer = jax.jit(lambda p, imgs: forward_fn(p, imgs, acfg))
+
+    def plan_report(self, image_shape, w_shape, acfg, **geom) -> dict:
+        """The conv route one layer takes under this engine's mesh scope
+        (see :func:`repro.core.approx_ops.conv_plan_report`)."""
+        from repro.core.approx_ops import conv_plan_report
+        with self._mesh_scope():
+            return conv_plan_report(image_shape, w_shape, acfg, **geom)
+
+    def run(self, images: np.ndarray) -> np.ndarray:
+        """images: (B, C, H, W) -> logits (B, n_classes), served in waves of
+        ``slots`` (the last wave zero-padded and sliced)."""
+        b = images.shape[0]
+        outs = []
+        for i in range(0, b, self.slots):
+            wave = np.asarray(images[i:i + self.slots], np.float32)
+            pad = self.slots - wave.shape[0]
+            if pad:
+                wave = np.concatenate(
+                    [wave, np.zeros((pad, *wave.shape[1:]), wave.dtype)])
+            with self._mesh_scope():
+                logits = self._infer(self.params, jnp.asarray(wave))
+            outs.append(np.asarray(logits)[:self.slots - pad])
+        return np.concatenate(outs, axis=0)

@@ -1,0 +1,278 @@
+"""Patch-streaming fused conv: bit-exactness vs the eager im2col +
+``fused_lut_dense`` oracle — the exact path the kernel retired.
+
+"Bit-exact" is literal float equality: the fused kernel must perform the
+same per-pixel quantize, the same int32 accumulate (taps and channel chunks
+add associatively; channel padding corrected in *integer* space), and the
+same single combined-scale dequant as the eager route. ``conv2d(...,
+route="im2col")`` pins that oracle with the same quantizers, so the two
+public routes are comparable end to end — eager and jit, with bias, and
+through the STE backward.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_lut, get_multiplier, make_acu
+from repro.core.acu import (AcuMode, ConvSpec, conv_plan,
+                            resolve_conv_padding)
+from repro.core.approx_ops import ApproxConfig, conv2d, conv_plan_report
+from repro.core.multipliers import make_exact
+from repro.core.quantization import acu_operand, quantize, symmetric_qparams
+from repro.kernels.fused_lut_conv.ops import fused_lut_conv
+from repro.kernels.fused_lut_conv.ref import fused_lut_conv_ref
+
+MULT = get_multiplier("mul8s_1L2H")
+LUT = jnp.asarray(build_lut(MULT))
+ACU_FUSED = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True, fused=True)
+CFG = ApproxConfig(acu=ACU_FUSED)
+
+
+def _conv_operands(shape, wshape, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    w = jnp.asarray(rng.normal(size=wshape), jnp.float32)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# kernel vs its own pure-jnp reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("geom", [
+    # (x_shape, w_shape, stride, padding, dilation)
+    ((2, 3, 12, 12), (5, 3, 3, 3), (1, 1), "SAME", (1, 1)),
+    ((1, 8, 9, 9), (4, 8, 3, 3), (2, 2), "SAME", (1, 1)),      # stride > 1
+    ((2, 5, 10, 10), (6, 5, 3, 3), (1, 1), "SAME", (2, 2)),    # dilation > 1
+    ((1, 6, 11, 5), (9, 6, 3, 3), (2, 1), "VALID", (1, 1)),    # mixed stride
+    ((1, 4, 7, 7), (3, 4, 1, 1), (1, 1), "VALID", (1, 1)),     # pointwise
+    ((2, 40, 6, 6), (7, 40, 3, 3), (1, 1), "SAME", (1, 1)),    # C pad to inner
+    ((1, 3, 13, 13), (5, 3, 5, 5), (3, 3), "SAME", (1, 1)),    # 5x5, stride 3
+])
+def test_kernel_matches_ref(geom):
+    """Edge geometry sweep: stride>1, dilation>1, non-divisible spatial
+    tiles, channel padding — kernel output equals the im2col oracle
+    bitwise."""
+    shape, wshape, stride, padding, dilation = geom
+    x, w = _conv_operands(shape, wshape, seed=sum(shape))
+    pad = resolve_conv_padding(padding, shape, wshape, stride, dilation)
+    xqp = symmetric_qparams(jnp.max(jnp.abs(x)), 8)
+    wqp = symmetric_qparams(
+        jnp.maximum(jnp.max(jnp.abs(w), axis=(1, 2, 3)), 1e-9), 8, axis=0)
+    wq = acu_operand(quantize(w, wqp), wqp)
+    out = fused_lut_conv(x, wq, LUT, 128, xqp.scale, xqp.zero_point,
+                         wqp.scale, stride=stride, padding=pad,
+                         dilation=dilation, bits=8, interpret=True)
+    ref = fused_lut_conv_ref(x, wq, LUT.reshape(-1), 128, 256, xqp.scale,
+                             xqp.zero_point, wqp.scale, stride=stride,
+                             padding=pad, dilation=dilation, bits=8)
+    assert jnp.array_equal(out, ref)
+
+
+def test_kernel_biased_m00_channel_pad():
+    """Channel padding contributes kh*kw * LUT[off, off] = kh*kw * M[0, 0]
+    per padded channel; the kernel must subtract it in integer space.
+    Exercised with a synthetic multiplier whose M[0, 0] = 7 (every
+    registered family has M[0, 0] == 0) at C=5, which pads to the gather
+    chunk."""
+    biased = dataclasses.replace(
+        make_exact(8), name="mul8s_biased",
+        fn=lambda a, w: a.astype(jnp.int32) * w.astype(jnp.int32) + 7)
+    lut = jnp.asarray(build_lut(biased))
+    assert int(lut[128, 128]) == 7
+    x, w = _conv_operands((2, 5, 7, 7), (4, 5, 3, 3), seed=5)
+    xqp = symmetric_qparams(jnp.max(jnp.abs(x)), 8)
+    wqp = symmetric_qparams(
+        jnp.maximum(jnp.max(jnp.abs(w), axis=(1, 2, 3)), 1e-9), 8, axis=0)
+    wq = acu_operand(quantize(w, wqp), wqp)
+    pad = ((1, 1), (1, 1))
+    out = fused_lut_conv(x, wq, lut, 128, xqp.scale, xqp.zero_point,
+                         wqp.scale, padding=pad, bits=8, interpret=True)
+    ref = fused_lut_conv_ref(x, wq, lut.reshape(-1), 128, 256, xqp.scale,
+                             xqp.zero_point, wqp.scale, padding=pad, bits=8)
+    assert jnp.array_equal(out, ref)
+
+
+def test_kernel_emit_acc_is_raw_accumulator():
+    """emit_acc=True returns the int32 accumulator (channel padding already
+    corrected) — what the channel-contraction route psums — and dequantizing
+    it reproduces the normal output bitwise."""
+    x, w = _conv_operands((1, 6, 8, 8), (5, 6, 3, 3), seed=13)
+    xqp = symmetric_qparams(jnp.max(jnp.abs(x)), 8)
+    wqp = symmetric_qparams(
+        jnp.maximum(jnp.max(jnp.abs(w), axis=(1, 2, 3)), 1e-9), 8, axis=0)
+    wq = acu_operand(quantize(w, wqp), wqp)
+    pad = ((1, 1), (1, 1))
+    acc = fused_lut_conv(x, wq, LUT, 128, xqp.scale, xqp.zero_point,
+                         wqp.scale, padding=pad, bits=8, interpret=True,
+                         emit_acc=True)
+    assert acc.dtype == jnp.int32
+    out = fused_lut_conv(x, wq, LUT, 128, xqp.scale, xqp.zero_point,
+                         wqp.scale, padding=pad, bits=8, interpret=True)
+    dq = acc.astype(jnp.float32) * \
+        (xqp.scale * wqp.scale.reshape(1, 1, 1, -1))
+    assert jnp.array_equal(out, dq)
+
+
+# ---------------------------------------------------------------------------
+# public conv2d: fused route vs the pinned eager-im2col oracle route
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("geom", [
+    ((2, 3, 12, 12), (5, 3, 3, 3), dict()),
+    ((1, 8, 9, 9), (4, 8, 3, 3), dict(stride=(2, 2))),
+    ((2, 5, 10, 10), (6, 5, 3, 3), dict(dilation=(2, 2))),
+    ((1, 6, 11, 5), (9, 6, 3, 3), dict(stride=(2, 1), padding="VALID")),
+    ((1, 4, 7, 7), (3, 4, 1, 1), dict(padding="VALID")),
+])
+def test_conv2d_fused_equals_im2col_route(geom):
+    """End to end with bias, eager AND jit: conv2d through the fused plan
+    equals conv2d pinned to the eager im2col route, bitwise, within each
+    execution regime."""
+    shape, wshape, kw_ = geom
+    x, w = _conv_operands(shape, wshape, seed=sum(shape) + 1)
+    b = jnp.asarray(np.random.default_rng(9).normal(size=(wshape[0],)),
+                    jnp.float32)
+    y_f = conv2d(x, w, b, cfg=CFG, **kw_)
+    y_o = conv2d(x, w, b, cfg=CFG, route="im2col", **kw_)
+    assert jnp.array_equal(y_f, y_o)
+    j_f = jax.jit(lambda x, w, b: conv2d(x, w, b, cfg=CFG, **kw_))(x, w, b)
+    j_o = jax.jit(lambda x, w, b: conv2d(x, w, b, cfg=CFG, route="im2col",
+                                         **kw_))(x, w, b)
+    assert jnp.array_equal(j_f, j_o)
+
+
+def test_conv2d_grouped_keeps_vmapped_gemm_route():
+    """groups>1 resolves to the single-vmapped-GEMM route (PR 2 semantics)
+    and still matches lax.conv to quantization tolerance."""
+    x, w = _conv_operands((2, 8, 8, 8), (8, 4, 3, 3), seed=3)
+    spec = ConvSpec(x_shape=(2, 8, 8, 8), w_shape=(8, 4, 3, 3),
+                    padding=((1, 1), (1, 1)), groups=2)
+    plan = conv_plan(ACU_FUSED, spec, fused=True)
+    assert plan.route == "im2col_grouped"
+    assert any("groups" in r for r in plan.report)
+    cfg12 = ApproxConfig(acu=make_acu("mul12s_exact", AcuMode.EXACT),
+                         a_bits=12, w_bits=12)
+    ours = conv2d(x, w, groups=2, cfg=cfg12)
+    ref = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", feature_group_count=2,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    rel = float(jnp.abs(ours - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 5e-3
+
+
+def test_conv2d_ste_backward_matches_im2col_route():
+    """QAT: gradients through the fused forward are bitwise identical to the
+    eager route's STE gradients (same fake-quant residuals, same GEMMs)."""
+    x, w = _conv_operands((2, 3, 8, 8), (5, 3, 3, 3), seed=4)
+
+    def loss(x, w, route):
+        return (conv2d(x, w, None, cfg=CFG, route=route) ** 2).sum()
+
+    gx_f, gw_f = jax.grad(loss, argnums=(0, 1))(x, w, None)
+    gx_o, gw_o = jax.grad(loss, argnums=(0, 1))(x, w, "im2col")
+    assert jnp.array_equal(gx_f, gx_o)
+    assert jnp.array_equal(gw_f, gw_o)
+
+
+# ---------------------------------------------------------------------------
+# plan resolution
+# ---------------------------------------------------------------------------
+
+def test_conv_plan_routing():
+    spec = ConvSpec(x_shape=(2, 3, 12, 12), w_shape=(5, 3, 3, 3),
+                    padding=((1, 1), (1, 1)))
+    assert conv_plan(ACU_FUSED, spec).route == "fused_conv"
+    assert conv_plan(ACU_FUSED, spec, fused=False).route == "im2col"
+    # non-Pallas LUT: audited fallback
+    jnp_acu = make_acu("mul8s_1L2H", AcuMode.LUT)
+    plan = conv_plan(jnp_acu, spec, fused=True)
+    assert plan.route == "im2col"
+    assert any("use_pallas" in r for r in plan.report)
+    # FUNCTIONAL mode can't fuse either
+    func = make_acu("mul8s_1L2H", AcuMode.FUNCTIONAL, use_pallas=True)
+    assert conv_plan(func, spec, fused=True).route == "im2col"
+    # depthwise keeps its block-diagonal route
+    dspec = ConvSpec(x_shape=(2, 6, 8, 8), w_shape=(6, 1, 3, 3),
+                     padding=((1, 1), (1, 1)), groups=6)
+    assert conv_plan(ACU_FUSED, dspec).route == "im2col_depthwise"
+    # pinning fused_conv on an unservable request raises instead of falling
+    with pytest.raises(ValueError):
+        conv_plan(jnp_acu, spec, route="fused_conv")
+
+
+def test_conv2d_route_pin_fused_on_unfused_cfg():
+    """route="fused_conv" forces the fused kernel even when the config
+    doesn't default to fusion — and matches the fused-by-default result
+    bitwise (same plan, same quantizers)."""
+    x, w = _conv_operands((1, 3, 8, 8), (4, 3, 3, 3), seed=6)
+    plain = ApproxConfig(acu=make_acu("mul8s_1L2H", AcuMode.LUT,
+                                      use_pallas=True))  # fused=False default
+    y_pin = conv2d(x, w, None, cfg=plain, route="fused_conv")
+    y_def = conv2d(x, w, None, cfg=CFG)
+    assert jnp.array_equal(y_pin, y_def)
+
+
+def test_conv2d_fake_quant_only_never_hits_the_integer_kernel():
+    """fake_quant_only must run the fake-quant QAT forward on every route:
+    the default pins the eager path, and pinning the fused route explicitly
+    is a caller error, not a silent integer-GEMM forward."""
+    x, w = _conv_operands((1, 3, 6, 6), (4, 3, 3, 3), seed=2)
+    fq = ApproxConfig(acu=ACU_FUSED, fake_quant_only=True)
+    y = conv2d(x, w, None, cfg=fq)
+    y_ref = conv2d(x, w, None, cfg=ApproxConfig(
+        acu=make_acu("mul8s_1L2H", AcuMode.LUT), fake_quant_only=True))
+    assert jnp.array_equal(y, y_ref)
+    with pytest.raises(ValueError):
+        conv2d(x, w, None, cfg=fq, route="fused_conv")
+
+
+def test_conv_plan_vmem_fallback():
+    """Images whose whole-image working set exceeds the VMEM budget fall
+    back to the eager route with an audited report."""
+    spec = ConvSpec(x_shape=(1, 64, 224, 224), w_shape=(64, 64, 3, 3),
+                    padding=((1, 1), (1, 1)))
+    plan = conv_plan(ACU_FUSED, spec, fused=True)
+    assert plan.route == "im2col"
+    assert any("VMEM" in r for r in plan.report)
+
+
+def test_conv_plan_report_shape():
+    rep = conv_plan_report((2, 3, 12, 12), (5, 3, 3, 3), CFG)
+    assert rep["route"] == "fused_conv" and rep["fused"]
+    assert rep["partition"] is None          # no active mesh
+    assert rep["gemm"] == "M=288 K=27 N=5"
+
+
+def test_resolve_conv_padding_matches_xla_same():
+    """Our SAME split must agree with XLA's (lo = total // 2) so the fused
+    kernel, the eager patches route, and lax.conv see identical geometry."""
+    for (hw, k, s, d) in [((12, 12), 3, (1, 1), (1, 1)),
+                          ((9, 9), 3, (2, 2), (1, 1)),
+                          ((10, 7), 5, (2, 3), (2, 1))]:
+        x_shape = (1, 2, *hw)
+        w_shape = (3, 2, k, k)
+        pad = resolve_conv_padding("SAME", x_shape, w_shape, s, d)
+        x = jnp.zeros(x_shape)
+        w = jnp.zeros(w_shape)
+        args = dict(window_strides=s, rhs_dilation=d,
+                    dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        ref = jax.lax.conv_general_dilated(x, w, padding="SAME", **args)
+        ours = jax.lax.conv_general_dilated(x, w, padding=pad, **args)
+        assert ours.shape == ref.shape, (hw, k, s, d, pad)
+
+
+def test_conv2d_separable_still_works():
+    """separable_conv2d composes the depthwise and pointwise plans; the
+    pointwise half rides the fused kernel."""
+    x, _ = _conv_operands((1, 4, 8, 8), (1, 1, 1, 1), seed=8)
+    rng = np.random.default_rng(8)
+    wdw = jnp.asarray(rng.normal(size=(4, 1, 3, 3)), jnp.float32)
+    wpw = jnp.asarray(rng.normal(size=(6, 4, 1, 1)), jnp.float32)
+    from repro.core.approx_ops import separable_conv2d
+    out = separable_conv2d(x, wdw, wpw, cfg=CFG)
+    assert out.shape == (1, 6, 8, 8)
+    assert bool(jnp.isfinite(out).all())

@@ -193,3 +193,117 @@ def test_acu_matmul_mesh_aware(mesh):
     with use_mesh(mesh):
         out = acu.matmul(a, w)
     assert jnp.array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# conv_plan routes (the acu_conv partition rule)
+# ---------------------------------------------------------------------------
+
+FUSED_CONV_ACU = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True,
+                          fused=True)
+
+
+@pytest.mark.parametrize("geom", [
+    ((3, 5, 9, 9), (9, 5, 3, 3), dict()),                       # odd N, Cout
+    ((2, 8, 10, 10), (8, 8, 3, 3), dict(stride=(2, 2))),
+    ((4, 6, 7, 7), (12, 6, 3, 3), dict(dilation=(2, 2))),
+])
+def test_fused_conv_sharded_bit_exact(mesh, geom):
+    """The patch-streaming fused conv under the mesh (batch over data,
+    output channels over model, LUT replicated) equals the single-device
+    result bitwise — incl. batch/Cout that don't divide the axes, eager
+    (with bias) and jit (without: the SPMD partitioner can FMA-contract the
+    bias add by 1 ulp — the same documented caveat as the dense layer,
+    docs/sharding.md; the GEMM+dequant itself is always bitwise)."""
+    shape, wshape, kw_ = geom
+    rng = np.random.default_rng(sum(shape))
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    w = jnp.asarray(rng.normal(size=wshape), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(wshape[0],)), jnp.float32)
+    cfg = ApproxConfig(acu=FUSED_CONV_ACU)
+    ref = conv2d(x, w, b, cfg=cfg, **kw_)
+    ref_j = jax.jit(lambda x, w: conv2d(x, w, None, cfg=cfg, **kw_))(x, w)
+    with use_mesh(mesh):
+        from repro.core.acu import ConvSpec, conv_plan, resolve_conv_padding
+        pad = resolve_conv_padding(kw_.get("padding", "SAME"), shape, wshape,
+                                   kw_.get("stride", (1, 1)),
+                                   kw_.get("dilation", (1, 1)))
+        plan = conv_plan(FUSED_CONV_ACU, ConvSpec(
+            x_shape=shape, w_shape=wshape, padding=pad,
+            stride=kw_.get("stride", (1, 1)),
+            dilation=kw_.get("dilation", (1, 1))))
+        assert plan.route == "fused_conv"
+        assert plan.partition is not None and plan.partition.total == 8
+        out = conv2d(x, w, b, cfg=cfg, **kw_)
+        out_j = jax.jit(lambda x, w: conv2d(x, w, None, cfg=cfg, **kw_))(x, w)
+    assert jnp.array_equal(out, ref)
+    assert jnp.array_equal(out_j, ref_j)
+
+
+def test_fused_conv_channel_contraction_kpad_once(mesh):
+    """Input channels sharded over model (``acu_conv_k`` rule): partial
+    int32 accumulators psum, and the channel-shard-padding correction lands
+    exactly once globally. Biased multiplier (M[0, 0] = 7) so a per-shard —
+    or missing — correction shows up as an integer offset."""
+    biased = dataclasses.replace(
+        make_exact(8), name="mul8s_biased",
+        fn=lambda a, w: a.astype(jnp.int32) * w.astype(jnp.int32) + 7)
+    lut = build_lut(biased)
+    acu = dataclasses.replace(
+        make_acu("mul8s_exact", AcuMode.LUT, use_pallas=True, fused=True),
+        multiplier=biased, lut=lut)
+    assert acu.m00() == 7
+    cfg = ApproxConfig(acu=acu)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(2, 6, 7, 7)), jnp.float32)  # C=6 -> pad 2
+    w = jnp.asarray(rng.normal(size=(5, 6, 3, 3)), jnp.float32)
+    ref = conv2d(x, w, None, cfg=cfg)
+    rules = {"acu_conv_k": ("model",), "acu_conv_cols": ()}
+    with use_mesh(mesh, rules):
+        from repro.core.acu import ConvSpec, conv_plan
+        plan = conv_plan(acu, ConvSpec(
+            x_shape=(2, 6, 7, 7), w_shape=(5, 6, 3, 3),
+            padding=((1, 1), (1, 1))))
+        assert plan.partition.k == ("model",)
+        out = conv2d(x, w, None, cfg=cfg)
+    assert jnp.array_equal(out, ref)
+
+
+def test_fused_conv_ste_backward_bitwise(mesh):
+    """Sharded QAT conv gradients (activations AND weights) are bitwise
+    identical to single-device ones."""
+    cfg = ApproxConfig(acu=FUSED_CONV_ACU)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(2, 3, 8, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(5, 3, 3, 3)), jnp.float32)
+
+    def loss(x, w):
+        return (conv2d(x, w, None, cfg=cfg) ** 2).sum()
+
+    gx_ref, gw_ref = jax.grad(loss, argnums=(0, 1))(x, w)
+    with use_mesh(mesh):
+        gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert jnp.array_equal(gx, gx_ref)
+    assert jnp.array_equal(gw, gw_ref)
+
+
+def test_vision_serve_engine_mesh_parity(mesh):
+    """VisionServeEngine(mesh=...) produces the same logits as the
+    replicated engine — the conv plans change where tiles run, not what
+    they compute."""
+    from repro.models.vision import cnn_forward, init_cnn
+    from repro.serve.engine import VisionServeEngine
+
+    params = init_cnn(jax.random.PRNGKey(0), width=8)
+    cfg = ApproxConfig(acu=FUSED_CONV_ACU)
+    imgs = np.random.default_rng(1).normal(size=(6, 3, 32, 32)).astype(
+        np.float32)
+    ref = VisionServeEngine(params, cnn_forward, slots=4, acfg=cfg).run(imgs)
+    out = VisionServeEngine(params, cnn_forward, slots=4, acfg=cfg,
+                            mesh=mesh).run(imgs)
+    assert np.array_equal(out, ref)
+    rep = VisionServeEngine(params, cnn_forward, slots=4, acfg=cfg,
+                            mesh=mesh).plan_report(
+        (4, 3, 32, 32), (8, 3, 3, 3), cfg)
+    assert rep["route"] == "fused_conv"
+    assert rep["partition"] is not None
