@@ -13,7 +13,13 @@ new record is more than ``tol`` slower than the old record's:
   the patch-streaming conv kernel (docs/fused_conv.md), gated from the first
   record that carries it (a gate entry absent from the *old* record is
   reported as a new baseline, not a failure; absent from the *new* record is
-  a failure — trajectory entries must never disappear).
+  a failure — trajectory entries must never disappear);
+* ``mode=conv_tiled`` at the ImageNet-scale 224^2 shape (M=50176, K=576,
+  N=64) — the spatially-tiled conv kernel, gated from PR 4 on. The 224^2
+  entry additionally enforces a *within-record* floor: tiled must stay at
+  least as fast as the eager im2col baseline it replaced
+  (``speedup_vs_im2col >= 1``), so the tiled route can never silently
+  become a de-optimization.
 
 Records are only comparable within the same host/backend pair; the committed
 series is produced on the dev container, so CI gates on the committed files
@@ -33,6 +39,15 @@ GATES = [
      {"mode": "fused", "M": 256, "K": 256, "N": 256}),
     ("layers.conv_fused@vgg3x3",
      {"mode": "conv_fused", "M": 2048, "K": 576, "N": 128}),
+    ("layers.conv_tiled@imagenet224",
+     {"mode": "conv_tiled", "M": 50176, "K": 576, "N": 64}),
+]
+
+# within-record floors on the NEW record: (name, row selector, field, min)
+FLOORS = [
+    ("layers.conv_tiled@imagenet224 >= im2col",
+     {"mode": "conv_tiled", "M": 50176, "K": 576, "N": 64},
+     "speedup_vs_im2col", 1.0),
 ]
 
 
@@ -89,6 +104,19 @@ def main(argv=None) -> int:
         ok = ratio <= 1.0 + args.tol
         print(f"{name}: {old:.0f}us -> {new:.0f}us "
               f"({ratio:.3f}x, tol {1 + args.tol:.2f}x) "
+              f"{'OK' if ok else 'REGRESSION'}")
+        failed |= not ok
+
+    for name, sel, field, floor in FLOORS:
+        row = next((r for r in new_rec.get("layers", [])
+                    if all(r.get(k) == v for k, v in sel.items())), None)
+        if row is None:
+            print(f"{name}: entry absent from {args.new} (floor not yet "
+                  f"active)")
+            continue
+        val = float(row[field])
+        ok = val >= floor
+        print(f"{name}: {field}={val:.3f} (floor {floor:.2f}) "
               f"{'OK' if ok else 'REGRESSION'}")
         failed |= not ok
     return 1 if failed else 0

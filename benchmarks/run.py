@@ -125,12 +125,17 @@ def layer_modes(records: list | None = None):
 
 
 def conv_modes(records: list | None = None):
-    """conv2d wall-clock: the fused patch-streaming conv kernel vs the eager
-    im2col + fused-dense path it retired (``route="im2col"``), at a VGG-ish
-    3x3 layer and a 1x1 pointwise layer. Rows join the ``layers`` record
-    section with modes ``conv_fused`` / ``conv_im2col`` (M/K/N are the
-    implicit im2col GEMM dims); the regression gate covers ``conv_fused`` at
-    the VGG-ish shape (benchmarks/check_regression.py)."""
+    """conv2d wall-clock: the fused conv kernels vs the eager im2col +
+    fused-dense path they retired (``route="im2col"``).
+
+    ``conv_fused`` rows (VGG-ish 3x3, 1x1 pointwise) ride the whole-image
+    kernel; ``conv_tiled`` rows (224^2 x 64ch, 112^2 x 128ch — ImageNet-scale
+    shapes the whole-image kernel refuses, its working set is over the VMEM
+    budget) ride the spatially-tiled kernel, which until PR 4 fell back to
+    eager im2col. Rows join the ``layers`` record section (M/K/N are the
+    implicit im2col GEMM dims); the regression gates cover ``conv_fused`` at
+    the VGG-ish shape and ``conv_tiled`` at 224^2, where tiled must also
+    stay >= the im2col baseline (benchmarks/check_regression.py)."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -142,19 +147,23 @@ def conv_modes(records: list | None = None):
         acu=make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True, fused=True))
     rng = np.random.default_rng(2)
     print("mode,conv,M,K,N,us_per_call,vs_im2col")
-    for tag, n, c, h, w_sz, cout, k in [
-        ("vgg3x3", 2, 64, 32, 32, 128, 3),       # SAME, stride 1
-        ("pointwise1x1", 2, 256, 16, 16, 256, 1),
+    for tag, n, c, h, w_sz, cout, k, fused_mode, reps in [
+        ("vgg3x3", 2, 64, 32, 32, 128, 3, "conv_fused", 8),  # SAME, stride 1
+        ("pointwise1x1", 2, 256, 16, 16, 256, 1, "conv_fused", 8),
+        # over the whole-image VMEM budget -> the spatially-tiled kernel
+        # (few reps: the im2col baseline takes ~a minute per call here)
+        ("imagenet224", 1, 64, 224, 224, 64, 3, "conv_tiled", 2),
+        ("imagenet112", 1, 128, 112, 112, 128, 3, "conv_tiled", 2),
     ]:
         x = jnp.asarray(rng.normal(size=(n, c, h, w_sz)), jnp.float32)
         wt = jnp.asarray(rng.normal(size=(cout, c, k, k)), jnp.float32)
         fns = {
-            "conv_fused": jax.jit(
+            fused_mode: jax.jit(
                 lambda x, wt: conv2d(x, wt, None, cfg=cfg)),
             "conv_im2col": jax.jit(
                 lambda x, wt: conv2d(x, wt, None, cfg=cfg, route="im2col")),
         }
-        times = {m: _time_call(lambda fn=fn: fn(x, wt), reps=8)
+        times = {m: _time_call(lambda fn=fn: fn(x, wt), reps=reps)
                  for m, fn in fns.items()}
         base = times["conv_im2col"]
         m_rows, k_dim = n * h * w_sz, c * k * k   # SAME/stride-1 geometry

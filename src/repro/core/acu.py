@@ -19,9 +19,10 @@ All modes consume *shifted-code* integer operands (``code - zero_point``).
 
 Dispatch is two-level: :func:`matmul_plan` (dense GEMMs) and
 :func:`conv_plan` (conv2d sites, mirroring it at static geometry) first
-resolve (mode, bits, use_pallas, fused) to a kernel — the conv fused route
-is the patch-streaming ``kernels/fused_lut_conv`` kernel, which never
-materializes the im2col patch tensor — then, when a
+resolve (mode, bits, use_pallas, fused) to a kernel — the conv fused routes
+are the patch-streaming ``kernels/fused_lut_conv`` kernels (whole-image
+inside the VMEM budget, spatially tiled over halo'd output-row bands above
+it), which never materialize the im2col patch tensor — then, when a
 :class:`~repro.parallel.sharding.MeshContext` is active, wrap it in a
 ``shard_map`` over the production mesh (``parallel/acu_shard.py``): LUT
 replicated, rows over ``("pod", "data")``, columns over ``("model",)``,
@@ -32,11 +33,19 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# the per-core VMEM budget for the fused conv kernels lives with the VMEM
+# model in kernels/fused_lut_conv/ops.py (single source of truth);
+# re-exported here as the planning-layer API. Images whose whole-image
+# working set exceeds it resolve to the spatially-tiled kernel; geometries
+# where even a one-row band exceeds it fall back to eager im2col.
+from repro.kernels.fused_lut_conv.ops import CONV_VMEM_BUDGET
 
 from .lut import LowRankError, build_lut, factorize_error, trunc_masks
 from .multipliers import Multiplier, get_multiplier
@@ -386,30 +395,39 @@ class ConvSpec:
         return (self.x_shape[0] * ho * wo, cg * kh * kw, cout)
 
 
-# conservative per-core VMEM budget for the whole-image-resident fused conv
-# kernel; images whose working set exceeds it fall back to the eager route
-CONV_VMEM_BUDGET = 12 << 20
+def _conv_geometry_args(spec: ConvSpec) -> tuple:
+    _, c, h, w = spec.x_shape
+    cout, _, kh, kw = spec.w_shape
+    return (c, h, w, cout, kh, kw, spec.stride[0], spec.stride[1],
+            spec.dilation[0], spec.dilation[1], spec.padding)
 
 
 def _conv_vmem_estimate(spec: ConvSpec, n_codes: int) -> int:
-    """Working-set bytes of the fused conv kernel at this geometry, using
-    the kernel's own tile picks (``pick_conv_tiling`` — one source of
-    truth)."""
-    from repro.kernels.fused_lut_conv.ops import pick_conv_tiling
-    _, c, h, w = spec.x_shape
-    cout, _, kh, kw = spec.w_shape
-    ho, wo = spec.out_spatial
-    inner, bh, bn = pick_conv_tiling(c, ho, wo, cout)
-    c_pad = c + (-c) % inner
-    hp = h + sum(spec.padding[0]) + bh * spec.stride[0]
-    wp = w + sum(spec.padding[1])
-    bm = bh * wo
-    return (8 * c_pad * hp * wp                # f32 image block + i32 scratch
-            + 4 * n_codes * n_codes            # LUT
-            + 4 * kh * kw * c_pad * bn         # tap-major weight codes
-            + 8 * bm * inner * bn              # gather: idx + prods tensors
-            + 8 * bm * c_pad                   # tap window + a_t tile
-            + 8 * bm * bn)                     # acc + out tile
+    """Working-set bytes of the whole-image fused conv kernel at this
+    geometry, from the kernel's own tile picks and exact padded extents
+    (``conv_vmem_bytes`` — one source of truth, including the
+    ``(kh-1)*dilation`` halo rows the pre-PR 4 stride-only estimate
+    omitted)."""
+    from repro.kernels.fused_lut_conv.ops import conv_vmem_bytes
+    return conv_vmem_bytes(*_conv_geometry_args(spec), n_codes)
+
+
+def _fmt_vmem(nbytes: int) -> str:
+    """Byte counts in audited report strings: MiB at image scale, KiB below
+    (tests resolve tiled plans against shrunken budgets)."""
+    if nbytes >= (1 << 20):
+        return f"{nbytes >> 20} MiB"
+    return f"{nbytes >> 10} KiB"
+
+
+def _conv_spatial_tiling(spec: ConvSpec, n_codes: int, budget: int
+                         ) -> Optional[tuple[int, int, int, int]]:
+    """(inner, bh, bn, n_copies) for the spatially-tiled kernel, or None
+    when the geometry is degenerate (even a one-row band exceeds the
+    budget)."""
+    from repro.kernels.fused_lut_conv.ops import pick_conv_spatial_tiling
+    return pick_conv_spatial_tiling(*_conv_geometry_args(spec), n_codes,
+                                    budget=budget)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -418,26 +436,36 @@ class ConvPlan:
 
     ``route`` is one of
 
-    * ``"fused_conv"`` — the patch-streaming Pallas kernel
+    * ``"fused_conv"`` — the whole-image patch-streaming Pallas kernel
       (``kernels/fused_lut_conv``): im2col, quantize, LUT-GEMM and dequant in
       one pass, the patch tensor never materialized. ``fn(x, wq, xs, xz, ws)
       -> (N, Ho, Wo, Cout) f32`` with ``x`` the float NCHW activations and
       ``wq`` the (Cout, Cin, kh, kw) shifted weight codes; mesh-wrapped when
       a partition is active (callers never change).
+    * ``"tiled"`` — the spatially-tiled variant of the same kernel: grid
+      over output-row bands, only the halo'd input rows of one band
+      VMEM-resident per step. Same ``fn`` signature and bit-identical
+      output; chosen when the whole-image working set exceeds the VMEM
+      budget (ImageNet-scale feature maps), with the picked tiling recorded
+      in ``tiling`` and named in the report.
     * ``"im2col"`` — eager patch extraction + the dense ``matmul_plan`` route
       (which itself resolves fused/unfused x mesh). The audited fallback for
-      non-LUT modes, non-Pallas ACUs, and VMEM-exceeding images; also the
-      oracle the fused kernel is tested against. ``fn`` is None: the caller
-      composes quantize -> GEMM -> dequant as before.
+      non-LUT modes, non-Pallas ACUs, and truly degenerate geometry (even a
+      one-row band over budget); also the oracle the fused kernels are
+      tested against. ``fn`` is None: the caller composes quantize -> GEMM
+      -> dequant as before.
     * ``"im2col_depthwise"`` / ``"im2col_grouped"`` — the block-diagonal and
       single-vmapped-GEMM group routes (PR 2 semantics, bitwise preserved).
       ``fn`` is None.
 
-    ``partition`` is the ``acu_conv`` partition for the fused route (batch x
-    output-pixel rows over ``acu_conv_rows``, output channels over
-    ``acu_conv_cols``, opt-in input-channel contraction over ``acu_conv_k``),
-    or the dense GEMM partition the im2col routes will resolve. ``report``
-    carries every audited fallback decision.
+    ``partition`` is the ``acu_conv`` partition for the fused routes (batch
+    x output-pixel rows over ``acu_conv_rows`` — with bands over the same
+    axes when the batch alone cannot fill them, see
+    ``acu_shard.wrap_fused_conv`` — output channels over ``acu_conv_cols``,
+    opt-in input-channel contraction over ``acu_conv_k``), or the dense GEMM
+    partition the im2col routes will resolve. ``report`` carries every
+    audited fallback decision. ``tiling`` is the resolved
+    ``(inner, bh, bn, n_copies)`` spatial tiling for the tiled route.
     """
 
     mode: AcuMode
@@ -449,6 +477,7 @@ class ConvPlan:
     fn: Optional[Callable[..., Array]] = None
     partition: Optional[object] = None
     report: tuple[str, ...] = ()
+    tiling: Optional[tuple[int, int, int, int]] = None
 
     def __call__(self, *args) -> Array:
         assert self.fn is not None, f"route {self.route} has no direct kernel"
@@ -459,11 +488,18 @@ class ConvPlan:
         this so users can see which path their model took)."""
         part = self.partition
         m, k, n = self.spec.gemm_shape
+        tiling = None
+        if self.tiling is not None:
+            inner, bh, bn, n_copies = self.tiling
+            ho, _ = self.spec.out_spatial
+            tiling = (f"bands of {bh} output rows ({-(-ho // bh)} bands, "
+                      f"{n_copies} halo blocks/band, inner={inner} bn={bn})")
         return {
             "route": self.route,
             "mode": self.mode.value,
             "fused": self.fused,
             "gemm": f"M={m} K={k} N={n}",
+            "tiling": tiling,
             "partition": None if part is None else
                 f"rows{part.rows}x cols{part.cols}x k{part.k} "
                 f"({part.n_rows}x{part.n_cols}x{part.n_k} way)",
@@ -473,25 +509,34 @@ class ConvPlan:
 
 def conv_plan(acu: Acu, spec: ConvSpec, *, a_bits: Optional[int] = None,
               fused: Optional[bool] = None, mesh=None,
-              route: Optional[str] = None) -> ConvPlan:
+              route: Optional[str] = None,
+              vmem_budget: Optional[int] = None) -> ConvPlan:
     """Resolve one conv2d site: geometry x (mode, bits, use_pallas, fused) x
     mesh -> a concrete route. Mirrors :func:`matmul_plan`, with the same
     silent-but-audited fallback contract: a fused request that cannot be
-    served (groups, non-LUT mode, no Pallas, no table, VMEM) resolves to the
-    eager im2col route and records why in ``plan.report``.
+    served by the whole-image kernel (groups, non-LUT mode, no Pallas, no
+    table) resolves to the eager im2col route; one that only exceeds the
+    VMEM budget resolves to the spatially-tiled kernel (``route="tiled"``,
+    the chosen banding named in ``plan.report``); eager im2col remains only
+    for truly degenerate geometry where even a one-row band is over budget.
 
     ``route`` pins a route explicitly (``"im2col"`` forces the eager path —
-    the benchmark baseline and test oracle; ``"fused_conv"`` raises if the
-    kernel cannot serve the request instead of falling back).
+    the benchmark baseline and test oracle; ``"fused_conv"`` / ``"tiled"``
+    raise if that kernel cannot serve the request instead of falling back).
+    ``vmem_budget`` overrides :data:`CONV_VMEM_BUDGET` (tests exercise the
+    tiled resolution on small geometry with a shrunken budget).
     """
     fused = acu.fused if fused is None else fused
     a_bits = acu.bits if a_bits is None else a_bits
+    budget = CONV_VMEM_BUDGET if vmem_budget is None else vmem_budget
     ctx = _resolve_mesh(mesh)
     report: list[str] = []
 
     cout, cin_g, kh, kw = spec.w_shape
     cin = spec.x_shape[1]
-    want_fused = fused or route == "fused_conv"
+    if route not in (None, "fused_conv", "tiled", "im2col"):
+        raise ValueError(f"unknown conv route {route!r}")
+    want_fused = fused or route in ("fused_conv", "tiled")
     can_fuse = True
     if spec.groups != 1:
         can_fuse = False
@@ -506,49 +551,86 @@ def conv_plan(acu: Acu, spec: ConvSpec, *, a_bits: Optional[int] = None,
             report.append(f"fused conv needs LUT mode + use_pallas + a built "
                           f"table (have mode={acu.mode.value}, "
                           f"use_pallas={acu.use_pallas})")
-    if can_fuse:
-        est = _conv_vmem_estimate(spec, acu.multiplier.n_codes)
-        if est > CONV_VMEM_BUDGET:
-            can_fuse = False
-            if want_fused:
-                report.append(f"image working set ~{est >> 20} MiB exceeds "
-                              f"the {CONV_VMEM_BUDGET >> 20} MiB VMEM "
-                              f"budget; falling back to eager im2col")
 
-    if route == "fused_conv" and not can_fuse:
-        raise ValueError(f"fused_conv route unavailable: {report}")
     if route == "im2col":
+        # pinned before the budget resolution: an im2col-pinned plan must
+        # not run (or report) a tiling it will never use
         can_fuse = False
         report.append("route pinned to eager im2col by caller")
-    elif route not in (None, "fused_conv", "im2col"):
-        raise ValueError(f"unknown conv route {route!r}")
 
-    if (fused or route == "fused_conv") and can_fuse:
+    whole_ok = False
+    tiling = None
+    if can_fuse and want_fused:
+        est = _conv_vmem_estimate(spec, acu.multiplier.n_codes)
+        whole_ok = est <= budget
+        if route == "tiled" or not whole_ok:
+            tiling = _conv_spatial_tiling(spec, acu.multiplier.n_codes,
+                                          budget)
+        if not whole_ok:
+            if tiling is not None:
+                inner, bh, bn, n_copies = tiling
+                ho, _ = spec.out_spatial
+                report.append(
+                    f"image working set ~{_fmt_vmem(est)} exceeds the "
+                    f"{_fmt_vmem(budget)} VMEM budget; spatially tiled over "
+                    f"output-row bands (bands of {bh} output rows, "
+                    f"{-(-ho // bh)} bands, {n_copies} halo blocks/band)")
+            else:
+                report.append(
+                    f"image working set ~{_fmt_vmem(est)} exceeds the "
+                    f"{_fmt_vmem(budget)} VMEM budget and even a one-row "
+                    f"band does not fit (degenerate geometry); falling "
+                    f"back to eager im2col")
+        elif route == "tiled":
+            report.append("route pinned to spatially-tiled kernel by caller")
+
+    if route == "fused_conv" and not (can_fuse and whole_ok):
+        raise ValueError(f"fused_conv route unavailable: {report}")
+    if route == "tiled" and not (can_fuse and tiling is not None):
+        raise ValueError(f"tiled route unavailable: {report}")
+
+    serve_tiled = can_fuse and want_fused and tiling is not None \
+        and (route == "tiled" or not whole_ok)
+    serve_whole = can_fuse and want_fused and whole_ok and route != "tiled"
+
+    if serve_whole or serve_tiled:
         from repro.kernels.fused_lut_conv import ops as cops
         from repro.parallel import acu_shard
         partition = None
         if ctx is not None:
             partition = acu_shard.resolve_conv_partition(
                 ctx, float_accum=acu.mode == AcuMode.LOWRANK)
-        geom = dict(stride=spec.stride, padding=spec.padding,
-                    dilation=spec.dilation)
+        geom = dict(stride=spec.stride, dilation=spec.dilation)
+        if serve_tiled:
+            inner, bh, bn, _ = tiling
+            kernel_fn = functools.partial(cops.fused_lut_conv_tiled,
+                                          inner=inner, bh=bh, bn=bn)
+        else:
+            kernel_fn = cops.fused_lut_conv
 
-        def fused_call(x, wq, xs, xz, ws, *, emit_acc=False):
+        def fused_call(x, wq, xs, xz, ws, *, emit_acc=False, padding=None):
             # jnp.asarray stays inside: plans are cached across jit traces
-            return cops.fused_lut_conv(
+            # and a device constant created during one trace must not leak
+            # into another. ``padding`` override: the banded mesh wrap
+            # pre-pads its halo'd row slabs and calls back with zero row
+            # padding (acu_shard.wrap_fused_conv).
+            return kernel_fn(
                 x, wq, jnp.asarray(acu.lut), acu.offset, xs, xz, ws,
                 bits=a_bits, interpret=acu.interpret, emit_acc=emit_acc,
-                **geom)
+                padding=spec.padding if padding is None else padding, **geom)
 
         fn = fused_call
         if partition is not None:
             fn = acu_shard.wrap_fused_conv(
                 fused_call,
-                lambda *args: fused_call(*args, emit_acc=True),
-                ctx, partition, acu.m00(), kh * kw)
+                lambda *args, **kw: fused_call(*args, emit_acc=True, **kw),
+                ctx, partition, acu.m00(), kh * kw, spec=spec)
         return ConvPlan(mode=acu.mode, bits=acu.bits, use_pallas=True,
-                        fused=True, route="fused_conv", spec=spec, fn=fn,
-                        partition=partition, report=tuple(report))
+                        fused=True,
+                        route="tiled" if serve_tiled else "fused_conv",
+                        spec=spec, fn=fn, partition=partition,
+                        report=tuple(report),
+                        tiling=tiling if serve_tiled else None)
 
     if spec.groups == 1:
         r = "im2col"

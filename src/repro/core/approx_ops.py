@@ -244,9 +244,10 @@ def _get_conv_ste_fn(acu: Acu, a_bits: int, w_bits: int, plan, ctx=None):
     pixels, ``gw`` column-sharded like the output channels), so sharded QAT
     gradients stay bitwise identical to single-device ones.
     """
-    assert plan.route == "fused_conv", plan.route
+    assert plan.route in ("fused_conv", "tiled"), plan.route
     spec = plan.spec
-    key = ("conv", id(acu), a_bits, w_bits, spec, _mesh_cache_key(ctx))
+    key = ("conv", plan.route, id(acu), a_bits, w_bits, spec,
+           _mesh_cache_key(ctx))
     if key in _STE_CACHE:
         return _STE_CACHE[key]
 
@@ -321,11 +322,14 @@ def conv2d(x: Array, w: Array, b: Optional[Array] = None, *,
     ``x``: (N, Cin, H, W); ``w``: (Cout, Cin/groups, kh, kw). With an
     ``ApproxConfig`` the execution route is resolved by
     :func:`~repro.core.acu.conv_plan`: LUT-mode Pallas ACUs stream im2col
-    patches inside one fused quantize->LUT-GEMM->dequant kernel; everything
-    else lowers to eager im2col + (approx) GEMM exactly as in the paper
-    (§3.3.1, Fig. 3). ``route="im2col"`` pins the eager path (benchmark
-    baseline / test oracle). ``xqp``/``wqp`` override the groups=1 quantizers
-    (``wqp`` per-output-channel, axis=0).
+    patches inside one fused quantize->LUT-GEMM->dequant kernel — the
+    whole-image variant when the image fits the VMEM budget, the
+    spatially-tiled halo variant above it (ImageNet-scale feature maps) —
+    everything else lowers to eager im2col + (approx) GEMM exactly as in
+    the paper (§3.3.1, Fig. 3). ``route="im2col"`` pins the eager path
+    (benchmark baseline / test oracle); ``route="tiled"`` pins the tiled
+    kernel. ``xqp``/``wqp`` override the groups=1 quantizers (``wqp``
+    per-output-channel, axis=0).
     """
     n, cin, _, _ = x.shape
     cout, cin_g, kh, kw = w.shape
@@ -352,10 +356,10 @@ def conv2d(x: Array, w: Array, b: Optional[Array] = None, *,
         # the fake-quant QAT path runs through approx_dense — the integer
         # LUT kernel would silently break the fake_quantize(x)@fake_quantize(w)
         # contract, so a pinned fused route is a caller error
-        if route == "fused_conv":
-            raise ValueError("route='fused_conv' contradicts "
-                             "cfg.fake_quant_only (the fused kernel runs the "
-                             "integer ACU GEMM, not fake-quant)")
+        if route in ("fused_conv", "tiled"):
+            raise ValueError(f"route={route!r} contradicts "
+                             f"cfg.fake_quant_only (the fused kernel runs "
+                             f"the integer ACU GEMM, not fake-quant)")
         route = "im2col"
     fused = cfg.acu.fused if cfg.fused is None else cfg.fused
     from repro.parallel.sharding import current_mesh_context
@@ -363,7 +367,7 @@ def conv2d(x: Array, w: Array, b: Optional[Array] = None, *,
     plan = conv_plan(cfg.acu, spec, a_bits=cfg.a_bits, fused=fused,
                      mesh=ctx or False, route=route)
 
-    if plan.route == "fused_conv":
+    if plan.route in ("fused_conv", "tiled"):
         xqp, wqp = _conv_qparams(x, w, cfg, xqp, wqp)
         fn = _get_conv_ste_fn(cfg.acu, cfg.a_bits, cfg.w_bits, plan, ctx=ctx)
         y = fn(x, w, xqp.scale, xqp.zero_point, wqp.scale, wqp.zero_point)

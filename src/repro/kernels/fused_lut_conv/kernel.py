@@ -1,28 +1,42 @@
-"""Pallas TPU kernel: patch-streaming im2col -> quantize -> LUT-GEMM -> dequant.
+"""Pallas TPU kernels: patch-streaming im2col -> quantize -> LUT-GEMM -> dequant.
 
-One ``pallas_call`` for the whole approximate conv2d forward. The eager conv
-path materialized the (N*Ho*Wo, C*kh*kw) im2col patch tensor in HBM before
-handing it to ``fused_lut_dense`` — an HBM round-trip ``kh*kw`` times larger
-than the input itself. Here the patch tensor never exists anywhere: the
-BlockSpec index maps stream whole padded *images* (the raw input bytes, no
-duplication) into VMEM, and the kernel gathers each (stride, dilation)
-tap window straight out of the resident image.
+One ``pallas_call`` for the whole approximate conv2d forward, in two spatial
+flavours that share one tap-accumulate core (:func:`_acc_taps`):
 
-Grid: ``(N, Ho/bh, Cout/bn)`` — one step computes a ``(bh, Wo)`` strip of
-output rows for one image and one output-channel tile. Per image the float
-block is quantized ONCE into a persistent int32 VMEM scratch (at the first
-``(i, j)`` step for that ``n``), so the quantizer runs per input pixel — not
-per patch entry, which duplicates every pixel up to ``kh*kw`` times in the
-im2col formulation. Each grid step then loops over the ``kh*kw`` taps:
+* **whole-image** (:func:`fused_lut_conv_kernel`) — the PR 3 kernel. The
+  BlockSpec index maps stream whole padded *images* (the raw input bytes, no
+  duplication) into VMEM and keep them resident across the ``(i, j)``
+  sub-grid. Bounded to images whose working set fits the VMEM budget.
+* **spatially tiled** (:func:`fused_lut_conv_tiled_kernel`) — the PR 4
+  kernel that lifts that bound. The grid runs over *output-row bands*; per
+  band only the ``(bh-1)*stride + (kh-1)*dilation + 1`` halo'd input rows
+  are resident. Pallas block index maps are block-granular, so the
+  overlapping halo windows are expressed by passing the padded image
+  ``n_copies`` times with row-shifted index maps (``i``, ``i+1``, ...,
+  each a ``bh*stride``-row block): band ``i`` sees rows ``[i*S, (i +
+  n_copies)*S)`` which cover its halo'd window, and consecutive bands
+  re-stream only the ~1 halo block they share — never the whole image,
+  never the ``kh*kw``-times-larger patch tensor.
+
+The eager conv path materialized the (N*Ho*Wo, C*kh*kw) im2col patch tensor
+in HBM before handing it to ``fused_lut_dense`` — an HBM round-trip
+``kh*kw`` times larger than the input itself. Here the patch tensor never
+exists anywhere. Per image (whole-image) or per band (tiled) the float block
+is quantized ONCE into a persistent int32 VMEM scratch at the first ``j``
+step, so the quantizer runs per input pixel — not per patch entry, which
+duplicates every pixel up to ``kh*kw`` times in the im2col formulation.
+Each grid step then loops over the ``kh*kw`` taps:
 
 1. **tap window slice (VPU)** — a strided ``lax.slice`` of the resident code
-   image picks the ``(C, bh, Wo)`` window for tap ``(u, v)`` under
+   rows picks the ``(C, bh, Wo)`` window for tap ``(u, v)`` under
    (stride, dilation); transposed to a ``(bh*Wo, C)`` operand tile.
 2. **LUT gathers** — the (2^b, 2^b) product table is pinned in VMEM for the
    whole grid (same trick as ``fused_lut_dense``); gathers run in ``inner``-
    channel sub-slices against the tap's ``(C, bn)`` weight-code slab.
 3. **int32 accumulate** — taps and channel chunks add associatively, so the
-   accumulator equals the im2col GEMM's bit for bit, in any order.
+   accumulator equals the im2col GEMM's bit for bit, in any order — which is
+   also why *any* spatial tiling (whole image, in-kernel bands, mesh-level
+   band shards) produces bit-identical outputs.
 4. **affine dequant** — ``acc * (x_scale * w_scale[n])``, the same single
    combined-scale multiply as ``fused_lut_dense``; the f32 output strip is
    the only HBM store. ``emit_acc=True`` skips it and emits the raw int32
@@ -36,12 +50,11 @@ the dense kernel. Spatial (SAME) padding needs NO correction: the im2col
 oracle also quantizes its 0.0 pad entries to shifted code 0, so both paths
 accumulate the same ``M[0, 0]`` terms and stay bit-exact.
 
-VMEM @ a VGG-ish layer (C=64, 34x34 padded, bh=8, Wo=32, bn=128, 8-bit):
-image block 295 KiB f32 + code scratch 295 KiB + LUT 256 KiB + weight slab
-(kh*kw, C, bn) 288 KiB + gather working set 256*32*128*4 = 4 MiB — inside
-16 MiB. The whole-image residency bounds this kernel to images that fit
-VMEM; ``conv_plan`` audits the estimate and falls back to the eager im2col
-route for larger ones.
+VMEM: the whole-image kernel holds ``8 * C * Hp * Wp`` bytes of image block
++ code scratch; the tiled kernel holds ``8 * C * (n_copies * bh * sh) * Wp``
+— at a 224x224x64 ImageNet-scale layer that is ~26 MiB vs ~450 KiB per band.
+``conv_plan`` audits both against the budget and picks the route
+(``core.acu._conv_vmem_estimate`` / ``pick_conv_spatial_tiling``).
 """
 from __future__ import annotations
 
@@ -53,33 +66,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, w_ref, lut_ref, xs_ref, xz_ref, ws_ref, o_ref, aimg_ref, *,
-            offset: int, n_codes: int, lo: int, hi: int, inner: int,
-            kh: int, kw: int, sh: int, sw: int, dh: int, dw: int,
-            bh: int, wo: int, c_pad_corr: int, emit_acc: bool):
-    i = pl.program_id(1)
-    j = pl.program_id(2)
-    xs = xs_ref[0]                                  # per-tensor activation scale
-    xz = xz_ref[0]                                  # activation zero-point (code)
-
-    @pl.when(jnp.logical_and(i == 0, j == 0))
-    def _quantize_image():
-        # once per image (scratch persists across the (i, j) sub-grid): float
-        # image -> shifted codes in LUT index space. Spatial pad pixels are
-        # 0.0, which quantizes to the zero-point, i.e. index `offset` —
-        # exactly what the im2col oracle's 0.0 patch entries produce.
-        img = x_ref[...][0].astype(jnp.float32)     # (C, Hp, Wp)
-        q = jnp.clip(jnp.round(img / xs + xz), lo, hi).astype(jnp.int32)
-        aimg_ref[...] = q - xz.astype(jnp.int32) + offset
-
-    a_img = aimg_ref[...]                           # (C, Hp, Wp) index space
-    w = w_ref[...].astype(jnp.int32) + offset       # (kh*kw, C, bn)
-    lut = lut_ref[...]                              # (n_codes * n_codes,)
+def _acc_taps(a_img, w, lut, *, n_codes: int, inner: int, kh: int,
+              kw: int, sh: int, sw: int, dh: int, dw: int, bh: int,
+              wo: int, row0):
+    """The shared tap-accumulate core: ``a_img`` is the resident (C, rows,
+    cols) shifted-code block (whole image or halo'd band), ``w`` the
+    (kh*kw, C, bn) tap-major weight codes, ``lut`` the flat product table.
+    Returns the (bh*wo, bn) int32 accumulator for the output-row strip
+    whose first tap reads input row ``row0``."""
     c = a_img.shape[0]
     bn = w.shape[2]
     bm = bh * wo
-    row0 = i * bh * sh                              # first input row this strip
-
     acc = jnp.zeros((bm, bn), jnp.int32)
     for t in range(kh * kw):                        # static tap loop
         u, v = divmod(t, kw)
@@ -99,6 +96,41 @@ def _kernel(x_ref, w_ref, lut_ref, xs_ref, xz_ref, ws_ref, o_ref, aimg_ref, *,
             return acc + prods.sum(axis=1)
 
         acc = jax.lax.fori_loop(0, c // inner, body, acc)
+    return acc
+
+
+def _quantize_codes(img, xs, xz, *, lo: int, hi: int, offset: int):
+    """float block -> shifted codes in LUT index space. Spatial pad pixels
+    are 0.0, which quantizes to the zero-point, i.e. index ``offset`` —
+    exactly what the im2col oracle's 0.0 patch entries produce."""
+    q = jnp.clip(jnp.round(img.astype(jnp.float32) / xs + xz), lo, hi)
+    return q.astype(jnp.int32) - xz.astype(jnp.int32) + offset
+
+
+def _kernel(x_ref, w_ref, lut_ref, xs_ref, xz_ref, ws_ref, o_ref, aimg_ref, *,
+            offset: int, n_codes: int, lo: int, hi: int, inner: int,
+            kh: int, kw: int, sh: int, sw: int, dh: int, dw: int,
+            bh: int, wo: int, c_pad_corr: int, emit_acc: bool):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    xs = xs_ref[0]                                  # per-tensor activation scale
+    xz = xz_ref[0]                                  # activation zero-point (code)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _quantize_image():
+        # once per image (scratch persists across the (i, j) sub-grid)
+        aimg_ref[...] = _quantize_codes(x_ref[...][0], xs, xz, lo=lo, hi=hi,
+                                        offset=offset)
+
+    a_img = aimg_ref[...]                           # (C, Hp, Wp) index space
+    w = w_ref[...].astype(jnp.int32) + offset       # (kh*kw, C, bn)
+    lut = lut_ref[...]                              # (n_codes * n_codes,)
+    bn = w.shape[2]
+    row0 = i * bh * sh                              # first input row this strip
+
+    acc = _acc_taps(a_img, w, lut, n_codes=n_codes, inner=inner, kh=kh,
+                    kw=kw, sh=sh, sw=sw, dh=dh, dw=dw, bh=bh, wo=wo,
+                    row0=row0)
 
     if c_pad_corr:  # padded channels contributed LUT[off, off] = M[0, 0]
         acc = acc - c_pad_corr * lut[offset * n_codes + offset]
@@ -125,9 +157,9 @@ def fused_lut_conv_kernel(xp: jnp.ndarray, wq: jnp.ndarray,
                           ho_pad: int, c_pad_corr: int = 0,
                           interpret: bool = True,
                           emit_acc: bool = False) -> jnp.ndarray:
-    """xp: (N, C, Hp, Wp) float, spatially pre-padded, C a multiple of
-    ``inner``; wq: (kh*kw, C, Cout) shifted int weight codes, tap-major;
-    lut_flat: (n_codes**2,) int32; x_scale/x_zp: shape-(1,) f32;
+    """Whole-image variant. xp: (N, C, Hp, Wp) float, spatially pre-padded,
+    C a multiple of ``inner``; wq: (kh*kw, C, Cout) shifted int weight codes,
+    tap-major; lut_flat: (n_codes**2,) int32; x_scale/x_zp: shape-(1,) f32;
     w_scale_row: (1, Cout) f32. Returns (N, ho_pad, Wo, Cout) float32 — or
     the raw int32 accumulator with ``emit_acc=True``."""
     n, c, hp, wp = xp.shape
@@ -159,3 +191,102 @@ def fused_lut_conv_kernel(xp: jnp.ndarray, wq: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((c, hp, wp), jnp.int32)],
         interpret=interpret,
     )(xp, wq, lut_flat, x_scale, x_zp, w_scale_row)
+
+
+def _tiled_kernel(*refs, offset: int, n_codes: int, lo: int, hi: int,
+                  inner: int, kh: int, kw: int, sh: int, sw: int, dh: int,
+                  dw: int, bh: int, wo: int, n_copies: int, c_pad_corr: int,
+                  emit_acc: bool):
+    x_refs = refs[:n_copies]
+    w_ref, lut_ref, xs_ref, xz_ref, ws_ref, o_ref, aband_ref = refs[n_copies:]
+    j = pl.program_id(2)
+    xs = xs_ref[0]
+    xz = xz_ref[0]
+
+    @pl.when(j == 0)
+    def _quantize_band():
+        # once per (n, band): the n_copies row-shifted blocks concatenate to
+        # the halo'd band [i*S, (i + n_copies)*S); quantized codes persist in
+        # the band scratch across the Cout sub-grid. Halo rows shared with
+        # the neighbouring band are re-quantized there — the quantizer is
+        # deterministic, so the codes (and the accumulators built from them)
+        # are identical either way.
+        band = jnp.concatenate([r[...][0] for r in x_refs], axis=1)
+        aband_ref[...] = _quantize_codes(band, xs, xz, lo=lo, hi=hi,
+                                         offset=offset)
+
+    a_band = aband_ref[...]                         # (C, n_copies*S, Wp)
+    w = w_ref[...].astype(jnp.int32) + offset       # (kh*kw, C, bn)
+    lut = lut_ref[...]
+    bn = w.shape[2]
+
+    # band-local coordinates: the band block already starts at input row
+    # i*bh*sh, so every tap offset is static (row0 = 0)
+    acc = _acc_taps(a_band, w, lut, n_codes=n_codes, inner=inner, kh=kh,
+                    kw=kw, sh=sh, sw=sw, dh=dh, dw=dw, bh=bh, wo=wo,
+                    row0=0)
+
+    if c_pad_corr:
+        acc = acc - c_pad_corr * lut[offset * n_codes + offset]
+    if emit_acc:
+        o_ref[...] = acc.reshape(1, bh, wo, bn)
+    else:
+        out = acc.astype(jnp.float32) * (xs * ws_ref[...])
+        o_ref[...] = out.reshape(1, bh, wo, bn)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "offset", "n_codes", "lo", "hi", "inner", "kh", "kw", "sh", "sw",
+    "dh", "dw", "bh", "bn", "wo", "ho_pad", "n_copies", "c_pad_corr",
+    "interpret", "emit_acc"))
+def fused_lut_conv_tiled_kernel(xp: jnp.ndarray, wq: jnp.ndarray,
+                                lut_flat: jnp.ndarray, x_scale: jnp.ndarray,
+                                x_zp: jnp.ndarray, w_scale_row: jnp.ndarray,
+                                *, offset: int, n_codes: int, lo: int,
+                                hi: int, inner: int, kh: int, kw: int,
+                                sh: int, sw: int, dh: int, dw: int, bh: int,
+                                bn: int, wo: int, ho_pad: int, n_copies: int,
+                                c_pad_corr: int = 0, interpret: bool = True,
+                                emit_acc: bool = False) -> jnp.ndarray:
+    """Spatially-tiled variant. Same operand layout as
+    :func:`fused_lut_conv_kernel`, but ``xp`` rows must be padded to
+    ``(ho_pad // bh + n_copies - 1) * bh * sh`` so the ``n_copies``
+    row-shifted input blocks stay in bounds for the last band. Only the
+    halo'd band — never the whole image — is VMEM-resident per grid step."""
+    n, c, hp, wp = xp.shape
+    cout = wq.shape[2]
+    n_bands = ho_pad // bh
+    s_rows = bh * sh
+    assert c % inner == 0 and cout % bn == 0 and ho_pad % bh == 0, (
+        f"conv tiling mismatch: C={c}/inner={inner}, Cout={cout}/bn={bn}, "
+        f"Ho_pad={ho_pad}/bh={bh}")
+    assert hp == (n_bands + n_copies - 1) * s_rows, (
+        f"banded row padding mismatch: Hp={hp} != "
+        f"({n_bands} + {n_copies} - 1) * {s_rows}")
+    grid = (n, n_bands, cout // bn)
+
+    def x_spec(k):
+        # block k of the halo stack: rows [(i + k)*S, (i + k + 1)*S)
+        return pl.BlockSpec((1, c, s_rows, wp),
+                            lambda n, i, j, k=k: (n, 0, i + k, 0))
+
+    return pl.pallas_call(
+        functools.partial(_tiled_kernel, offset=offset, n_codes=n_codes,
+                          lo=lo, hi=hi, inner=inner, kh=kh, kw=kw, sh=sh,
+                          sw=sw, dh=dh, dw=dw, bh=bh, wo=wo,
+                          n_copies=n_copies, c_pad_corr=c_pad_corr,
+                          emit_acc=emit_acc),
+        grid=grid,
+        in_specs=[x_spec(k) for k in range(n_copies)] + [
+            pl.BlockSpec((kh * kw, c, bn), lambda n, i, j: (0, 0, j)),
+            pl.BlockSpec((n_codes * n_codes,), lambda n, i, j: (0,)),
+            pl.BlockSpec((1,), lambda n, i, j: (0,)),
+            pl.BlockSpec((1,), lambda n, i, j: (0,)),
+            pl.BlockSpec((1, bn), lambda n, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bh, wo, bn), lambda n, i, j: (n, i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, ho_pad, wo, cout), jnp.int32 if emit_acc else jnp.float32),
+        scratch_shapes=[pltpu.VMEM((c, n_copies * s_rows, wp), jnp.int32)],
+        interpret=interpret,
+    )(*([xp] * n_copies), wq, lut_flat, x_scale, x_zp, w_scale_row)

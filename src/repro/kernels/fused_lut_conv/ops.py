@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the patch-streaming fused conv kernel.
+"""jit'd public wrappers for the patch-streaming fused conv kernels.
 
 Resolves geometry and padding so every pad stays exact end to end:
 
@@ -6,21 +6,41 @@ Resolves geometry and padding so every pad stays exact end to end:
   the planning layer) uses 0.0, which the in-kernel quantizer maps to the
   zero-point and hence to shifted code 0 — identical to the 0.0 entries the
   im2col oracle's patch tensor carries, so no correction is needed;
-* **row padding** (Ho up to a multiple of the row-strip tile ``bh``) only
-  produces output rows that are sliced away; the input is padded tall enough
-  that the extra strips read zeros;
+* **row padding** (Ho up to a multiple of the row-strip tile ``bh``; for the
+  tiled kernel additionally up to the ``n_copies`` halo blocks the last band
+  reads) only produces output rows that are sliced away; the input is padded
+  tall enough that the extra strips read zeros;
 * **channel padding** (C up to a multiple of the gather chunk ``inner``)
   feeds shifted code 0 through every tap; the kernel subtracts
   ``pad_c * kh * kw * LUT[off, off]`` from the int32 accumulator *before*
   dequant (integer-space correction, like the dense kernel's K-pad);
 * **output-channel padding** (Cout up to a multiple of ``bn``) uses shifted
   code 0 weights and scale 0 — discarded columns.
+
+This module also owns the **VMEM model**: :func:`conv_vmem_bytes` /
+:func:`conv_tiled_vmem_bytes` compute the exact working set of each kernel
+at a tiling, from the same padded geometry (:func:`conv_padded_geometry`)
+the wrappers allocate — the single source of truth the planning layer
+(``core.acu``) budgets against, so the estimate can never silently diverge
+from the allocation.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
-from .kernel import fused_lut_conv_kernel
+from .kernel import fused_lut_conv_kernel, fused_lut_conv_tiled_kernel
+
+# conservative per-core VMEM budget for the fused conv kernels; images whose
+# whole-image working set exceeds it take the spatially-tiled kernel (and
+# geometries where even a one-row band exceeds it fall back to eager im2col)
+CONV_VMEM_BUDGET = 12 << 20
+
+# halo blocks per band the tiled kernel will stream before the planning
+# layer calls the geometry degenerate (each copy is a bh*stride-row block;
+# >4 means the dilated tap span dwarfs the band itself)
+MAX_BAND_COPIES = 4
 
 
 def conv_out_size(size: int, k: int, stride: int, dilation: int,
@@ -30,13 +50,34 @@ def conv_out_size(size: int, k: int, stride: int, dilation: int,
     return (size + pad[0] + pad[1] - eff_k) // stride + 1
 
 
+def conv_padded_geometry(h: int, w: int, kh: int, kw: int, sh: int, sw: int,
+                         dh: int, dw: int,
+                         padding: tuple[tuple[int, int], tuple[int, int]],
+                         bh: int) -> tuple[int, int, int, int, int]:
+    """(ho, wo, ho_pad, hp, wp) at row-strip height ``bh``: the exact padded
+    input extents the whole-image kernel allocates — conv padding plus
+    enough extra rows/cols that every tap of every (padded-to-``bh``) output
+    row stays in bounds, including the ``(kh-1)*dilation`` tap span that a
+    stride-only estimate misses."""
+    (ph0, ph1), (pw0, pw1) = padding
+    ho = conv_out_size(h, kh, sh, dh, (ph0, ph1))
+    wo = conv_out_size(w, kw, sw, dw, (pw0, pw1))
+    ho_pad = -(-ho // bh) * bh
+    need_h = (ho_pad - 1) * sh + (kh - 1) * dh + 1
+    need_w = (wo - 1) * sw + (kw - 1) * dw + 1
+    hp = max(h + ph0 + ph1, need_h)
+    wp = max(w + pw0 + pw1, need_w)
+    return ho, wo, ho_pad, hp, wp
+
+
 def pick_conv_tiling(c: int, ho: int, wo: int, cout: int, *,
                      inner: int = 32, bh: int = 0, bn: int = 128
                      ) -> tuple[int, int, int]:
-    """The (inner, bh, bn) tile sizes the kernel runs with at this geometry —
-    the single source of truth shared by :func:`fused_lut_conv` and the
-    planning layer's VMEM estimate (``core.acu._conv_vmem_estimate``), so
-    tuning one can never silently diverge from the other."""
+    """The (inner, bh, bn) tile sizes the whole-image kernel runs with at
+    this geometry — the single source of truth shared by
+    :func:`fused_lut_conv` and the planning layer's VMEM estimate
+    (``core.acu._conv_vmem_estimate``), so tuning one can never silently
+    diverge from the other."""
     inner = min(inner, c)
     if bh <= 0:  # target ~256 patch rows per strip
         bh = max(1, min(ho, 256 // max(wo, 1)))
@@ -45,13 +86,142 @@ def pick_conv_tiling(c: int, ho: int, wo: int, cout: int, *,
     return inner, bh, bn
 
 
+def _grid_step_bytes(c_pad: int, bh: int, wo: int, sh: int, sw: int,
+                     inner: int, bn: int) -> int:
+    """Per-grid-step working set shared by both kernels: the tap window
+    before/after the strided slice, the gather index/product tensors, and
+    the accumulator + output tile."""
+    bm = bh * wo
+    win_rows = (bh - 1) * sh + 1
+    win_cols = (wo - 1) * sw + 1
+    return (4 * c_pad * win_rows * win_cols    # pre-stride tap window
+            + 4 * bm * c_pad                   # strided a_t operand tile
+            + 8 * bm * inner * bn              # gather: idx + prods tensors
+            + 8 * bm * bn)                     # acc + out tile
+
+
+def conv_vmem_bytes(c: int, h: int, w: int, cout: int, kh: int, kw: int,
+                    sh: int, sw: int, dh: int, dw: int,
+                    padding: tuple[tuple[int, int], tuple[int, int]],
+                    n_codes: int, *, inner: int = 32, bh: int = 0,
+                    bn: int = 128) -> int:
+    """Working-set bytes of the *whole-image* kernel at this geometry, using
+    the kernel's own tile picks and the exact padded extents it allocates
+    (``conv_padded_geometry`` — including the dilated tap span that the
+    pre-PR 4 estimate omitted, which let near-budget dilated convs pick an
+    overflowing tile)."""
+    ho, wo, _, _, _ = conv_padded_geometry(h, w, kh, kw, sh, sw, dh, dw,
+                                           padding, 1)
+    inner, bh, bn = pick_conv_tiling(c, ho, wo, cout, inner=inner, bh=bh,
+                                     bn=bn)
+    _, _, _, hp, wp = conv_padded_geometry(h, w, kh, kw, sh, sw, dh, dw,
+                                           padding, bh)
+    c_pad = c + (-c) % inner
+    return (8 * c_pad * hp * wp                # f32 image block + i32 scratch
+            + 4 * n_codes * n_codes            # LUT
+            + 4 * kh * kw * c_pad * bn         # tap-major weight codes
+            + _grid_step_bytes(c_pad, bh, wo, sh, sw, inner, bn))
+
+
+def band_copies(bh: int, kh: int, sh: int, dh: int) -> int:
+    """Halo blocks per band: a band needs ``(bh-1)*sh + (kh-1)*dh + 1``
+    input rows; the tiled kernel streams them as ``n_copies`` row-shifted
+    blocks of ``bh*sh`` rows each."""
+    s_rows = bh * sh
+    need = (bh - 1) * sh + (kh - 1) * dh + 1
+    return -(-need // s_rows)
+
+
+def conv_tiled_vmem_bytes(c: int, h: int, w: int, cout: int, kh: int,
+                          kw: int, sh: int, sw: int, dh: int, dw: int,
+                          padding: tuple[tuple[int, int], tuple[int, int]],
+                          n_codes: int, *, inner: int, bh: int, bn: int
+                          ) -> int:
+    """Working-set bytes of the *tiled* kernel at band height ``bh``: only
+    the ``n_copies`` halo blocks are resident, never the whole image."""
+    ho, wo, _, _, wp = conv_padded_geometry(h, w, kh, kw, sh, sw, dh, dw,
+                                            padding, bh)
+    c_pad = c + (-c) % inner
+    rows = band_copies(bh, kh, sh, dh) * bh * sh
+    return (8 * c_pad * rows * wp              # f32 halo blocks + i32 scratch
+            + 4 * n_codes * n_codes            # LUT
+            + 4 * kh * kw * c_pad * bn         # tap-major weight codes
+            + _grid_step_bytes(c_pad, bh, wo, sh, sw, inner, bn))
+
+
+def pick_conv_spatial_tiling(c: int, h: int, w: int, cout: int, kh: int,
+                             kw: int, sh: int, sw: int, dh: int, dw: int,
+                             padding: tuple[tuple[int, int], tuple[int, int]],
+                             n_codes: int, *,
+                             budget: int = CONV_VMEM_BUDGET,
+                             inner: int = 32, bn: int = 128
+                             ) -> Optional[tuple[int, int, int, int]]:
+    """Choose (inner, bh, bn, n_copies) for the spatially-tiled kernel from
+    the VMEM model: the tallest output-row band whose halo'd working set
+    fits ``budget`` (taller bands = fewer grid steps and less halo
+    re-streaming). Returns ``None`` when the geometry is degenerate — even a
+    one-row band exceeds the budget (image too wide / too many channels) or
+    the dilated tap span needs more than :data:`MAX_BAND_COPIES` halo blocks
+    at every feasible band height — in which case the planning layer keeps
+    the audited eager-im2col fallback."""
+    ho, wo, _, _, _ = conv_padded_geometry(h, w, kh, kw, sh, sw, dh, dw,
+                                           padding, 1)
+    inner = min(inner, c)
+    bn = min(bn, cout)
+    for bh in range(min(ho, 64), 0, -1):
+        n_copies = band_copies(bh, kh, sh, dh)
+        if n_copies > MAX_BAND_COPIES:
+            continue
+        if conv_tiled_vmem_bytes(c, h, w, cout, kh, kw, sh, sw, dh, dw,
+                                 padding, n_codes, inner=inner, bh=bh,
+                                 bn=bn) <= budget:
+            return inner, bh, bn, n_copies
+    return None
+
+
+def _conv_operands(x, wq, x_scale, x_zp, w_scale, *, inner, bn,
+                   hp_rows, padding, bits):
+    """Shared operand prep: pad the image to exactly ``hp_rows`` x ``wp``
+    (conv padding + tile alignment; rows past ``hp_rows`` are never read by
+    any tap and are sliced off), rearrange weight codes tap-major, pad
+    channels/output-channels, broadcast the scales."""
+    n, c, h, w_in = x.shape
+    cout, cin_w, kh, kw = wq.shape
+    assert cin_w == c, (cin_w, c)
+    (ph0, ph1), (pw0, pw1) = padding
+    pad_c = (-c) % inner
+    pad_n = (-cout) % bn
+
+    xp = jnp.pad(x, ((0, 0), (0, pad_c), (ph0, ph1), (pw0, pw1)))
+    if xp.shape[2] < hp_rows:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, hp_rows - xp.shape[2]), (0, 0)))
+    else:
+        xp = xp[:, :, :hp_rows, :]
+
+    # weight codes to tap-major (kh*kw, C_pad, Cout_pad): each tap's (C, bn)
+    # slab is a contiguous block for the kernel's per-tap GEMM
+    wq_t = wq.transpose(2, 3, 1, 0).reshape(kh * kw, c, cout)
+    if pad_c or pad_n:
+        wq_t = jnp.pad(wq_t, ((0, 0), (0, pad_c), (0, pad_n)))
+
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(1)
+    xz = jnp.asarray(x_zp, jnp.float32).reshape(1)
+    ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(1, -1),
+                          (1, cout))
+    if pad_n:
+        ws = jnp.pad(ws, ((0, 0), (0, pad_n)))
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    return xp, wq_t, xs, xz, ws, pad_c, lo, hi
+
+
 def fused_lut_conv(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
                    offset: int, x_scale, x_zp, w_scale, *,
                    stride=(1, 1), padding=((0, 0), (0, 0)), dilation=(1, 1),
                    bits: int = 8, inner: int = 32, bh: int = 0, bn: int = 128,
                    interpret: bool = True, emit_acc: bool = False
                    ) -> jnp.ndarray:
-    """Fused approximate conv2d forward.
+    """Fused approximate conv2d forward (whole-image kernel).
 
     ``x``: (N, C, H, W) float activations; ``wq``: (Cout, C, kh, kw) shifted
     int weight codes (``code - zero_point``); ``lut`` may be (n_codes,
@@ -67,43 +237,20 @@ def fused_lut_conv(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
     n_codes = int(round(lut.size ** 0.5)) if lut.ndim == 1 else lut.shape[0]
     lut_flat = lut.reshape(-1)
     n, c, h, w_in = x.shape
-    cout, cin_w, kh, kw = wq.shape
-    assert cin_w == c, (cin_w, c)
+    cout, _, kh, kw = wq.shape
     sh, sw = stride
     dh, dw = dilation
-    (ph0, ph1), (pw0, pw1) = padding
-    ho = conv_out_size(h, kh, sh, dh, (ph0, ph1))
-    wo = conv_out_size(w_in, kw, sw, dw, (pw0, pw1))
-    lo = -(1 << (bits - 1))
-    hi = (1 << (bits - 1)) - 1
-
+    ho, wo, _, _, _ = conv_padded_geometry(h, w_in, kh, kw, sh, sw, dh, dw,
+                                           padding, 1)
     inner, bh, bn = pick_conv_tiling(c, ho, wo, cout, inner=inner, bh=bh,
                                      bn=bn)
-    pad_c = (-c) % inner
-    ho_pad = -(-ho // bh) * bh
-    pad_n = (-cout) % bn
-
-    # pad the image: conv padding + enough extra rows/cols that every tap of
-    # every (padded) output row stays in bounds
-    need_h = (ho_pad - 1) * sh + (kh - 1) * dh + 1
-    need_w = (wo - 1) * sw + (kw - 1) * dw + 1
-    extra_h = max(0, need_h - (h + ph0 + ph1))
-    extra_w = max(0, need_w - (w_in + pw0 + pw1))
-    xp = jnp.pad(x, ((0, 0), (0, pad_c), (ph0, ph1 + extra_h),
-                     (pw0, pw1 + extra_w)))
-
-    # weight codes to tap-major (kh*kw, C_pad, Cout_pad): each tap's (C, bn)
-    # slab is a contiguous block for the kernel's per-tap GEMM
-    wq_t = wq.transpose(2, 3, 1, 0).reshape(kh * kw, c, cout)
-    if pad_c or pad_n:
-        wq_t = jnp.pad(wq_t, ((0, 0), (0, pad_c), (0, pad_n)))
-
-    xs = jnp.asarray(x_scale, jnp.float32).reshape(1)
-    xz = jnp.asarray(x_zp, jnp.float32).reshape(1)
-    ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(1, -1),
-                          (1, cout))
-    if pad_n:
-        ws = jnp.pad(ws, ((0, 0), (0, pad_n)))
+    _, _, ho_pad, hp, wp = conv_padded_geometry(h, w_in, kh, kw, sh, sw, dh,
+                                                dw, padding, bh)
+    xp, wq_t, xs, xz, ws, pad_c, lo, hi = _conv_operands(
+        x, wq, x_scale, x_zp, w_scale, inner=inner, bn=bn,
+        hp_rows=hp, padding=padding, bits=bits)
+    if xp.shape[3] < wp:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, 0), (0, wp - xp.shape[3])))
 
     out = fused_lut_conv_kernel(
         xp, wq_t, lut_flat, xs, xz, ws,
@@ -111,4 +258,66 @@ def fused_lut_conv(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
         kh=kh, kw=kw, sh=sh, sw=sw, dh=dh, dw=dw, bh=bh, bn=bn, wo=wo,
         ho_pad=ho_pad, c_pad_corr=pad_c * kh * kw, interpret=interpret,
         emit_acc=emit_acc)
+    return out[:, :ho, :, :cout]
+
+
+def fused_lut_conv_tiled(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
+                         offset: int, x_scale, x_zp, w_scale, *,
+                         stride=(1, 1), padding=((0, 0), (0, 0)),
+                         dilation=(1, 1), bits: int = 8, inner: int = 0,
+                         bh: int = 0, bn: int = 0,
+                         budget: int = CONV_VMEM_BUDGET,
+                         interpret: bool = True, emit_acc: bool = False
+                         ) -> jnp.ndarray:
+    """Fused approximate conv2d forward, spatially tiled over output-row
+    bands — same contract and operand layout as :func:`fused_lut_conv`, but
+    only the ``bh*stride + (kh-1)*dilation`` halo'd input rows of one band
+    are VMEM-resident per grid step, so ImageNet-scale (224^2) feature maps
+    run fused instead of falling back to eager im2col.
+
+    ``bh=0`` picks the band height from the VMEM model
+    (:func:`pick_conv_spatial_tiling`; raises ``ValueError`` on degenerate
+    geometry); an explicit ``bh`` pins it (tests sweep tilings — every
+    choice is bit-identical, tiling only moves work between grid steps).
+    Bit-exact vs the whole-image kernel and the eager im2col +
+    ``fused_lut_dense`` oracle.
+    """
+    n_codes = int(round(lut.size ** 0.5)) if lut.ndim == 1 else lut.shape[0]
+    lut_flat = lut.reshape(-1)
+    n, c, h, w_in = x.shape
+    cout, _, kh, kw = wq.shape
+    sh, sw = stride
+    dh, dw = dilation
+    if bh <= 0:
+        tiling = pick_conv_spatial_tiling(
+            c, h, w_in, cout, kh, kw, sh, sw, dh, dw, padding, n_codes,
+            budget=budget, inner=inner if inner > 0 else 32,
+            bn=bn if bn > 0 else 128)
+        if tiling is None:
+            raise ValueError(
+                f"spatial tiling infeasible: even a one-row band exceeds the "
+                f"{budget >> 20} MiB VMEM budget at C={c}, W={w_in}")
+        inner, bh, bn, n_copies = tiling
+    else:
+        inner = min(inner if inner > 0 else 32, c)
+        bn = min(bn if bn > 0 else 128, cout)
+        n_copies = band_copies(bh, kh, sh, dh)
+
+    ho, wo, ho_pad, _, wp = conv_padded_geometry(h, w_in, kh, kw, sh, sw,
+                                                 dh, dw, padding, bh)
+    n_bands = ho_pad // bh
+    s_rows = bh * sh
+    hp_rows = (n_bands + n_copies - 1) * s_rows
+    xp, wq_t, xs, xz, ws, pad_c, lo, hi = _conv_operands(
+        x, wq, x_scale, x_zp, w_scale, inner=inner, bn=bn,
+        hp_rows=hp_rows, padding=padding, bits=bits)
+    if xp.shape[3] < wp:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, 0), (0, wp - xp.shape[3])))
+
+    out = fused_lut_conv_tiled_kernel(
+        xp, wq_t, lut_flat, xs, xz, ws,
+        offset=offset, n_codes=n_codes, lo=lo, hi=hi, inner=inner,
+        kh=kh, kw=kw, sh=sh, sw=sw, dh=dh, dw=dw, bh=bh, bn=bn, wo=wo,
+        ho_pad=ho_pad, n_copies=n_copies, c_pad_corr=pad_c * kh * kw,
+        interpret=interpret, emit_acc=emit_acc)
     return out[:, :ho, :, :cout]

@@ -1,9 +1,12 @@
-"""Pure-jnp oracle for the patch-streaming fused conv kernel.
+"""Pure-jnp oracle for the patch-streaming fused conv kernels.
 
 The reference IS the retired eager path: materialize the im2col patch tensor,
 then run the fused dense reference (same quantizer expression, same int32
-accumulate, same single combined-scale dequant). The Pallas kernel must match
-it bit for bit — that equality is the whole contract of the refactor.
+accumulate, same single combined-scale dequant). Both Pallas kernels — the
+whole-image one and the spatially-tiled one, at every band height — must
+match it bit for bit; that equality is the whole contract of the refactor
+(int32 tap accumulation is order-independent, so tiling can only move work
+between grid steps, never change a single bit of the result).
 """
 from __future__ import annotations
 

@@ -31,10 +31,12 @@ def conv2d_block(x: Array, w: Array, b: Optional[Array] = None, *,
     Routing is resolved per layer by :func:`repro.core.acu.conv_plan`:
     LUT-mode Pallas ACUs run the fused patch-streaming
     im2col->quantize->LUT-GEMM->dequant kernel (the patch tensor never
-    reaches HBM) and everything else takes the audited eager im2col
-    fallback; under an active mesh the plan shards batch x output-pixel
-    rows over ``acu_conv_rows`` and output channels over ``acu_conv_cols``.
-    ``acfg=None`` is the exact substrate conv.
+    reaches HBM) — whole-image resident inside the VMEM budget, spatially
+    tiled over halo'd output-row bands above it, so ImageNet-scale (224^2)
+    feature maps stay fused — and everything else takes the audited eager
+    im2col fallback; under an active mesh the plan shards batch x
+    output-row-band rows over ``acu_conv_rows`` and output channels over
+    ``acu_conv_cols``. ``acfg=None`` is the exact substrate conv.
     """
     y = conv2d(x, w, b, stride=stride, padding=padding, dilation=dilation,
                groups=groups, cfg=acfg)

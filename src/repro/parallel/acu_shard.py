@@ -140,37 +140,94 @@ def wrap_fused(fused_call: Callable[..., Array],
     return fn
 
 
+def _conv_band_ways(n: int, ho: int, n_rows: int) -> int:
+    """Output-row band ways for the conv rows partition: when the batch
+    alone cannot fill the ``acu_conv_rows`` axes (N < n_rows with N | n_rows),
+    each image's output rows split into ``n_rows // N`` halo'd bands so the
+    spare devices compute spatial bands instead of padding images."""
+    if n >= n_rows or n_rows % n != 0:
+        return 1
+    bw = n_rows // n
+    return bw if ho >= bw else 1
+
+
 def wrap_fused_conv(conv_call: Callable[..., Array],
                     acc_call: Callable[..., Array], ctx: MeshContext,
-                    part: GemmPartition, m00: int, n_taps: int
-                    ) -> Callable[..., Array]:
+                    part: GemmPartition, m00: int, n_taps: int, *,
+                    spec=None) -> Callable[..., Array]:
     """Shard a fused patch-streaming conv plan
     ``fn(x, wq, xs, xz, ws) -> (N, Ho, Wo, Cout) f32``.
 
     ``x``: (N, C, H, W) float; ``wq``: (Cout, C, kh, kw) shifted weight
-    codes. The batch dim shards over ``part.rows`` (the output-pixel rows of
-    the implicit im2col GEMM follow their image), output channels over
-    ``part.cols``, and the LUT replicates — every shard runs the full fused
-    kernel on its (batch, Cout) tile, so there are no collectives and the
-    wrap is bit-exact by construction. With ``part.k`` the *input channels*
-    split: each shard's kernel emits its raw int32 partial accumulator
-    (``acc_call``), partials psum in integer space, and the global
-    channel-shard-padding correction — ``pad_c * n_taps * M[0, 0]``, one
-    ``M[0, 0]`` per padded channel per kernel tap — lands exactly once,
+    codes. The *batch x output-row-band* dim shards over ``part.rows`` (the
+    output-pixel rows of the implicit im2col GEMM follow their image — and,
+    when the batch alone cannot fill the rows axes, each image splits into
+    halo'd output-row bands, each shard slicing its own slab inside the
+    ``shard_map``, so e.g. a single 224^2 image still uses every rows-axis
+    device). Output channels
+    shard over ``part.cols``, and the LUT replicates — every shard runs the
+    full fused kernel (whole-image or spatially tiled) on its
+    (batch x band, Cout) tile, so there are no collectives and the wrap is
+    bit-exact by construction: band slabs carry their own halo rows, and
+    int32 tap accumulation is order-independent. With ``part.k`` the *input
+    channels* split: each shard's kernel emits its raw int32 partial
+    accumulator (``acc_call``), partials psum in integer space, and the
+    global channel-shard-padding correction — ``pad_c * n_taps * M[0, 0]``,
+    one ``M[0, 0]`` per padded channel per kernel tap — lands exactly once,
     after the collective, before the single combined-scale dequant.
 
     ``n_taps`` is ``kh * kw`` (each padded channel feeds every tap).
+    ``spec`` is the plan's :class:`~repro.core.acu.ConvSpec`; band
+    partitioning needs its static geometry and is skipped when absent.
     """
     mesh = ctx.mesh
 
     def fn(x: Array, wq: Array, xs, xz, ws) -> Array:
-        n, c = x.shape[0], x.shape[1]
+        n, c, h = x.shape[0], x.shape[1], x.shape[2]
         cout = wq.shape[0]
-        pb = (-n) % part.n_rows
+        band_ways = 1
+        if spec is not None and part.rows:
+            band_ways = _conv_band_ways(n, spec.out_spatial[0], part.n_rows)
         pk = (-c) % part.n_k
         pn = (-cout) % part.n_cols
-        if pb or pk:
-            x = jnp.pad(x, ((0, pb), (0, pk), (0, 0), (0, 0)))
+
+        if band_ways > 1:
+            # halo'd band sharding: conv row padding materializes here
+            # (zeros), each shard dynamic-slices its own slab inside the
+            # shard_map from its rows-axis index — slab extraction must not
+            # go through an XLA concat feeding the shard_map (the SPMD
+            # partitioner mis-reshards concat-of-slices), and on real
+            # hardware this is where a halo exchange would go
+            (ph0, _), (pw0, pw1) = spec.padding
+            sh = spec.stride[0]
+            kh = spec.w_shape[2]
+            dh = spec.dilation[0]
+            ho, _ = spec.out_spatial
+            ho_band = -(-ho // band_ways)
+            slab_rows = (ho_band - 1) * sh + (kh - 1) * dh + 1
+            rows_needed = (band_ways - 1) * ho_band * sh + slab_rows
+            x = jnp.pad(x, ((0, 0), (0, pk),
+                            (ph0, max(0, rows_needed - h - ph0)), (0, 0)))
+            x = x[:, :, :rows_needed]   # rows past the last slab: never read
+            pb = 0
+            call_kw = {"padding": ((0, 0), (pw0, pw1))}
+
+            def extract(x_blk):
+                r = 0
+                for a in part.rows:     # linear index along the rows axes
+                    r = r * mesh.shape[a] + jax.lax.axis_index(a)
+                b_idx = r // band_ways
+                band = r % band_ways
+                return jax.lax.dynamic_slice(
+                    x_blk, (b_idx, 0, band * ho_band * sh, 0),
+                    (1, x_blk.shape[1], slab_rows, x_blk.shape[3]))
+        else:
+            pb = (-n) % part.n_rows
+            if pb or pk:
+                x = jnp.pad(x, ((0, pb), (0, pk), (0, 0), (0, 0)))
+            call_kw = {}
+            extract = lambda x_blk: x_blk
+
         if pn or pk:  # pad channels: shifted code 0; pad couts: discarded
             wq = jnp.pad(wq, ((0, pn), (0, pk), (0, 0), (0, 0)))
         ws_row = jnp.broadcast_to(
@@ -183,13 +240,18 @@ def wrap_fused_conv(conv_call: Callable[..., Array],
         rows = part._dim(part.rows)
         cols = part._dim(part.cols)
         kdim = part._dim(part.k)
+        # banded: the image batch replicates over the rows axes (each shard
+        # carves out its slab); otherwise the batch dim itself shards
+        x_rows = None if band_ways > 1 else rows
 
         if not part.k:
             def local(x_blk, wq_blk, xs_b, xz_b, ws_blk):
-                return conv_call(x_blk, wq_blk, xs_b, xz_b, ws_blk[0])
+                return conv_call(extract(x_blk), wq_blk, xs_b, xz_b,
+                                 ws_blk[0], **call_kw)
         else:
             def local(x_blk, wq_blk, xs_b, xz_b, ws_blk):
-                acc = acc_call(x_blk, wq_blk, xs_b, xz_b, ws_blk[0])
+                acc = acc_call(extract(x_blk), wq_blk, xs_b, xz_b,
+                               ws_blk[0], **call_kw)
                 acc = jax.lax.psum(acc, part.k)
                 if pk and m00:
                     # global channel-shard-padding correction: each padded
@@ -202,10 +264,15 @@ def wrap_fused_conv(conv_call: Callable[..., Array],
 
         out = shard_map(
             local, mesh=mesh,
-            in_specs=(P(rows, kdim, None, None), P(cols, kdim, None, None),
+            in_specs=(P(x_rows, kdim, None, None), P(cols, kdim, None, None),
                       P(None), P(None), P(None, cols)),
             out_specs=P(rows, None, None, cols), check_rep=False,
         )(x, wq, xs_a, xz_a, ws_row)
+        if band_ways > 1:
+            ho, wo = spec.out_spatial
+            out = out[:, :, :, :cout]
+            out = out.reshape(n, band_ways * out.shape[1], wo, cout)
+            return out[:, :ho]
         return out[:n, :, :, :cout]
 
     return fn

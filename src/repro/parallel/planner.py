@@ -306,11 +306,14 @@ def acu_conv_partition(ctx, *, float_accum: bool = False
     """The ``acu_conv`` partition rule: resolve ``acu_conv_rows`` /
     ``acu_conv_cols`` / ``acu_conv_k`` into a :class:`GemmPartition` for one
     approximate conv — ``rows`` shards the batch x output-pixel dim (the GEMM
-    M of the implicit im2col), ``cols`` the output channels, ``k`` the
-    input-channel contraction (opt-in; int32 psum before dequant). The
-    product LUT is always replicated (``acu_lut``). Same audited-fallback
-    discipline as :func:`acu_gemm_partition`: one mesh axis per conv dim,
-    ``k`` claims first, and a float accumulator (LOWRANK) drops ``k``.
+    M of the implicit im2col; when the batch alone cannot fill the rows
+    axes, ``acu_shard.wrap_fused_conv`` splits each image into halo'd
+    output-row *bands* over the spare ways — batch x band partitioning),
+    ``cols`` the output channels, ``k`` the input-channel contraction
+    (opt-in; int32 psum before dequant). The product LUT is always
+    replicated (``acu_lut``). Same audited-fallback discipline as
+    :func:`acu_gemm_partition`: one mesh axis per conv dim, ``k`` claims
+    first, and a float accumulator (LOWRANK) drops ``k``.
     """
     report: list[str] = []
     k = ctx.axes_for("acu_conv_k")

@@ -50,10 +50,12 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "acu_k": (),                   # contraction dim (K); empty = replicated
     "acu_lut": (),                 # product table: always replicated
     # ---- approximate conv (core/acu.py conv_plan routes): the "acu_conv"
-    # partition rule family. Batch x output-pixel rows shard like tokens,
+    # partition rule family. Batch x output-pixel rows shard like tokens
+    # (when the batch alone cannot fill the axes, images split into halo'd
+    # output-row bands — batch x band, see acu_shard.wrap_fused_conv),
     # output channels like any TP output dim; "acu_conv_k" opts in to
     # input-channel contraction sharding (int32 psum before dequant).
-    "acu_conv_rows": ("pod", "data"),  # batch x output-pixel rows
+    "acu_conv_rows": ("pod", "data"),  # batch x output-row-band rows
     "acu_conv_cols": ("model",),       # output channels (Cout)
     "acu_conv_k": (),                  # input channels (C); empty = replicated
 }

@@ -124,9 +124,13 @@ class VisionServeEngine:
     forward (``repro.models.vision.cnn_forward`` / ``resnet_forward`` / ...);
     every conv inside it resolves a :func:`~repro.core.acu.conv_plan`, so
     with a LUT-Pallas ``acfg`` the whole stack rides the fused
-    patch-streaming conv kernel, and with ``mesh=...`` the waves run under
-    the ``acu_conv`` partition (batch over ``("pod", "data")``, output
-    channels over ``("model",)``) — bit-for-bit the single-device logits.
+    patch-streaming conv kernels — including ImageNet-scale (224^2) inputs,
+    which since PR 4 resolve to the spatially-tiled kernel instead of
+    reporting the eager-im2col VMEM fallback (``plan_report`` shows the
+    chosen banding) — and with ``mesh=...`` the waves run under the
+    ``acu_conv`` partition (batch x output-row bands over
+    ``("pod", "data")``, output channels over ``("model",)``) — bit-for-bit
+    the single-device logits.
     """
 
     def __init__(self, params, forward_fn: Callable, *, slots: int = 8,

@@ -1,10 +1,15 @@
-"""ACU GEMM modes vs brute-force LUT accumulation oracle."""
+"""ACU GEMM modes vs brute-force LUT accumulation oracle, and the
+``conv_plan`` fallback-audit contract: every resolution path produces its
+exact audited report string, so a silent routing change can never slip
+through."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import build_lut, factorize_error, get_multiplier
-from repro.core.acu import AcuMode, make_acu
+from repro.core.acu import (CONV_VMEM_BUDGET, AcuMode, ConvSpec,
+                            _conv_vmem_estimate, _fmt_vmem, conv_plan,
+                            make_acu)
 
 
 def brute(lut, a, w, off):
@@ -73,6 +78,133 @@ def test_lowrank_factorization_metrics():
 def test_large_bitwidth_lut_falls_back_to_functional():
     acu = make_acu("mul12s_2KM", AcuMode.LUT)
     assert acu.mode == AcuMode.FUNCTIONAL  # paper §3.4 fallback
+
+
+# ---------------------------------------------------------------------------
+# conv_plan fallback audit: every resolution path pins its EXACT report
+# string (the silent-but-audited contract — tests lock the wording so a
+# routing change can never hide behind a reworded report)
+# ---------------------------------------------------------------------------
+
+FUSED_ACU = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True, fused=True)
+SMALL_SPEC = ConvSpec(x_shape=(2, 8, 12, 12), w_shape=(8, 8, 3, 3),
+                      padding=((1, 1), (1, 1)))
+BIG_SPEC = ConvSpec(x_shape=(1, 64, 224, 224), w_shape=(64, 64, 3, 3),
+                    padding=((1, 1), (1, 1)))
+
+
+def test_conv_plan_audit_whole_image():
+    """Inside the budget: fused_conv, empty report."""
+    plan = conv_plan(FUSED_ACU, SMALL_SPEC, fused=True)
+    assert plan.route == "fused_conv"
+    assert plan.report == ()
+    assert plan.tiling is None
+
+
+def test_conv_plan_audit_tiled():
+    """Above the budget: tiled, with the exact banding report."""
+    plan = conv_plan(FUSED_ACU, BIG_SPEC, fused=True)
+    est = _conv_vmem_estimate(BIG_SPEC, 256)
+    assert plan.route == "tiled"
+    inner, bh, bn, n_copies = plan.tiling
+    assert plan.report == (
+        f"image working set ~{_fmt_vmem(est)} exceeds the "
+        f"{_fmt_vmem(CONV_VMEM_BUDGET)} VMEM budget; spatially tiled over "
+        f"output-row bands (bands of {bh} output rows, "
+        f"{-(-224 // bh)} bands, {n_copies} halo blocks/band)",)
+
+
+def test_conv_plan_audit_degenerate_geometry():
+    """Above the budget AND no feasible band (budget below the 256 KiB
+    LUT floor): the audited eager im2col fallback remains."""
+    budget = 128 << 10
+    est = _conv_vmem_estimate(SMALL_SPEC, 256)
+    plan = conv_plan(FUSED_ACU, SMALL_SPEC, fused=True, vmem_budget=budget)
+    assert plan.route == "im2col"
+    assert plan.report == (
+        f"image working set ~{_fmt_vmem(est)} exceeds the "
+        f"{_fmt_vmem(budget)} VMEM budget and even a one-row band does not "
+        f"fit (degenerate geometry); falling back to eager im2col",)
+
+
+def test_conv_plan_audit_im2col_pin():
+    """route="im2col" pins the eager oracle with the exact report, even for
+    a plan that would otherwise fuse — and on an over-budget image the pin
+    short-circuits the budget resolution, so the report never claims a
+    tiling the plan does not use."""
+    plan = conv_plan(FUSED_ACU, SMALL_SPEC, fused=True, route="im2col")
+    assert plan.route == "im2col"
+    assert plan.fn is None
+    assert plan.report == ("route pinned to eager im2col by caller",)
+    big = conv_plan(FUSED_ACU, BIG_SPEC, fused=True, route="im2col")
+    assert big.route == "im2col" and big.tiling is None
+    assert big.report == ("route pinned to eager im2col by caller",)
+
+
+def test_conv_plan_audit_tiled_pin():
+    """route="tiled" on a fits-in-VMEM image records the pin."""
+    plan = conv_plan(FUSED_ACU, SMALL_SPEC, fused=True, route="tiled")
+    assert plan.route == "tiled"
+    assert plan.tiling is not None
+    assert plan.report == ("route pinned to spatially-tiled kernel by "
+                           "caller",)
+
+
+def test_conv_plan_audit_groups():
+    """groups != 1 keeps the vmapped-GEMM route with the exact report."""
+    gspec = ConvSpec(x_shape=(2, 8, 12, 12), w_shape=(8, 4, 3, 3),
+                     padding=((1, 1), (1, 1)), groups=2)
+    plan = conv_plan(FUSED_ACU, gspec, fused=True)
+    assert plan.route == "im2col_grouped"
+    assert plan.report == (
+        "groups=2: fused conv serves groups=1 only; grouped route keeps "
+        "the single-vmapped-GEMM semantics",)
+    dspec = ConvSpec(x_shape=(2, 8, 12, 12), w_shape=(8, 1, 3, 3),
+                     padding=((1, 1), (1, 1)), groups=8)
+    assert conv_plan(FUSED_ACU, dspec, fused=True).route == "im2col_depthwise"
+
+
+def test_conv_plan_audit_non_lut_mode():
+    """Non-LUT / non-Pallas ACUs fall back with the exact report."""
+    func = make_acu("mul8s_1L2H", AcuMode.FUNCTIONAL, use_pallas=True)
+    plan = conv_plan(func, SMALL_SPEC, fused=True)
+    assert plan.route == "im2col"
+    assert plan.report == (
+        "fused conv needs LUT mode + use_pallas + a built table (have "
+        "mode=functional, use_pallas=True)",)
+
+
+def test_conv_plan_audit_pins_raise_when_unservable():
+    """Pinned routes raise instead of silently falling back: fused_conv
+    above the budget, tiled on degenerate geometry, unknown route names."""
+    with pytest.raises(ValueError, match="fused_conv route unavailable"):
+        conv_plan(FUSED_ACU, BIG_SPEC, fused=True, route="fused_conv")
+    with pytest.raises(ValueError, match="tiled route unavailable"):
+        conv_plan(FUSED_ACU, SMALL_SPEC, fused=True, route="tiled",
+                  vmem_budget=128 << 10)
+    with pytest.raises(ValueError, match="unknown conv route"):
+        conv_plan(FUSED_ACU, SMALL_SPEC, route="warp")
+
+
+def test_conv_plan_audit_unfused_request_stays_silent():
+    """A plain unfused request (no fusion asked for) resolves to im2col with
+    NO report — the audit only records decisions the caller asked about."""
+    plan = conv_plan(FUSED_ACU, SMALL_SPEC, fused=False)
+    assert plan.route == "im2col"
+    assert plan.report == ()
+
+
+def test_conv_plan_describe_names_tiling():
+    """describe() surfaces the chosen banding for tiled plans."""
+    rep = conv_plan(FUSED_ACU, BIG_SPEC, fused=True).describe()
+    assert rep["route"] == "tiled"
+    inner, bh, bn, n_copies = conv_plan(FUSED_ACU, BIG_SPEC,
+                                        fused=True).tiling
+    assert rep["tiling"] == (
+        f"bands of {bh} output rows ({-(-224 // bh)} bands, "
+        f"{n_copies} halo blocks/band, inner={inner} bn={bn})")
+    assert conv_plan(FUSED_ACU, SMALL_SPEC, fused=True).describe()[
+        "tiling"] is None
 
 
 def test_12bit_functional_gemm():

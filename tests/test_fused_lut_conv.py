@@ -16,13 +16,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import assume, given, settings, strategies as st
 from repro.core import build_lut, get_multiplier, make_acu
 from repro.core.acu import (AcuMode, ConvSpec, conv_plan,
                             resolve_conv_padding)
 from repro.core.approx_ops import ApproxConfig, conv2d, conv_plan_report
 from repro.core.multipliers import make_exact
 from repro.core.quantization import acu_operand, quantize, symmetric_qparams
-from repro.kernels.fused_lut_conv.ops import fused_lut_conv
+from repro.kernels.fused_lut_conv.ops import (fused_lut_conv,
+                                              fused_lut_conv_tiled)
 from repro.kernels.fused_lut_conv.ref import fused_lut_conv_ref
 
 MULT = get_multiplier("mul8s_1L2H")
@@ -230,14 +232,18 @@ def test_conv2d_fake_quant_only_never_hits_the_integer_kernel():
         conv2d(x, w, None, cfg=fq, route="fused_conv")
 
 
-def test_conv_plan_vmem_fallback():
-    """Images whose whole-image working set exceeds the VMEM budget fall
-    back to the eager route with an audited report."""
+def test_conv_plan_vmem_resolves_tiled():
+    """Images whose whole-image working set exceeds the VMEM budget resolve
+    to the spatially-tiled kernel (NOT the eager fallback) with an audited
+    report naming the chosen banding."""
     spec = ConvSpec(x_shape=(1, 64, 224, 224), w_shape=(64, 64, 3, 3),
                     padding=((1, 1), (1, 1)))
     plan = conv_plan(ACU_FUSED, spec, fused=True)
-    assert plan.route == "im2col"
-    assert any("VMEM" in r for r in plan.report)
+    assert plan.route == "tiled"
+    assert plan.tiling is not None
+    assert plan.fn is not None
+    assert any("spatially tiled" in r for r in plan.report)
+    assert not any("im2col" in r for r in plan.report)
 
 
 def test_conv_plan_report_shape():
@@ -263,6 +269,287 @@ def test_resolve_conv_padding_matches_xla_same():
         ref = jax.lax.conv_general_dilated(x, w, padding="SAME", **args)
         ours = jax.lax.conv_general_dilated(x, w, padding=pad, **args)
         assert ours.shape == ref.shape, (hw, k, s, d, pad)
+
+
+# ---------------------------------------------------------------------------
+# spatially-tiled kernel (PR 4): tiled == whole-image == eager oracle
+# ---------------------------------------------------------------------------
+
+def _quantized_operands(x, w):
+    xqp = symmetric_qparams(jnp.max(jnp.abs(x)), 8)
+    wqp = symmetric_qparams(
+        jnp.maximum(jnp.max(jnp.abs(w), axis=(1, 2, 3)), 1e-9), 8, axis=0)
+    return xqp, wqp, acu_operand(quantize(w, wqp), wqp)
+
+
+def test_tiled_kernel_matches_whole_and_ref_across_band_heights():
+    """Any band height is bit-identical: int32 tap accumulation is
+    order-independent, so tiling only moves work between grid steps."""
+    x, w = _conv_operands((2, 5, 13, 11), (6, 5, 3, 3), seed=21)
+    xqp, wqp, wq = _quantized_operands(x, w)
+    pad = ((1, 1), (1, 1))
+    ref = fused_lut_conv_ref(x, wq, LUT.reshape(-1), 128, 256, xqp.scale,
+                             xqp.zero_point, wqp.scale, padding=pad, bits=8)
+    whole = fused_lut_conv(x, wq, LUT, 128, xqp.scale, xqp.zero_point,
+                           wqp.scale, padding=pad, bits=8, interpret=True)
+    assert jnp.array_equal(whole, ref)
+    for bh in (1, 2, 3, 5, 13):
+        tiled = fused_lut_conv_tiled(x, wq, LUT, 128, xqp.scale,
+                                     xqp.zero_point, wqp.scale, padding=pad,
+                                     bits=8, bh=bh, interpret=True)
+        assert jnp.array_equal(tiled, ref), bh
+
+
+def test_tiled_kernel_biased_m00_channel_pad():
+    """The tiled kernel's integer-space channel-pad correction, exercised
+    with a synthetic M[0, 0] = 7 multiplier at C=5 (pads to the gather
+    chunk)."""
+    biased = dataclasses.replace(
+        make_exact(8), name="mul8s_biased",
+        fn=lambda a, w: a.astype(jnp.int32) * w.astype(jnp.int32) + 7)
+    lut = jnp.asarray(build_lut(biased))
+    x, w = _conv_operands((2, 5, 9, 7), (4, 5, 3, 3), seed=23)
+    xqp, wqp, wq = _quantized_operands(x, w)
+    pad = ((1, 1), (1, 1))
+    ref = fused_lut_conv_ref(x, wq, lut.reshape(-1), 128, 256, xqp.scale,
+                             xqp.zero_point, wqp.scale, padding=pad, bits=8)
+    for bh in (1, 2, 4):
+        tiled = fused_lut_conv_tiled(x, wq, lut, 128, xqp.scale,
+                                     xqp.zero_point, wqp.scale, padding=pad,
+                                     bits=8, bh=bh, interpret=True)
+        assert jnp.array_equal(tiled, ref), bh
+
+
+def test_tiled_kernel_emit_acc_is_raw_accumulator():
+    """emit_acc=True on the tiled kernel returns the int32 accumulator
+    (channel padding already corrected) — what the channel-contraction
+    route psums — and dequantizing it reproduces the whole-image output
+    bitwise."""
+    x, w = _conv_operands((1, 6, 10, 8), (5, 6, 3, 3), seed=29)
+    xqp, wqp, wq = _quantized_operands(x, w)
+    pad = ((1, 1), (1, 1))
+    acc = fused_lut_conv_tiled(x, wq, LUT, 128, xqp.scale, xqp.zero_point,
+                               wqp.scale, padding=pad, bits=8, bh=2,
+                               interpret=True, emit_acc=True)
+    assert acc.dtype == jnp.int32
+    ref = fused_lut_conv(x, wq, LUT, 128, xqp.scale, xqp.zero_point,
+                         wqp.scale, padding=pad, bits=8, interpret=True)
+    dq = acc.astype(jnp.float32) * \
+        (xqp.scale * wqp.scale.reshape(1, 1, 1, -1))
+    assert jnp.array_equal(dq, ref)
+
+
+def test_conv2d_route_pin_tiled():
+    """route="tiled" forces the spatially-tiled kernel on a fits-in-VMEM
+    image and matches the whole-image fused route and the eager oracle
+    bitwise, eager and jit; fake_quant_only contradicts the pin."""
+    x, w = _conv_operands((2, 4, 11, 9), (5, 4, 3, 3), seed=31)
+    b = jnp.asarray(np.random.default_rng(31).normal(size=(5,)), jnp.float32)
+    y_t = conv2d(x, w, b, cfg=CFG, route="tiled")
+    y_f = conv2d(x, w, b, cfg=CFG)
+    y_o = conv2d(x, w, b, cfg=CFG, route="im2col")
+    assert jnp.array_equal(y_t, y_o)
+    assert jnp.array_equal(y_f, y_o)
+    j_t = jax.jit(lambda x, w: conv2d(x, w, None, cfg=CFG,
+                                      route="tiled"))(x, w)
+    j_o = jax.jit(lambda x, w: conv2d(x, w, None, cfg=CFG,
+                                      route="im2col"))(x, w)
+    assert jnp.array_equal(j_t, j_o)
+    fq = ApproxConfig(acu=ACU_FUSED, fake_quant_only=True)
+    with pytest.raises(ValueError):
+        conv2d(x, w, None, cfg=fq, route="tiled")
+
+
+def test_conv2d_tiled_ste_backward_matches_im2col_route():
+    """QAT through the tiled forward: gradients bitwise identical to the
+    eager route's STE gradients."""
+    x, w = _conv_operands((2, 3, 10, 10), (5, 3, 3, 3), seed=37)
+
+    def loss(x, w, route):
+        return (conv2d(x, w, None, cfg=CFG, route=route) ** 2).sum()
+
+    gx_t, gw_t = jax.grad(loss, argnums=(0, 1))(x, w, "tiled")
+    gx_o, gw_o = jax.grad(loss, argnums=(0, 1))(x, w, "im2col")
+    assert jnp.array_equal(gx_t, gx_o)
+    assert jnp.array_equal(gw_t, gw_o)
+
+
+def test_vmem_estimate_matches_kernel_allocation():
+    """Regression for the pre-PR 4 VMEM model bug: the estimate must count
+    the exact padded extents the kernel allocates — including the
+    (kh-1)*dilation halo rows a stride-only model misses — so near-budget
+    dilated convs can never pick an overflowing tile. Pinned against the
+    geometry helper the kernel wrapper itself pads with."""
+    from repro.kernels.fused_lut_conv.ops import (conv_padded_geometry,
+                                                  conv_vmem_bytes,
+                                                  pick_conv_tiling)
+    # dilation=3: the dilated tap span (kh-1)*dh = 12 dwarfs bh*sh
+    geoms = [
+        (8, 20, 20, 8, 5, 5, 1, 1, 3, 3, ((6, 6), (6, 6))),
+        (16, 30, 14, 32, 3, 3, 2, 2, 2, 2, ((2, 2), (2, 2))),
+        (4, 9, 33, 4, 3, 3, 1, 1, 1, 1, ((1, 1), (1, 1))),
+    ]
+    for (c, h, w, cout, kh, kw, sh, sw, dh, dw, pad) in geoms:
+        ho, wo, _, _, _ = conv_padded_geometry(h, w, kh, kw, sh, sw, dh, dw,
+                                               pad, 1)
+        inner, bh, bn = pick_conv_tiling(c, ho, wo, cout)
+        _, _, _, hp, wp = conv_padded_geometry(h, w, kh, kw, sh, sw, dh, dw,
+                                               pad, bh)
+        c_pad = c + (-c) % inner
+        est = conv_vmem_bytes(c, h, w, cout, kh, kw, sh, sw, dh, dw, pad, 256)
+        # the image-block + scratch term must cover the kernel's actual
+        # (C_pad, Hp, Wp) f32 block and int32 scratch allocation
+        assert est >= 8 * c_pad * hp * wp, (c, h, w, est)
+        # and the whole estimate is what conv_plan budgets against
+        from repro.core.acu import ConvSpec, _conv_vmem_estimate
+        spec = ConvSpec(x_shape=(1, c, h, w), w_shape=(cout, c, kh, kw),
+                        stride=(sh, sw), padding=pad, dilation=(dh, dw))
+        assert _conv_vmem_estimate(spec, 256) == est
+
+
+def test_spatial_tiling_pick_respects_budget():
+    """pick_conv_spatial_tiling returns a banding whose modeled working set
+    fits the budget, and None when even a one-row band cannot."""
+    from repro.kernels.fused_lut_conv.ops import (conv_tiled_vmem_bytes,
+                                                  pick_conv_spatial_tiling)
+    args = (64, 224, 224, 64, 3, 3, 1, 1, 1, 1, ((1, 1), (1, 1)), 256)
+    tiling = pick_conv_spatial_tiling(*args)
+    assert tiling is not None
+    inner, bh, bn, n_copies = tiling
+    assert conv_tiled_vmem_bytes(*args[:-1], 256, inner=inner, bh=bh,
+                                 bn=bn) <= 12 << 20
+    # a taller band would not have fit (the pick is the tallest feasible)
+    if bh < 64:
+        assert conv_tiled_vmem_bytes(*args[:-1], 256, inner=inner, bh=bh + 1,
+                                     bn=bn) > 12 << 20
+    # LUT alone (256 KiB) over budget -> no feasible band
+    assert pick_conv_spatial_tiling(*args, budget=128 << 10) is None
+
+
+# ---------------------------------------------------------------------------
+# property-based tiling harness: hypothesis strategy over ConvSpec geometry
+# (offline via tests/_hypothesis_compat.py)
+# ---------------------------------------------------------------------------
+
+_BIASED_MULT = dataclasses.replace(
+    make_exact(8), name="mul8s_biased",
+    fn=lambda a, w: a.astype(jnp.int32) * w.astype(jnp.int32) + 7)
+_BIASED_LUT = jnp.asarray(build_lut(_BIASED_MULT))
+ACU_BIASED = dataclasses.replace(
+    make_acu("mul8s_exact", AcuMode.LUT, use_pallas=True, fused=True),
+    multiplier=_BIASED_MULT, lut=build_lut(_BIASED_MULT))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    h=st.integers(6, 18),
+    w=st.integers(5, 17),
+    c=st.integers(1, 9),
+    cout=st.integers(1, 9),
+    k=st.sampled_from([1, 3, 5]),          # odd kernels
+    sh=st.integers(1, 3),
+    sw=st.integers(1, 3),
+    dh=st.integers(1, 2),
+    dw=st.integers(1, 2),
+    same=st.sampled_from([True, False]),
+    bh=st.integers(1, 4),                  # pinned band height under test
+    groups=st.sampled_from([1, 1, 1, 2]),
+    biased=st.sampled_from([False, True]),
+)
+def test_property_tiled_whole_oracle_bitwise(h, w, c, cout, k, sh, sw, dh,
+                                             dw, same, bh, groups, biased):
+    """Property harness over ConvSpec geometry: for every drawn (H, W, C,
+    Cout, kernel, stride, dilation, padding, band height, multiplier bias)
+    the spatially-tiled kernel, the whole-image kernel, and the eager
+    im2col + fused_lut_dense oracle agree BITWISE, eager and jit; and plan
+    resolution against a budget the whole image exceeds picks the tiled
+    route exactly when a feasible banding exists. Grouped draws assert the
+    preserved vmapped-GEMM route instead (the fused kernels serve groups=1).
+    """
+    if groups != 1:
+        assume(c % groups == 0 and cout % groups == 0)
+    x_shape = (2, c, h, w)
+    w_shape = (cout, c // groups, k, k)
+    stride, dil = (sh, sw), (dh, dw)
+    padding = "SAME" if same else "VALID"
+    pad = resolve_conv_padding(padding, x_shape, w_shape, stride, dil)
+    from repro.kernels.fused_lut_conv.ops import conv_out_size
+    ho = conv_out_size(h, k, sh, dh, pad[0])
+    wo = conv_out_size(w, k, sw, dw, pad[1])
+    assume(ho >= 1 and wo >= 1)
+    seed = (h * 31 + w * 17 + c * 13 + cout * 11 + k * 7 + sh * 5 + sw * 3
+            + dh * 2 + dw + bh + groups + int(biased))
+    x, wt = _conv_operands(x_shape, w_shape, seed=seed)
+    spec = ConvSpec(x_shape=x_shape, w_shape=w_shape, stride=stride,
+                    padding=pad, dilation=dil, groups=groups)
+    acu = ACU_BIASED if biased else ACU_FUSED
+    cfg = ApproxConfig(acu=acu)
+
+    if groups != 1:
+        plan = conv_plan(acu, spec, fused=True)
+        assert plan.route in ("im2col_grouped", "im2col_depthwise")
+        y = conv2d(x, wt, None, cfg=cfg, stride=stride, padding=padding,
+                   dilation=dil, groups=groups)
+        y2 = conv2d(x, wt, None, cfg=cfg, stride=stride, padding=padding,
+                    dilation=dil, groups=groups, route="im2col")
+        assert jnp.array_equal(y, y2)
+        return
+
+    lut = _BIASED_LUT if biased else LUT
+    xqp, wqp, wq = _quantized_operands(x, wt)
+    geom = dict(stride=stride, padding=pad, dilation=dil, bits=8)
+    ref = fused_lut_conv_ref(x, wq, lut.reshape(-1), 128, 256, xqp.scale,
+                             xqp.zero_point, wqp.scale, **geom)
+    whole = fused_lut_conv(x, wq, lut, 128, xqp.scale, xqp.zero_point,
+                           wqp.scale, interpret=True, **geom)
+    tiled = fused_lut_conv_tiled(x, wq, lut, 128, xqp.scale, xqp.zero_point,
+                                 wqp.scale, bh=bh, interpret=True, **geom)
+    assert jnp.array_equal(whole, ref)
+    assert jnp.array_equal(tiled, ref)
+    j_t = jax.jit(lambda x, wq, xs, xz, ws: fused_lut_conv_tiled(
+        x, wq, lut, 128, xs, xz, ws, bh=bh, interpret=True, **geom))(
+            x, wq, xqp.scale, xqp.zero_point, wqp.scale)
+    j_w = jax.jit(lambda x, wq, xs, xz, ws: fused_lut_conv(
+        x, wq, lut, 128, xs, xz, ws, interpret=True, **geom))(
+            x, wq, xqp.scale, xqp.zero_point, wqp.scale)
+    j_r = jax.jit(lambda x, wq, xs, xz, ws: fused_lut_conv_ref(
+        x, wq, lut.reshape(-1), 128, 256, xs, xz, ws, **geom))(
+            x, wq, xqp.scale, xqp.zero_point, wqp.scale)
+    assert jnp.array_equal(j_t, j_r)
+    assert jnp.array_equal(j_w, j_r)
+
+    # plan resolution: shrink the budget below the whole-image working set;
+    # the plan must pick the tiled route iff a feasible banding exists
+    from repro.kernels.fused_lut_conv.ops import (conv_vmem_bytes,
+                                                  pick_conv_spatial_tiling)
+    gargs = (c, h, w, cout, k, k, sh, sw, dh, dw, pad, 256)
+    budget = conv_vmem_bytes(*gargs) - 1
+    plan = conv_plan(acu, spec, fused=True, vmem_budget=budget)
+    tiling = pick_conv_spatial_tiling(*gargs, budget=budget)
+    if tiling is None:
+        assert plan.route == "im2col"
+        assert any("degenerate" in r for r in plan.report)
+    else:
+        assert plan.route == "tiled"
+        assert plan.tiling == tiling
+        out = plan(x, wq, xqp.scale, xqp.zero_point, wqp.scale)
+        assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.slow
+def test_imagenet_scale_conv_resolves_tiled_and_matches_oracle():
+    """The PR 4 acceptance geometry: a 1x64x224x224 conv2d resolves to
+    route="tiled" under the default budget (no im2col fallback anywhere in
+    the plan report) and is bitwise identical to the eager im2col +
+    fused_lut_dense oracle."""
+    rep = conv_plan_report((1, 64, 224, 224), (64, 64, 3, 3), CFG)
+    assert rep["route"] == "tiled"
+    assert rep["tiling"] is not None
+    assert not any("im2col" in r for r in rep["report"])
+    x, w = _conv_operands((1, 64, 224, 224), (64, 64, 3, 3), seed=224)
+    y_t = conv2d(x, w, None, cfg=CFG)
+    y_o = conv2d(x, w, None, cfg=CFG, route="im2col")
+    assert jnp.array_equal(y_t, y_o)
 
 
 def test_conv2d_separable_still_works():

@@ -287,6 +287,121 @@ def test_fused_conv_ste_backward_bitwise(mesh):
     assert jnp.array_equal(gw, gw_ref)
 
 
+# ---------------------------------------------------------------------------
+# spatially-tiled conv under the mesh (PR 4): batch x band over
+# ("pod", "data"), cols over ("model",), opt-in acu_conv_k
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("geom", [
+    ((1, 8, 17, 13), (9, 8, 3, 3), dict()),          # batch 1 -> 2-way bands
+    ((1, 6, 11, 9), (5, 6, 3, 3), dict(stride=(2, 2))),
+    ((1, 5, 14, 8), (7, 5, 3, 3), dict(dilation=(2, 2))),
+    ((2, 8, 10, 10), (8, 8, 3, 3), dict()),          # batch fills rows axes
+])
+def test_tiled_conv_sharded_bit_exact(mesh, geom):
+    """The spatially-tiled kernel under the mesh: batch x output-row bands
+    over the ``acu_conv_rows`` axes (a single image splits into halo'd
+    bands so the spare rows-axis devices compute spatial bands instead of
+    padding), output channels over ``acu_conv_cols`` — bitwise identical to
+    the single-device tiled route, eager and jit."""
+    shape, wshape, kw_ = geom
+    rng = np.random.default_rng(sum(shape))
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    w = jnp.asarray(rng.normal(size=wshape), jnp.float32)
+    cfg = ApproxConfig(acu=FUSED_CONV_ACU)
+    ref = conv2d(x, w, None, cfg=cfg, route="tiled", **kw_)
+    ref_j = jax.jit(lambda x, w: conv2d(x, w, None, cfg=cfg, route="tiled",
+                                        **kw_))(x, w)
+    with use_mesh(mesh):
+        from repro.core.acu import ConvSpec, conv_plan, resolve_conv_padding
+        pad = resolve_conv_padding(kw_.get("padding", "SAME"), shape, wshape,
+                                   kw_.get("stride", (1, 1)),
+                                   kw_.get("dilation", (1, 1)))
+        plan = conv_plan(FUSED_CONV_ACU, ConvSpec(
+            x_shape=shape, w_shape=wshape, padding=pad,
+            stride=kw_.get("stride", (1, 1)),
+            dilation=kw_.get("dilation", (1, 1))), route="tiled")
+        assert plan.route == "tiled"
+        assert plan.partition is not None and plan.partition.total == 8
+        out = conv2d(x, w, None, cfg=cfg, route="tiled", **kw_)
+        out_j = jax.jit(lambda x, w: conv2d(x, w, None, cfg=cfg,
+                                            route="tiled", **kw_))(x, w)
+    assert jnp.array_equal(out, ref)
+    assert jnp.array_equal(out_j, ref_j)
+
+
+def test_tiled_conv_channel_contraction_kpad_once(mesh):
+    """Tiled route with input channels sharded over model (``acu_conv_k``):
+    each shard's tiled kernel emits its int32 partial, partials psum, and
+    the channel-shard-padding correction lands exactly once. Biased
+    multiplier (M[0, 0] = 7) so a per-shard — or missing — correction shows
+    up as an integer offset."""
+    biased = dataclasses.replace(
+        make_exact(8), name="mul8s_biased",
+        fn=lambda a, w: a.astype(jnp.int32) * w.astype(jnp.int32) + 7)
+    lut = build_lut(biased)
+    acu = dataclasses.replace(
+        make_acu("mul8s_exact", AcuMode.LUT, use_pallas=True, fused=True),
+        multiplier=biased, lut=lut)
+    assert acu.m00() == 7
+    cfg = ApproxConfig(acu=acu)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(2, 6, 9, 9)), jnp.float32)  # C=6 -> pad 2
+    w = jnp.asarray(rng.normal(size=(5, 6, 3, 3)), jnp.float32)
+    ref = conv2d(x, w, None, cfg=cfg, route="tiled")
+    rules = {"acu_conv_k": ("model",), "acu_conv_cols": ()}
+    with use_mesh(mesh, rules):
+        from repro.core.acu import ConvSpec, conv_plan
+        plan = conv_plan(acu, ConvSpec(
+            x_shape=(2, 6, 9, 9), w_shape=(5, 6, 3, 3),
+            padding=((1, 1), (1, 1))), route="tiled")
+        assert plan.partition.k == ("model",)
+        out = conv2d(x, w, None, cfg=cfg, route="tiled")
+    assert jnp.array_equal(out, ref)
+
+
+def test_tiled_conv_banded_ste_backward_bitwise(mesh):
+    """Sharded QAT gradients through the banded tiled forward (batch 1:
+    forward bands over data, backward GEMMs row/col-sharded) are bitwise
+    identical to single-device ones."""
+    cfg = ApproxConfig(acu=FUSED_CONV_ACU)
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(1, 5, 12, 10)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(6, 5, 3, 3)), jnp.float32)
+
+    def loss(x, w):
+        return (conv2d(x, w, None, cfg=cfg, route="tiled") ** 2).sum()
+
+    gx_ref, gw_ref = jax.grad(loss, argnums=(0, 1))(x, w)
+    with use_mesh(mesh):
+        gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert jnp.array_equal(gx, gx_ref)
+    assert jnp.array_equal(gw, gw_ref)
+
+
+@pytest.mark.slow
+def test_imagenet_scale_tiled_sharded_bit_exact(mesh):
+    """The PR 4 acceptance geometry on the mesh: 1x64x224x224 resolves to
+    route="tiled" (band sharding over data: one image, two halo'd 112-row
+    bands; cols over model) and is bitwise identical to the single-device
+    tiled output — which the single-device slow test pins against the eager
+    im2col + fused_lut_dense oracle."""
+    cfg = ApproxConfig(acu=FUSED_CONV_ACU)
+    rng = np.random.default_rng(224)
+    x = jnp.asarray(rng.normal(size=(1, 64, 224, 224)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 64, 3, 3)), jnp.float32)
+    ref = conv2d(x, w, None, cfg=cfg)
+    with use_mesh(mesh):
+        from repro.core.acu import ConvSpec, conv_plan
+        plan = conv_plan(FUSED_CONV_ACU, ConvSpec(
+            x_shape=(1, 64, 224, 224), w_shape=(64, 64, 3, 3),
+            padding=((1, 1), (1, 1))))
+        assert plan.route == "tiled"
+        assert plan.partition is not None
+        out = conv2d(x, w, None, cfg=cfg)
+    assert jnp.array_equal(out, ref)
+
+
 def test_vision_serve_engine_mesh_parity(mesh):
     """VisionServeEngine(mesh=...) produces the same logits as the
     replicated engine — the conv plans change where tiles run, not what
@@ -307,3 +422,12 @@ def test_vision_serve_engine_mesh_parity(mesh):
         (4, 3, 32, 32), (8, 3, 3, 3), cfg)
     assert rep["route"] == "fused_conv"
     assert rep["partition"] is not None
+    # ImageNet-scale serving no longer reports the eager-im2col fallback:
+    # the plan resolves to the spatially-tiled kernel (PR 4)
+    rep224 = VisionServeEngine(params, cnn_forward, slots=4, acfg=cfg,
+                               mesh=mesh).plan_report(
+        (4, 64, 224, 224), (64, 64, 3, 3), cfg)
+    assert rep224["route"] == "tiled"
+    assert rep224["tiling"] is not None
+    assert rep224["partition"] is not None
+    assert not any("falling back" in r for r in rep224["report"])
