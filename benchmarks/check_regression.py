@@ -19,7 +19,14 @@ new record is more than ``tol`` slower than the old record's:
   entry additionally enforces a *within-record* floor: tiled must stay at
   least as fast as the eager im2col baseline it replaced
   (``speedup_vs_im2col >= 1``), so the tiled route can never silently
-  become a de-optimization.
+  become a de-optimization;
+* the ``train`` section's ``*_fused_bwd`` rows (dense + 224^2 conv
+  train-step, docs/fused_conv.md "Approximate backward") — gated from PR 6
+  on, each with a within-record floor ``speedup_vs_eager_bwd >= 1``: the
+  fused approximate backward must never fall behind the materialized eager
+  approximate backward it replaced. The ``*_exact_bwd`` rows are context
+  only — interpret-mode LUT gathers cannot beat native XLA f32 GEMMs, so
+  exact-f32 is deliberately NOT a floor baseline.
 
 Records are only comparable within the same host/backend pair; the committed
 series is produced on the dev container, so CI gates on the committed files
@@ -34,20 +41,30 @@ import os
 import re
 import sys
 
+# (name, record section, row selector)
 GATES = [
-    ("layers.fused@256^3",
+    ("layers.fused@256^3", "layers",
      {"mode": "fused", "M": 256, "K": 256, "N": 256}),
-    ("layers.conv_fused@vgg3x3",
+    ("layers.conv_fused@vgg3x3", "layers",
      {"mode": "conv_fused", "M": 2048, "K": 576, "N": 128}),
-    ("layers.conv_tiled@imagenet224",
+    ("layers.conv_tiled@imagenet224", "layers",
      {"mode": "conv_tiled", "M": 50176, "K": 576, "N": 64}),
+    ("train.dense_fused_bwd", "train",
+     {"mode": "train_dense_fused_bwd"}),
+    ("train.conv224_fused_bwd", "train",
+     {"mode": "train_conv224_fused_bwd"}),
 ]
 
-# within-record floors on the NEW record: (name, row selector, field, min)
+# within-record floors on the NEW record:
+# (name, section, row selector, field, min)
 FLOORS = [
-    ("layers.conv_tiled@imagenet224 >= im2col",
+    ("layers.conv_tiled@imagenet224 >= im2col", "layers",
      {"mode": "conv_tiled", "M": 50176, "K": 576, "N": 64},
      "speedup_vs_im2col", 1.0),
+    ("train.dense_fused_bwd >= eager", "train",
+     {"mode": "train_dense_fused_bwd"}, "speedup_vs_eager_bwd", 1.0),
+    ("train.conv224_fused_bwd >= eager", "train",
+     {"mode": "train_conv224_fused_bwd"}, "speedup_vs_eager_bwd", 1.0),
 ]
 
 
@@ -62,9 +79,9 @@ def latest_pair() -> tuple[str, str]:
     return recs[-2][1], recs[-1][1]
 
 
-def _layers_entry(record: dict, path: str, gate: dict) -> float | None:
+def _entry(record: dict, path: str, section: str, gate: dict) -> float | None:
     assert record.get("schema") == "adapt-bench-v1", (path, record.get("schema"))
-    for row in record.get("layers", []):
+    for row in record.get(section, []):
         if all(row.get(k) == v for k, v in gate.items()):
             return float(row["us_per_call"])
     return None
@@ -86,9 +103,9 @@ def main(argv=None) -> int:
         new_rec = json.load(fh)
 
     failed = False
-    for name, gate in GATES:
-        old = _layers_entry(old_rec, args.old, gate)
-        new = _layers_entry(new_rec, args.new, gate)
+    for name, section, gate in GATES:
+        old = _entry(old_rec, args.old, section, gate)
+        new = _entry(new_rec, args.new, section, gate)
         if old is None and new is None:
             print(f"{name}: absent from both records (gate not yet active)")
             continue
@@ -107,8 +124,8 @@ def main(argv=None) -> int:
               f"{'OK' if ok else 'REGRESSION'}")
         failed |= not ok
 
-    for name, sel, field, floor in FLOORS:
-        row = next((r for r in new_rec.get("layers", [])
+    for name, section, sel, field, floor in FLOORS:
+        row = next((r for r in new_rec.get(section, [])
                     if all(r.get(k) == v for k, v in sel.items())), None)
         if row is None:
             print(f"{name}: entry absent from {args.new} (floor not yet "

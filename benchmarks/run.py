@@ -11,6 +11,10 @@ sections:
             vs unfused quantize->LUT-GEMM->dequant vs functional baseline;
             plus conv2d routes (conv_fused patch-streaming kernel vs the
             eager im2col path) at a VGG-ish 3x3 and a 1x1 pointwise layer
+  [train]   train-step (fwd + STE backward) per backward route: fused
+            approximate backward vs the materialized eager approximate
+            backward vs the exact-f32 backward (context), dense and 224^2
+            x 64ch conv geometry
   [sharded] the same routes under a 2x4 host-platform (data, model) mesh
             (needs XLA_FLAGS=--xla_force_host_platform_device_count=8;
             printed as skipped otherwise)
@@ -177,6 +181,82 @@ def conv_modes(records: list | None = None):
                                 "speedup_vs_im2col": round(base / us, 3)})
 
 
+def train_modes(records: list | None = None):
+    """One optimizer-free train step (forward + STE backward via jax.grad)
+    per backward route — the fused-approximate-backward headline.
+
+    ``*_fused_bwd`` runs ``cfg.approx_bwd`` through the fused in-kernel
+    routes (dense ``fused_lut_bwd``; banded conv weight-grad + per-band gx
+    GEMMs — the im2col patch tensor never exists in HBM); ``*_eager_bwd``
+    is the same approximate backward through the materialized unfused
+    composition (conv pinned to ``route="im2col"``); ``*_exact_bwd`` is the
+    default exact-f32 STE backward, recorded as CONTEXT ONLY — interpret-mode
+    LUT gathers can never beat native XLA f32 GEMMs, so the regression floor
+    compares fused vs eager approx instead (benchmarks/check_regression.py).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import make_acu
+    from repro.core.acu import AcuMode
+    from repro.core.approx_ops import ApproxConfig, approx_dense, conv2d
+
+    acu_fused = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True,
+                         fused=True)
+    acu_unfused = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True)
+    rng = np.random.default_rng(6)
+    print("mode,train,M,K,N,us_per_call,vs_eager_bwd")
+
+    def emit(times, tag, M, K, N):
+        base = times[f"train_{tag}_eager_bwd"]
+        for mode, us in times.items():
+            print(f"{mode},{tag},{M},{K},{N},{us:.0f},{base/us:.2f}x")
+            if records is not None:
+                row = {"mode": mode, "train": tag, "M": M, "K": K, "N": N,
+                       "us_per_call": round(us, 1)}
+                if not mode.endswith("exact_bwd"):   # exact is context only
+                    row["speedup_vs_eager_bwd"] = round(base / us, 3)
+                records.append(row)
+
+    # dense train step at the VGG-ish im2col GEMM geometry
+    M, K, N = 2048, 576, 128
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    times = {}
+    for mode, cfg, reps in [
+        ("train_dense_fused_bwd",
+         ApproxConfig(acu=acu_fused, approx_bwd=True), 3),
+        ("train_dense_eager_bwd",
+         ApproxConfig(acu=acu_unfused, approx_bwd=True), 3),
+        ("train_dense_exact_bwd", ApproxConfig(acu=acu_fused), 3),
+    ]:
+        fn = jax.jit(jax.grad(
+            lambda x, w, cfg=cfg: approx_dense(x, w, None, cfg).sum(),
+            argnums=(0, 1)))
+        times[mode] = _time_call(lambda: fn(x, w), reps=reps)
+    emit(times, "dense", M, K, N)
+
+    # conv train step at the ImageNet-scale 224^2 x 64ch geometry: fused
+    # rides the banded backward, eager materializes the (50176, 576) patch
+    # GEMMs (~a minute per call -> few reps)
+    xc = jnp.asarray(rng.normal(size=(1, 64, 224, 224)), jnp.float32)
+    wc = jnp.asarray(rng.normal(size=(64, 64, 3, 3)), jnp.float32)
+    times = {}
+    for mode, cfg, route, reps in [
+        ("train_conv224_fused_bwd",
+         ApproxConfig(acu=acu_fused, approx_bwd=True), None, 2),
+        ("train_conv224_eager_bwd",
+         ApproxConfig(acu=acu_fused, approx_bwd=True), "im2col", 1),
+        ("train_conv224_exact_bwd", ApproxConfig(acu=acu_fused), None, 2),
+    ]:
+        fn = jax.jit(jax.grad(
+            lambda x, w, cfg=cfg, route=route:
+                conv2d(x, w, cfg=cfg, route=route).sum(),
+            argnums=(0, 1)))
+        times[mode] = _time_call(lambda: fn(xc, wc), reps=reps)
+    emit(times, "conv224", 1 * 224 * 224, 64 * 9, 64)
+
+
 def sharded_modes(records: list | None = None):
     """approx_dense under an active 2x4 host mesh vs replicated (docs/
     sharding.md). On the CPU interpreter the sharded numbers mostly measure
@@ -253,12 +333,15 @@ def main(argv=None):
 
     kernel_records: list = []
     layer_records: list = []
+    train_records: list = []
     sharded_records: list = []
     section("kernels")
     kernel_micro(kernel_records)
     section("layers")
     layer_modes(layer_records)
     conv_modes(layer_records)
+    section("train")
+    train_modes(train_records)
     section("sharded")
     sharded_modes(sharded_records)
 
@@ -274,6 +357,7 @@ def main(argv=None):
                      "interpret_mode": True},
             "kernels": kernel_records,
             "layers": layer_records,
+            "train": train_records,
             "sharded": sharded_records,
         }
         with open(args.json, "w") as fh:

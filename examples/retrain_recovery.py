@@ -120,9 +120,40 @@ def lstm_flow(acu_name: str):
     print(f"after retrain:   {acc(p, apx):.3f}")
 
 
+def fused_bwd_qat_step(acu_name: str):
+    """One ImageNet-scale QAT step with the fused approximate backward
+    (PR 6): a 1x64x224x224 conv whose STE gradients run through the ACU
+    in-kernel — banded weight-grad + per-band input-grad GEMMs, so the
+    (N*Ho*Wo, Kh*Kw*Cin) im2col patch tensor never exists in HBM in either
+    direction (docs/fused_conv.md, "Approximate backward")."""
+    print(f"\n=== fused approx-backward QAT step x {acu_name} (1x64x224x224) ===")
+    from repro.core.approx_ops import conv2d, conv_plan_report
+
+    acu = make_acu(acu_name, AcuMode.LUT, use_pallas=True, fused=True)
+    apx = ApproxConfig(acu=acu, approx_bwd=True)
+    x = jax.random.normal(KEY, (1, 64, 224, 224), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 64, 3, 3)) * 0.05
+
+    rep = conv_plan_report(x.shape, w.shape, apx)
+    print(f"forward route: {rep['route']}, backward route: "
+          f"{rep.get('bwd_route')} (no materialized im2col)")
+
+    def loss(w):
+        return (conv2d(x, w, cfg=apx) ** 2).mean()
+
+    step = jax.jit(lambda w: w - 1e-2 * jax.grad(loss)(w))
+    l0 = float(loss(w))
+    w = step(w)                      # the QAT step: grads via the LUT
+    print(f"loss {l0:.5f} -> {float(loss(w)):.5f} after one fused-bwd step")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--acu", default="mul8s_1L2H")
+    ap.add_argument("--skip-imagenet-scale", action="store_true",
+                    help="skip the 224^2 fused-backward QAT step")
     args = ap.parse_args()
     cnn_flow(args.acu)
     lstm_flow(args.acu)
+    if not args.skip_imagenet_scale:
+        fused_bwd_qat_step(args.acu)

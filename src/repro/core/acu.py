@@ -335,6 +335,94 @@ def matmul_plan(acu: Acu, *, a_bits: Optional[int] = None,
                       fused=False, fn=fn, partition=partition)
 
 
+def matmul_bwd_plan(acu: Acu, *, a_bits: Optional[int] = None,
+                    fused: Optional[bool] = None, mesh=None
+                    ) -> tuple[Callable[..., Array], Callable[..., Array]]:
+    """Resolve the *approximate* STE backward GEMM pair for one ACU.
+
+    Returns ``(gx_fn, gw_fn)``; each is ``fn(a, b, sa, sb) -> f32 (M, N)``
+    computing the approximate GEMM of two **float** operands quantized
+    per-tensor symmetric (zero-point 0 — gradients are zero-centred) with a
+    single combined-scale dequant ``acc * (sa * sb)``. The caller computes
+    ``sa``/``sb`` on the full tensors (``symmetric_qparams(amax, a_bits)``)
+    so every mesh shard sees identical scales. The two callables differ only
+    in their mesh partition: each backward GEMM is the forward GEMM with
+    permuted roles (``gx = g @ wf.T`` contracts the forward's cols,
+    ``gw = xf.T @ g`` contracts the forward's rows), so the permuted
+    partitions from :func:`~repro.parallel.planner.bwd_gemm_partitions`
+    keep the residuals sharded exactly as the forward left them and psum
+    the int32 partials over the contraction axes before dequant.
+
+    Fused (LUT + Pallas + table) resolves to the in-kernel-quantizing
+    ``fused_lut_bwd`` kernel; everything else quantizes outside and runs
+    the mode's unfused integer GEMM — the two are bit-identical for LUT
+    mode, making the unfused composition the test oracle. LOWRANK
+    (float accumulator) computes replicated under a mesh: its partials
+    cannot psum bit-exactly.
+    """
+    fused = acu.fused if fused is None else fused
+    a_bits = acu.bits if a_bits is None else a_bits
+    ctx = _resolve_mesh(mesh)
+    gx_part = gw_part = None
+    if ctx is not None and acu.mode != AcuMode.LOWRANK:
+        from repro.parallel import acu_shard
+        fwd_part = acu_shard.resolve_partition(ctx)
+        if fwd_part is not None:
+            from repro.parallel.planner import bwd_gemm_partitions
+            gx_part, gw_part = bwd_gemm_partitions(fwd_part)
+
+    if fused and acu.mode == AcuMode.LUT and acu.use_pallas \
+            and acu.lut is not None:
+        from repro.kernels.fused_lut_dense import ops as fops
+
+        def bwd_call(a, b, sa, sb, *, emit_acc=False):
+            # jnp.asarray stays inside fn: see fused_call in matmul_plan
+            return fops.fused_lut_bwd(a, b, jnp.asarray(acu.lut), acu.offset,
+                                      sa, sb, bits=a_bits,
+                                      interpret=acu.interpret,
+                                      emit_acc=emit_acc)
+
+        def route(part):
+            if part is None:
+                return lambda a, b, sa, sb: bwd_call(a, b, sa, sb)
+            from repro.parallel import acu_shard
+            return acu_shard.wrap_fused_bwd(
+                bwd_call, lambda *args: bwd_call(*args, emit_acc=True),
+                ctx, part, acu.m00())
+
+        return route(gx_part), route(gw_part)
+
+    # unfused: quantize outside (full tensors, global scales), run the
+    # mode's integer GEMM — sharded via the permuted partition when a mesh
+    # is active — dequant once. Bit-identical to the fused kernel for LUT
+    # mode (same quantizer expression, same int32 sums, same combined-scale
+    # rounding), so this composition doubles as the bit-exactness oracle.
+    base = _resolve_unfused(acu)
+    lo = -(1 << (a_bits - 1))
+    hi = (1 << (a_bits - 1)) - 1
+
+    def route(part):
+        gemm = base
+        if part is not None:
+            from repro.parallel import acu_shard
+            gemm = acu_shard.wrap_unfused(base, ctx, part, acu.m00())
+
+        def fn(a, b, sa, sb):
+            from .quantization import pin_rounding
+            sa_ = jnp.asarray(sa, jnp.float32)
+            sb_ = jnp.asarray(sb, jnp.float32)
+            qa = jnp.clip(jnp.round(a.astype(jnp.float32) / sa_), lo, hi
+                          ).astype(jnp.int32)
+            qb = jnp.clip(jnp.round(b.astype(jnp.float32) / sb_), lo, hi
+                          ).astype(jnp.int32)
+            acc = gemm(qa, qb)
+            return acc.astype(jnp.float32) * pin_rounding(sa_ * sb_)
+
+        return fn
+
+    return route(gx_part), route(gw_part)
+
+
 # ---------------------------------------------------------------------------
 # conv planning layer: geometry x (mode, bits, use_pallas, fused) x mesh
 # ---------------------------------------------------------------------------
@@ -466,6 +554,18 @@ class ConvPlan:
     partition the im2col routes will resolve. ``report`` carries every
     audited fallback decision. ``tiling`` is the resolved
     ``(inner, bh, bn, n_copies)`` spatial tiling for the tiled route.
+
+    ``bwd_route`` resolves where the *approximate* STE backward runs when a
+    consumer enables it (``ApproxConfig.approx_bwd``): ``"banded"`` — the
+    weight-grad streams halo'd output-row bands through
+    ``kernels/fused_lut_conv.fused_lut_conv_bwd_w`` and the input-grad
+    composes per-band ``fused_lut_bwd`` GEMMs with an integer scatter, so
+    the im2col patch tensor never materializes in the backward either;
+    ``"im2col"`` — the audited fallback (degenerate geometry under the same
+    VMEM budget) that materializes patches and runs the dense approximate
+    backward GEMMs. ``None`` for plans whose forward is not fused (their
+    backward composes through the dense STE as before).
+    ``bwd_tiling`` is the resolved ``(bh, bn, mc, n_copies)`` banding.
     """
 
     mode: AcuMode
@@ -478,6 +578,8 @@ class ConvPlan:
     partition: Optional[object] = None
     report: tuple[str, ...] = ()
     tiling: Optional[tuple[int, int, int, int]] = None
+    bwd_route: Optional[str] = None
+    bwd_tiling: Optional[tuple[int, int, int, int]] = None
 
     def __call__(self, *args) -> Array:
         assert self.fn is not None, f"route {self.route} has no direct kernel"
@@ -496,6 +598,7 @@ class ConvPlan:
                       f"{n_copies} halo blocks/band, inner={inner} bn={bn})")
         return {
             "route": self.route,
+            "bwd_route": self.bwd_route,
             "mode": self.mode.value,
             "fused": self.fused,
             "gemm": f"M={m} K={k} N={n}",
@@ -625,12 +728,29 @@ def conv_plan(acu: Acu, spec: ConvSpec, *, a_bits: Optional[int] = None,
                 fused_call,
                 lambda *args, **kw: fused_call(*args, emit_acc=True, **kw),
                 ctx, partition, acu.m00(), kh * kw, spec=spec)
+
+        # resolve where the approximate backward would run, under the same
+        # budget: the banded weight-grad kernel when its band model fits,
+        # the audited materialized-im2col fallback otherwise. Resolved for
+        # every fused plan (it is pure geometry) — only approx_bwd
+        # consumers act on it.
+        from repro.kernels.fused_lut_conv.ops import pick_conv_bwd_tiling
+        bwd_tiling = pick_conv_bwd_tiling(*_conv_geometry_args(spec),
+                                          acu.multiplier.n_codes,
+                                          budget=budget)
+        if bwd_tiling is None:
+            report.append("approx backward: even a one-row band exceeds the "
+                          "VMEM budget; weight-grad falls back to "
+                          "materialized im2col")
         return ConvPlan(mode=acu.mode, bits=acu.bits, use_pallas=True,
                         fused=True,
                         route="tiled" if serve_tiled else "fused_conv",
                         spec=spec, fn=fn, partition=partition,
                         report=tuple(report),
-                        tiling=tiling if serve_tiled else None)
+                        tiling=tiling if serve_tiled else None,
+                        bwd_route="banded" if bwd_tiling is not None
+                        else "im2col",
+                        bwd_tiling=bwd_tiling)
 
     if spec.groups == 1:
         r = "im2col"

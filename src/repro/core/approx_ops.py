@@ -35,6 +35,13 @@ class ApproxConfig:
                                     # quantize->LUT-GEMM->dequant Pallas kernel
                                     # (None = inherit acu.fused; only effective
                                     # for LUT mode with use_pallas=True)
+    approx_bwd: bool = False        # run the STE backward GEMMs through the
+                                    # ACU too (ApproxTrain regime): residuals
+                                    # and the incoming gradient quantize
+                                    # per-tensor symmetric and the grad GEMMs
+                                    # go through the LUT (fused in-kernel when
+                                    # the forward is fused). False keeps the
+                                    # exact-f32 STE backward.
 
     def __post_init__(self):
         if max(self.a_bits, self.w_bits) > self.acu.bits:
@@ -85,26 +92,33 @@ def _mesh_cache_key(ctx):
 
 
 def _get_ste_fn(acu: Acu, a_bits: int, w_bits: int, fused: bool = False,
-                ctx=None):
-    """Per-ACU custom_vjp GEMM: approximate forward, exact STE backward
-    (the paper's "approximate backward engine" — gradients flow through the
-    fake-quantized values with exact arithmetic).
+                ctx=None, approx_bwd: bool = False):
+    """Per-ACU custom_vjp GEMM: approximate forward, STE backward — exact
+    f32 by default, or through the ACU itself with ``approx_bwd`` (the
+    ApproxTrain regime: both grad GEMMs quantize their operands per-tensor
+    symmetric and gather from the same LUT as the forward).
 
     The forward dispatches through :func:`matmul_plan`; a fused plan runs
     quantize -> LUT GEMM -> dequant as one Pallas kernel (weights are still
     quantized outside — their codes are produced once per layer, not per
     tile), an unfused plan keeps the three-stage pipeline. With an active
     mesh the plan runs sharded, and the backward GEMMs carry matching specs
-    (``gx`` row-sharded like the activations, ``gw`` column-sharded like the
-    weights; the contraction of each stays device-local, so sharded QAT
-    gradients are bitwise identical to single-device ones).
+    (exact: ``gx`` row-sharded like the activations, ``gw`` column-sharded
+    like the weights, contractions device-local; approximate: the permuted
+    forward partition with int32 psums over the contraction axes — see
+    :func:`~repro.core.acu.matmul_bwd_plan`), so sharded QAT gradients are
+    bitwise identical to single-device ones either way.
     """
-    key = (id(acu), a_bits, w_bits, fused, _mesh_cache_key(ctx))
+    key = (id(acu), a_bits, w_bits, fused, approx_bwd, _mesh_cache_key(ctx))
     if key in _STE_CACHE:
         return _STE_CACHE[key]
 
     plan = matmul_plan(acu, a_bits=a_bits, fused=fused, mesh=ctx or False)
-    if plan.partition is not None:
+    if approx_bwd:
+        from .acu import matmul_bwd_plan
+        gx_bwd, gw_bwd = matmul_bwd_plan(acu, a_bits=a_bits, fused=fused,
+                                         mesh=ctx or False)
+    elif plan.partition is not None:
         from repro.parallel.acu_shard import bwd_gemms
         gx_gemm, gw_gemm = bwd_gemms(ctx, plan.partition)
     else:
@@ -130,12 +144,31 @@ def _get_ste_fn(acu: Acu, a_bits: int, w_bits: int, fused: bool = False,
         wf = fake_quantize(w, wqp).astype(w.dtype)
         return y, (xf, wf)
 
-    def bwd(res, g):
-        xf, wf = res
-        g = g.astype(jnp.float32)
-        gx = gx_gemm(g, wf.astype(jnp.float32)).astype(xf.dtype)
-        gw = gw_gemm(xf.astype(jnp.float32), g).astype(wf.dtype)
-        return (gx, gw, None, None, None, None)
+    if approx_bwd:
+        from .quantization import inline_symmetric_scale
+
+        def bwd(res, g):
+            # approximate backward: per-tensor symmetric scales computed on
+            # the FULL tensors (under a mesh every shard must see the same
+            # scale — amax happens before the shard_map inside gx/gw_bwd);
+            # inline_symmetric_scale because these amaxes live inside the
+            # differentiated program, where the scale expression must
+            # compile identically across eager/jit/SPMD contexts
+            xf, wf = res
+            g = g.astype(jnp.float32)
+            sg = inline_symmetric_scale(jnp.max(jnp.abs(g)), a_bits)
+            sx = inline_symmetric_scale(jnp.max(jnp.abs(xf)), a_bits)
+            sw = inline_symmetric_scale(jnp.max(jnp.abs(wf)), a_bits)
+            gx = gx_bwd(g, wf.astype(jnp.float32).T, sg, sw).astype(xf.dtype)
+            gw = gw_bwd(xf.astype(jnp.float32).T, g, sx, sg).astype(wf.dtype)
+            return (gx, gw, None, None, None, None)
+    else:
+        def bwd(res, g):
+            xf, wf = res
+            g = g.astype(jnp.float32)
+            gx = gx_gemm(g, wf.astype(jnp.float32)).astype(xf.dtype)
+            gw = gw_gemm(xf.astype(jnp.float32), g).astype(wf.dtype)
+            return (gx, gw, None, None, None, None)
 
     ste_matmul.defvjp(fwd, bwd)
     _STE_CACHE[key] = ste_matmul
@@ -152,7 +185,7 @@ def approx_matmul(x: Array, w: Array, cfg: ApproxConfig,
     fused = cfg.acu.fused if cfg.fused is None else cfg.fused
     from repro.parallel.sharding import current_mesh_context
     fn = _get_ste_fn(cfg.acu, cfg.a_bits, cfg.w_bits, fused,
-                     ctx=current_mesh_context())
+                     ctx=current_mesh_context(), approx_bwd=cfg.approx_bwd)
     return fn(x, w, xqp.scale, xqp.zero_point, wqp.scale, wqp.zero_point)
 
 
@@ -231,28 +264,161 @@ def _conv_qparams(x: Array, w: Array, cfg: ApproxConfig,
     return xqp, wqp
 
 
-def _get_conv_ste_fn(acu: Acu, a_bits: int, w_bits: int, plan, ctx=None):
+def _conv_bwd_fns(acu: Acu, plan, a_bits: int, ctx):
+    """The *approximate* conv STE backward pair for one resolved plan.
+
+    Returns ``(gx_fn, gw_fn)``: ``gx_fn(g, wf, sg, sw) -> (N, Cin, H, W)``
+    and ``gw_fn(xf, g, sx, sg) -> (Cout, Cin, kh, kw)``, both f32, operands
+    float residuals with caller-computed per-tensor symmetric scales.
+
+    ``plan.bwd_route == "banded"`` (LUT + Pallas + table): the weight-grad
+    streams halo'd output-row bands through the
+    ``fused_lut_conv_bwd_w`` kernel — contracting output pixels in-kernel,
+    so the im2col patch tensor never exists in HBM — and the input-grad
+    composes per-band ``fused_lut_bwd`` GEMMs whose int32 patch-gradient
+    blocks scatter-add into an integer canvas (int adds are associative, so
+    the band count is bitwise invisible) with ONE combined-scale dequant at
+    the end. Under a mesh the weight-grad psums band-shard partials over the
+    conv partition's rows axes and the per-band GEMM contraction shards over
+    its cols axes (``acu_shard.wrap_conv_bwd_w`` / ``wrap_conv_gx_gemm``),
+    bit-identical to single-device.
+
+    Any other ``bwd_route`` falls back to materialized im2col + the dense
+    approximate backward GEMMs (:func:`~repro.core.acu.matmul_bwd_plan`) —
+    the audited fallback for degenerate geometry.
+    """
+    from .acu import AcuMode, matmul_bwd_plan
+    from .quantization import pin_rounding as _pin
+    spec = plan.spec
+    n, cin, h, w_in = spec.x_shape
+    cout, _, kh, kw = spec.w_shape
+    ho, wo = spec.out_spatial
+    sh, sw_ = spec.stride
+    dh, dw = spec.dilation
+    (ph0, ph1), (pw0, pw1) = spec.padding
+
+    banded = (plan.bwd_route == "banded" and acu.mode == AcuMode.LUT
+              and acu.use_pallas and acu.lut is not None)
+    if not banded:
+        gx_d, gw_d = matmul_bwd_plan(acu, a_bits=a_bits, fused=plan.fused,
+                                     mesh=ctx or False)
+
+        def gx_fn(g, wf, sg, sw):
+            g2 = g.reshape(-1, cout).astype(jnp.float32)
+            wfmat = wf.reshape(cout, -1).astype(jnp.float32)
+            _, col_vjp = jax.vjp(
+                lambda t: _im2col(t, kh, kw, spec.stride, spec.padding,
+                                  spec.dilation)[0],
+                jnp.zeros(spec.x_shape, jnp.float32))   # im2col is linear
+            gcols = gx_d(g2, wfmat, sg, sw)             # (N*P, C*kh*kw) f32
+            (gx,) = col_vjp(gcols.reshape(n, ho * wo, -1))
+            return gx
+
+        def gw_fn(xf, g, sx, sg):
+            cols, _ = _im2col(xf.astype(jnp.float32), kh, kw, spec.stride,
+                              spec.padding, spec.dilation)
+            g2 = g.reshape(-1, cout).astype(jnp.float32)
+            gw = gw_d(cols.reshape(-1, cols.shape[-1]).T, g2, sx, sg)
+            return gw.T.reshape(cout, cin, kh, kw)
+
+        return gx_fn, gw_fn
+
+    from repro.kernels.fused_lut_conv import ops as cops
+    from repro.kernels.fused_lut_dense import ops as fops
+    bh_t, bn_t, mc_t, _ = plan.bwd_tiling
+    part = plan.partition
+
+    def gw_acc(x, g, rm, sx, sg, padding):
+        # jnp.asarray stays inside: plans/STE fns are cached across traces
+        return cops.fused_lut_conv_bwd_w(
+            x, g, jnp.asarray(acu.lut), acu.offset, sx, sg,
+            ksize=(kh, kw), stride=spec.stride, padding=padding,
+            dilation=spec.dilation, bits=a_bits, bh=bh_t, bn=bn_t, mc=mc_t,
+            interpret=acu.interpret, rmask=rm)
+
+    if part is not None:
+        from repro.parallel import acu_shard
+        gw_call = acu_shard.wrap_conv_bwd_w(gw_acc, ctx, part, spec)
+    else:
+        gw_call = lambda xf, g, sx, sg: gw_acc(xf, g, None, sx, sg,
+                                               spec.padding)
+
+    def gw_fn(xf, g, sx, sg):
+        acc = gw_call(xf.astype(jnp.float32), g, sx, sg)  # (kh*kw, Cin, Cout)
+        s = _pin(jnp.asarray(sx, jnp.float32) * jnp.asarray(sg, jnp.float32))
+        gw = acc.astype(jnp.float32) * s
+        return gw.transpose(2, 1, 0).reshape(cout, cin, kh, kw)
+
+    def gx_acc(a, b, sa, sb):
+        return fops.fused_lut_bwd(a, b, jnp.asarray(acu.lut), acu.offset,
+                                  sa, sb, bits=a_bits,
+                                  interpret=acu.interpret, emit_acc=True)
+
+    band_gemm = gx_acc
+    if part is not None:
+        from repro.parallel import acu_shard
+        band_gemm = acu_shard.wrap_conv_gx_gemm(gx_acc, ctx, part, acu.m00())
+
+    ckk = cin * kh * kw
+    # band height for the input-grad: bound the per-band int32 patch-gradient
+    # block — the only patch-shaped intermediate — to a slice of the budget
+    from repro.kernels.fused_lut_conv.ops import CONV_VMEM_BUDGET
+    bh_gx = max(1, min(ho, (CONV_VMEM_BUDGET // 4)
+                       // max(1, 4 * n * wo * ckk)))
+    hp_c = h + ph0 + ph1
+    wp_c = w_in + pw0 + pw1
+
+    def gx_fn(g, wf, sg, sw):
+        wfmat = wf.reshape(cout, -1).astype(jnp.float32)    # (Cout, ckk)
+        canvas = jnp.zeros((n, cin, hp_c, wp_c), jnp.int32)
+        for s0 in range(0, ho, bh_gx):
+            bhb = min(bh_gx, ho - s0)
+            g_band = g[:, s0:s0 + bhb].reshape(-1, cout).astype(jnp.float32)
+            acc = band_gemm(g_band, wfmat, sg, sw)   # (n*bhb*wo, ckk) int32
+            acc = acc.reshape(n, bhb, wo, cin, kh, kw)
+            for u in range(kh):
+                r0 = s0 * sh + u * dh
+                for v in range(kw):
+                    c0 = v * dw
+                    canvas = canvas.at[
+                        :, :, r0:r0 + (bhb - 1) * sh + 1:sh,
+                        c0:c0 + (wo - 1) * sw_ + 1:sw_,
+                    ].add(acc[:, :, :, :, u, v].transpose(0, 3, 1, 2))
+        canvas = canvas[:, :, ph0:ph0 + h, pw0:pw0 + w_in]
+        s = _pin(jnp.asarray(sg, jnp.float32) * jnp.asarray(sw, jnp.float32))
+        return canvas.astype(jnp.float32) * s
+
+    return gx_fn, gw_fn
+
+
+def _get_conv_ste_fn(acu: Acu, a_bits: int, w_bits: int, plan, ctx=None,
+                     approx_bwd: bool = False):
     """Per-(ACU, geometry) custom_vjp conv: fused patch-streaming forward,
-    exact STE backward.
+    STE backward — exact f32 by default, or through the ACU with
+    ``approx_bwd`` (the ApproxTrain regime, see :func:`_conv_bwd_fns`).
 
     ``plan`` is the caller's already-resolved fused-conv
     :class:`~repro.core.acu.ConvPlan` (the route dispatches through it;
     under an active mesh it runs sharded per the ``acu_conv`` partition).
-    The backward keeps explicit im2col — the weight-grad GEMM needs the
-    patch matrix — but its two GEMMs route through the same spec-matched
+    The exact backward keeps explicit im2col — the weight-grad GEMM needs
+    the patch matrix — but its two GEMMs route through the same spec-matched
     sharded wrappers as the dense STE (``gcols`` row-sharded like the output
-    pixels, ``gw`` column-sharded like the output channels), so sharded QAT
-    gradients stay bitwise identical to single-device ones.
+    pixels, ``gw`` column-sharded like the output channels). The approximate
+    backward follows ``plan.bwd_route`` instead — banded kernels that never
+    materialize the patch tensor. Either way sharded QAT gradients stay
+    bitwise identical to single-device ones.
     """
     assert plan.route in ("fused_conv", "tiled"), plan.route
     spec = plan.spec
-    key = ("conv", plan.route, id(acu), a_bits, w_bits, spec,
-           _mesh_cache_key(ctx))
+    key = ("conv", plan.route, id(acu), a_bits, w_bits, spec, approx_bwd,
+           plan.bwd_route if approx_bwd else None, _mesh_cache_key(ctx))
     if key in _STE_CACHE:
         return _STE_CACHE[key]
 
     cout, _, kh, kw = spec.w_shape
-    if plan.partition is not None:
+    if approx_bwd:
+        gx_bwd, gw_bwd = _conv_bwd_fns(acu, plan, a_bits, ctx)
+    elif plan.partition is not None:
         from repro.parallel.acu_shard import bwd_gemms
         gx_gemm, gw_gemm = bwd_gemms(ctx, plan.partition)
     else:
@@ -273,19 +439,36 @@ def _get_conv_ste_fn(acu: Acu, a_bits: int, w_bits: int, plan, ctx=None):
         wf = fake_quantize(w, wqp).astype(w.dtype)
         return y, (xf, wf)
 
-    def bwd(res, g):
-        xf, wf = res
-        g2 = g.reshape(-1, cout).astype(jnp.float32)        # (N*P, Cout)
-        wfmat = wf.reshape(cout, -1).T.astype(jnp.float32)  # (C*kh*kw, Cout)
-        colsf, col_vjp = jax.vjp(
-            lambda t: _im2col(t, kh, kw, spec.stride, spec.padding,
-                              spec.dilation)[0],
-            xf.astype(jnp.float32))
-        gcols = gx_gemm(g2, wfmat)                          # (N*P, C*kh*kw)
-        gw = gw_gemm(colsf.reshape(-1, colsf.shape[-1]), g2)
-        (gx,) = col_vjp(gcols.reshape(colsf.shape))
-        return (gx.astype(xf.dtype), gw.T.reshape(wf.shape).astype(wf.dtype),
-                None, None, None, None)
+    if approx_bwd:
+        from .quantization import inline_symmetric_scale
+
+        def bwd(res, g):
+            # scales on the FULL tensors (every mesh shard must see the same
+            # ones), with the in-graph scale expression that compiles
+            # identically across eager/jit/SPMD contexts
+            xf, wf = res
+            g = g.astype(jnp.float32)           # (N, Ho, Wo, Cout)
+            sg = inline_symmetric_scale(jnp.max(jnp.abs(g)), a_bits)
+            sx = inline_symmetric_scale(jnp.max(jnp.abs(xf)), a_bits)
+            sw = inline_symmetric_scale(jnp.max(jnp.abs(wf)), a_bits)
+            gx = gx_bwd(g, wf.astype(jnp.float32), sg, sw).astype(xf.dtype)
+            gw = gw_bwd(xf, g, sx, sg).astype(wf.dtype)
+            return (gx, gw, None, None, None, None)
+    else:
+        def bwd(res, g):
+            xf, wf = res
+            g2 = g.reshape(-1, cout).astype(jnp.float32)        # (N*P, Cout)
+            wfmat = wf.reshape(cout, -1).T.astype(jnp.float32)  # (C*kh*kw, Cout)
+            colsf, col_vjp = jax.vjp(
+                lambda t: _im2col(t, kh, kw, spec.stride, spec.padding,
+                                  spec.dilation)[0],
+                xf.astype(jnp.float32))
+            gcols = gx_gemm(g2, wfmat)                          # (N*P, C*kh*kw)
+            gw = gw_gemm(colsf.reshape(-1, colsf.shape[-1]), g2)
+            (gx,) = col_vjp(gcols.reshape(colsf.shape))
+            return (gx.astype(xf.dtype),
+                    gw.T.reshape(wf.shape).astype(wf.dtype),
+                    None, None, None, None)
 
     ste_conv.defvjp(fwd, bwd)
     _STE_CACHE[key] = ste_conv
@@ -369,7 +552,8 @@ def conv2d(x: Array, w: Array, b: Optional[Array] = None, *,
 
     if plan.route in ("fused_conv", "tiled"):
         xqp, wqp = _conv_qparams(x, w, cfg, xqp, wqp)
-        fn = _get_conv_ste_fn(cfg.acu, cfg.a_bits, cfg.w_bits, plan, ctx=ctx)
+        fn = _get_conv_ste_fn(cfg.acu, cfg.a_bits, cfg.w_bits, plan, ctx=ctx,
+                              approx_bwd=cfg.approx_bwd)
         y = fn(x, w, xqp.scale, xqp.zero_point, wqp.scale, wqp.zero_point)
         y = y.transpose(0, 3, 1, 2).astype(x.dtype)
     elif plan.route == "im2col":

@@ -106,6 +106,28 @@ def symmetric_qparams(calib_max: Array, bits: int, axis: Optional[int] = None) -
     return QParams(scale=scale, zero_point=jnp.zeros_like(scale), bits=bits, axis=axis)
 
 
+def inline_symmetric_scale(amax: Array, bits: int) -> Array:
+    """Per-tensor symmetric scale for *in-graph* calibration.
+
+    The approximate backward computes its operand amaxes inside the very
+    program it differentiates, so the scale expression itself must compile
+    identically in every context. :func:`symmetric_qparams` divides by
+    ``hi``, and XLA's SPMD pipeline rewrites that constant division into a
+    reciprocal multiply while eager / flat-jit modules keep the true divide
+    — a 1-ulp context dependence that lands *upstream* of the pinned result,
+    where ``pin_rounding`` cannot undo it. Writing the reciprocal multiply
+    explicitly (the reciprocal folds to the same f32 constant everywhere)
+    makes eager, flat jit, and SPMD-partitioned programs agree bitwise.
+    Note the value may differ from ``symmetric_qparams(...).scale`` by 1 ulp
+    — that is fine (any consistent scale is a valid quantizer); what matters
+    is that every route sees the *same* one.
+    """
+    hi = (1 << (bits - 1)) - 1
+    inv = jnp.float32(1.0) / jnp.float32(hi)   # folded at trace time
+    return pin_rounding(
+        jnp.maximum(jnp.asarray(amax, jnp.float32), 1e-12) * inv)
+
+
 def affine_qparams(xmin: Array, xmax: Array, bits: int, axis: Optional[int] = None) -> QParams:
     """Affine quantizer from calibrated (min, max)."""
     lo = -(1 << (bits - 1))

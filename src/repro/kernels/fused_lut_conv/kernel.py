@@ -193,6 +193,149 @@ def fused_lut_conv_kernel(xp: jnp.ndarray, wq: jnp.ndarray,
     )(xp, wq, lut_flat, x_scale, x_zp, w_scale_row)
 
 
+def _bwd_w_kernel(*refs, offset: int, n_codes: int, lo: int, hi: int,
+                  mc: int, kh: int, kw: int, sh: int, sw: int, dh: int,
+                  dw: int, bh: int, wo: int, n_copies: int, pad_m: int):
+    """Banded conv weight-grad: ``gw[t*C + ci, o] = sum_p M[x_tap, g]``.
+
+    The contraction runs over output *pixels* — the rows of the implicit
+    im2col GEMM — so the grid streams the same halo'd input-row bands as the
+    tiled forward (``n_copies`` row-shifted blocks) plus the matching
+    ``(bh, Wo, bn)`` strip of the incoming gradient, and the ``(kh*kw*C, bn)``
+    accumulator persists in VMEM across every ``(n, band)`` step (the Cout
+    grid dim is outermost so the scratch is coherent per ``j``). Both
+    operands are float residuals quantized in-kernel per-tensor *symmetric*
+    (zero-point 0), like the dense backward kernel.
+
+    ``rmask`` is an explicit 0/1 input: output rows past ``Ho`` (band
+    alignment padding — and, under the mesh wrap, dead band-slab rows)
+    contribute ``M[x, 0]`` per product, which is *not* a constant, so they
+    are masked multiplicatively before the pixel sum instead of corrected
+    after it. Patch rows pad to a ``mc`` multiple with mask 0 the same way.
+    Spatial 0.0 padding needs no mask: the im2col oracle's patch tensor
+    carries the same quantized-zero codes. The kernel always emits the raw
+    int32 accumulator — the planning layer owns the single combined-scale
+    dequant (and the mesh route psums these partials over band shards first).
+    """
+    x_refs = refs[:n_copies]
+    (g_ref, rm_ref, lut_ref, xs_ref, gs_ref, o_ref, acc_ref) = refs[n_copies:]
+    n_i = pl.program_id(1)
+    i = pl.program_id(2)
+    first = jnp.logical_and(n_i == 0, i == 0)
+    last = jnp.logical_and(n_i == pl.num_programs(1) - 1,
+                           i == pl.num_programs(2) - 1)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xs = xs_ref[0]
+    gs = gs_ref[0]
+    # re-quantized once per (j; n, band) step — j outermost means each band
+    # is revisited per Cout tile, the price of a coherent gw accumulator;
+    # the quantizer is deterministic so every visit produces the same codes
+    band = jnp.concatenate([r[...][0] for r in x_refs], axis=1)
+    a_band = jnp.clip(jnp.round(band.astype(jnp.float32) / xs), lo, hi
+                      ).astype(jnp.int32) + offset      # (C, rows, Wp)
+    gq = jnp.clip(jnp.round(g_ref[...][0].astype(jnp.float32) / gs), lo, hi
+                  ).astype(jnp.int32) + offset          # (bh, wo, bn)
+    lut = lut_ref[...]
+    c = a_band.shape[0]
+    bn = gq.shape[2]
+    bm = bh * wo
+    g2 = gq.reshape(bm, bn)
+    mask = jnp.broadcast_to(rm_ref[...].reshape(bh, 1),
+                            (bh, wo)).reshape(bm, 1)    # 0/1 row validity
+    if pad_m:  # patch rows up to a mc multiple; padded rows mask to 0
+        g2 = jnp.pad(g2, ((0, pad_m), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad_m), (0, 0)))
+    nm = (bm + pad_m) // mc
+
+    taps = []
+    for t in range(kh * kw):                            # static tap loop
+        u, v = divmod(t, kw)
+        win = jax.lax.dynamic_slice(
+            a_band, (0, u * dh, v * dw),
+            (c, (bh - 1) * sh + 1, (wo - 1) * sw + 1))
+        win = jax.lax.slice(win, (0, 0, 0), win.shape, (1, sh, sw))
+        a_t = win.transpose(1, 2, 0).reshape(bm, c)     # (bm, C) patch rows
+        if pad_m:
+            a_t = jnp.pad(a_t, ((0, pad_m), (0, 0)))
+
+        def body(mi, acc_t, a_t=a_t):
+            a_sl = jax.lax.dynamic_slice(a_t, (mi * mc, 0), (mc, c))
+            g_sl = jax.lax.dynamic_slice(g2, (mi * mc, 0), (mc, bn))
+            m_sl = jax.lax.dynamic_slice(mask, (mi * mc, 0), (mc, 1))
+            idx = a_sl[:, :, None] * n_codes + g_sl[:, None, :]  # (mc, C, bn)
+            prods = jnp.take(lut, idx.reshape(-1), unique_indices=False,
+                             indices_are_sorted=False).reshape(mc, c, bn)
+            return acc_t + (prods * m_sl[:, :, None]).sum(axis=0)
+
+        taps.append(jax.lax.fori_loop(0, nm, body,
+                                      jnp.zeros((c, bn), jnp.int32)))
+
+    acc_ref[...] += jnp.concatenate(taps, axis=0)       # (kh*kw*C, bn)
+
+    @pl.when(last)
+    def _emit():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "offset", "n_codes", "lo", "hi", "mc", "kh", "kw", "sh", "sw", "dh",
+    "dw", "bh", "bn", "wo", "ho_pad", "n_copies", "interpret"))
+def fused_lut_conv_bwd_w_kernel(xp: jnp.ndarray, g: jnp.ndarray,
+                                rmask: jnp.ndarray, lut_flat: jnp.ndarray,
+                                x_scale: jnp.ndarray, g_scale: jnp.ndarray, *,
+                                offset: int, n_codes: int, lo: int, hi: int,
+                                mc: int, kh: int, kw: int, sh: int, sw: int,
+                                dh: int, dw: int, bh: int, bn: int, wo: int,
+                                ho_pad: int, n_copies: int,
+                                interpret: bool = True) -> jnp.ndarray:
+    """Banded approximate conv weight-grad. ``xp``: (N, C, Hp, Wp) float
+    residuals, spatially pre-padded like the tiled forward (rows to
+    ``(n_bands + n_copies - 1) * bh * sh``); ``g``: (N, ho_pad, Wo, Cout)
+    float incoming gradient; ``rmask``: (N, ho_pad) int32 0/1 output-row
+    validity; scales: shape-(1,) f32 per-tensor symmetric. Returns the raw
+    (kh*kw*C, Cout) int32 accumulator, tap-major — the full ``(N*Ho*Wo,
+    kh*kw*C)`` patch tensor never exists anywhere."""
+    n, c, hp, wp = xp.shape
+    cout = g.shape[3]
+    n_bands = ho_pad // bh
+    s_rows = bh * sh
+    bm = bh * wo
+    assert cout % bn == 0 and ho_pad % bh == 0, (
+        f"conv bwd tiling mismatch: Cout={cout}/bn={bn}, "
+        f"Ho_pad={ho_pad}/bh={bh}")
+    assert hp == (n_bands + n_copies - 1) * s_rows, (
+        f"banded row padding mismatch: Hp={hp} != "
+        f"({n_bands} + {n_copies} - 1) * {s_rows}")
+    grid = (cout // bn, n, n_bands)   # j outermost: acc coherent per j
+
+    def x_spec(k):
+        return pl.BlockSpec((1, c, s_rows, wp),
+                            lambda j, n, i, k=k: (n, 0, i + k, 0))
+
+    return pl.pallas_call(
+        functools.partial(_bwd_w_kernel, offset=offset, n_codes=n_codes,
+                          lo=lo, hi=hi, mc=mc, kh=kh, kw=kw, sh=sh, sw=sw,
+                          dh=dh, dw=dw, bh=bh, wo=wo, n_copies=n_copies,
+                          pad_m=(-bm) % mc),
+        grid=grid,
+        in_specs=[x_spec(k) for k in range(n_copies)] + [
+            pl.BlockSpec((1, bh, wo, bn), lambda j, n, i: (n, i, 0, j)),
+            pl.BlockSpec((1, bh), lambda j, n, i: (n, i)),
+            pl.BlockSpec((n_codes * n_codes,), lambda j, n, i: (0,)),
+            pl.BlockSpec((1,), lambda j, n, i: (0,)),
+            pl.BlockSpec((1,), lambda j, n, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((kh * kw * c, bn), lambda j, n, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((kh * kw * c, cout), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((kh * kw * c, bn), jnp.int32)],
+        interpret=interpret,
+    )(*([xp] * n_copies), g, rmask, lut_flat, x_scale, g_scale)
+
+
 def _tiled_kernel(*refs, offset: int, n_codes: int, lo: int, hi: int,
                   inner: int, kh: int, kw: int, sh: int, sw: int, dh: int,
                   dw: int, bh: int, wo: int, n_copies: int, c_pad_corr: int,

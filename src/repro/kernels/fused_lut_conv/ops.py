@@ -30,7 +30,8 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from .kernel import fused_lut_conv_kernel, fused_lut_conv_tiled_kernel
+from .kernel import (fused_lut_conv_bwd_w_kernel, fused_lut_conv_kernel,
+                     fused_lut_conv_tiled_kernel)
 
 # conservative per-core VMEM budget for the fused conv kernels; images whose
 # whole-image working set exceeds it take the spatially-tiled kernel (and
@@ -179,6 +180,57 @@ def pick_conv_spatial_tiling(c: int, h: int, w: int, cout: int, kh: int,
     return None
 
 
+def conv_bwd_w_vmem_bytes(c: int, h: int, w: int, cout: int, kh: int,
+                          kw: int, sh: int, sw: int, dh: int, dw: int,
+                          padding: tuple[tuple[int, int], tuple[int, int]],
+                          n_codes: int, *, bh: int, bn: int, mc: int
+                          ) -> int:
+    """Working-set bytes of the banded weight-grad kernel at band height
+    ``bh``: the halo'd input band (float + quantized codes), the gradient
+    strip, the persistent ``(kh*kw*C, bn)`` accumulator, and the per-tap /
+    per-chunk gather tensors. The contraction over output pixels streams in
+    ``mc``-row chunks, so nothing grows with ``Ho`` except the grid."""
+    ho, wo, _, _, wp = conv_padded_geometry(h, w, kh, kw, sh, sw, dh, dw,
+                                            padding, bh)
+    rows = band_copies(bh, kh, sh, dh) * bh * sh
+    bm = bh * wo
+    bm_pad = bm + (-bm) % mc
+    win_rows = (bh - 1) * sh + 1
+    win_cols = (wo - 1) * sw + 1
+    return (8 * c * rows * wp              # f32 halo blocks + code band
+            + 4 * n_codes * n_codes        # LUT
+            + 8 * bh * wo * bn             # f32 gradient strip + codes
+            + 8 * kh * kw * c * bn         # acc scratch + step contribution
+            + 4 * c * win_rows * win_cols  # pre-stride tap window
+            + 4 * bm_pad * c               # strided a_t patch-row tile
+            + 8 * mc * c * bn)             # gather: idx + prods chunk
+
+
+def pick_conv_bwd_tiling(c: int, h: int, w: int, cout: int, kh: int,
+                         kw: int, sh: int, sw: int, dh: int, dw: int,
+                         padding: tuple[tuple[int, int], tuple[int, int]],
+                         n_codes: int, *, budget: int = CONV_VMEM_BUDGET,
+                         bn: int = 128, mc: int = 8
+                         ) -> Optional[tuple[int, int, int, int]]:
+    """Choose (bh, bn, mc, n_copies) for the banded weight-grad kernel from
+    its VMEM model — the tallest band under ``budget``, mirroring
+    :func:`pick_conv_spatial_tiling`. Returns ``None`` on degenerate
+    geometry (even a one-row band over budget), in which case the planning
+    layer keeps the materialized-im2col approximate backward."""
+    ho, _, _, _, _ = conv_padded_geometry(h, w, kh, kw, sh, sw, dh, dw,
+                                          padding, 1)
+    bn = min(bn, cout)
+    for bh in range(min(ho, 64), 0, -1):
+        n_copies = band_copies(bh, kh, sh, dh)
+        if n_copies > MAX_BAND_COPIES:
+            continue
+        if conv_bwd_w_vmem_bytes(c, h, w, cout, kh, kw, sh, sw, dh, dw,
+                                 padding, n_codes, bh=bh, bn=bn,
+                                 mc=mc) <= budget:
+            return bh, bn, mc, n_copies
+    return None
+
+
 def _conv_operands(x, wq, x_scale, x_zp, w_scale, *, inner, bn,
                    hp_rows, padding, bits):
     """Shared operand prep: pad the image to exactly ``hp_rows`` x ``wp``
@@ -321,3 +373,88 @@ def fused_lut_conv_tiled(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
         ho_pad=ho_pad, n_copies=n_copies, c_pad_corr=pad_c * kh * kw,
         interpret=interpret, emit_acc=emit_acc)
     return out[:, :ho, :, :cout]
+
+
+def fused_lut_conv_bwd_w(x: jnp.ndarray, g: jnp.ndarray, lut: jnp.ndarray,
+                         offset: int, x_scale, g_scale, *,
+                         ksize: tuple[int, int], stride=(1, 1),
+                         padding=((0, 0), (0, 0)), dilation=(1, 1),
+                         bits: int = 8, bh: int = 0, bn: int = 0, mc: int = 8,
+                         budget: int = CONV_VMEM_BUDGET,
+                         interpret: bool = True,
+                         rmask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Banded approximate conv weight-grad (ApproxTrain regime).
+
+    ``x``: (N, C, H, W) float residuals (the saved fake-quantized input);
+    ``g``: (N, Ho, Wo, Cout) float incoming gradient in the fused forward's
+    output layout; scales: per-tensor *symmetric* quantizer scales computed
+    by the caller on the full tensors. The kernel streams halo'd input-row
+    bands (PR 4's row-shifted BlockSpec machinery) and contracts over output
+    pixels in-kernel, so the ``(N*Ho*Wo, kh*kw*C)`` im2col patch tensor
+    never exists in HBM. Returns the raw (kh*kw, C, Cout) int32 accumulator,
+    tap-major — the planning layer owns the single combined-scale dequant
+    ``acc * (sx * sg)`` and the transpose to (Cout, C, kh, kw), and the mesh
+    route psums these partials over band shards before either.
+
+    ``bh=0`` picks the band height from the backward VMEM model
+    (:func:`pick_conv_bwd_tiling`; raises ``ValueError`` on degenerate
+    geometry); an explicit ``bh`` pins it — every choice is bit-identical.
+    ``rmask`` overrides the (N, ho_pad) 0/1 output-row validity mask (the
+    mesh wrap marks its dead band-slab rows); default marks rows past
+    ``Ho`` — band alignment padding — invalid.
+    """
+    n_codes = int(round(lut.size ** 0.5)) if lut.ndim == 1 else lut.shape[0]
+    lut_flat = lut.reshape(-1)
+    n, c, h, w_in = x.shape
+    cout = g.shape[3]
+    kh, kw = ksize
+    sh, sw = stride
+    dh, dw = dilation
+    if bh <= 0:
+        tiling = pick_conv_bwd_tiling(
+            c, h, w_in, cout, kh, kw, sh, sw, dh, dw, padding, n_codes,
+            budget=budget, bn=bn if bn > 0 else 128, mc=mc)
+        if tiling is None:
+            raise ValueError(
+                f"bwd banding infeasible: even a one-row band exceeds the "
+                f"{budget >> 20} MiB VMEM budget at C={c}, W={w_in}")
+        bh, bn, mc, n_copies = tiling
+    else:
+        bn = min(bn if bn > 0 else 128, cout)
+        n_copies = band_copies(bh, kh, sh, dh)
+
+    ho, wo, ho_pad, _, wp = conv_padded_geometry(h, w_in, kh, kw, sh, sw,
+                                                 dh, dw, padding, bh)
+    n_bands = ho_pad // bh
+    s_rows = bh * sh
+    hp_rows = (n_bands + n_copies - 1) * s_rows
+    (ph0, ph1), (pw0, pw1) = padding
+
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph0, ph1), (pw0, pw1)))
+    if xp.shape[2] < hp_rows:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, hp_rows - xp.shape[2]), (0, 0)))
+    else:
+        xp = xp[:, :, :hp_rows, :]
+    if xp.shape[3] < wp:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, 0), (0, wp - xp.shape[3])))
+
+    pad_n = (-cout) % bn
+    g_p = g.astype(jnp.float32)
+    if ho_pad > ho or pad_n:   # padded rows masked out; padded couts sliced
+        g_p = jnp.pad(g_p, ((0, 0), (0, ho_pad - ho), (0, 0), (0, pad_n)))
+    if rmask is None:
+        rmask = jnp.ones((n, ho), jnp.int32)
+    rmask = rmask.astype(jnp.int32)
+    if rmask.shape[1] < ho_pad:   # band-alignment pad rows are never valid
+        rmask = jnp.pad(rmask, ((0, 0), (0, ho_pad - rmask.shape[1])))
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(1)
+    gs = jnp.asarray(g_scale, jnp.float32).reshape(1)
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+
+    acc = fused_lut_conv_bwd_w_kernel(
+        xp, g_p, rmask, lut_flat, xs, gs,
+        offset=offset, n_codes=n_codes, lo=lo, hi=hi, mc=mc, kh=kh, kw=kw,
+        sh=sh, sw=sw, dh=dh, dw=dw, bh=bh, bn=bn, wo=wo, ho_pad=ho_pad,
+        n_copies=n_copies, interpret=interpret)
+    return acc[:, :cout].reshape(kh * kw, c, cout)

@@ -83,6 +83,94 @@ def _kernel(x_ref, w_ref, lut_ref, xs_ref, xz_ref, ws_ref, o_ref, acc_ref, *,
             o_ref[...] = acc.astype(jnp.float32) * (xs * ws_ref[...])
 
 
+def _bwd_kernel(a_ref, b_ref, lut_ref, as_ref, bs_ref, o_ref, acc_ref, *,
+                offset: int, n_codes: int, lo: int, hi: int, inner: int,
+                k_pad: int, emit_acc: bool):
+    """Backward flavor: BOTH operands arrive as float residuals and are
+    quantized in-kernel with per-tensor *symmetric* scales (zero-point 0 —
+    gradients are zero-centred, and a zp-free quantizer keeps the combined
+    dequant a single scale multiply). Everything downstream is the forward
+    kernel verbatim: shifted-code LUT gathers, int32 accumulate, integer-space
+    K-pad correction, one combined-scale dequant."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    sa = as_ref[0]                                 # per-tensor symmetric scales
+    sb = bs_ref[0]
+    af = a_ref[...].astype(jnp.float32)            # (bm, bk)
+    bf = b_ref[...].astype(jnp.float32)            # (bk, bn)
+    a = jnp.clip(jnp.round(af / sa), lo, hi).astype(jnp.int32) + offset
+    b = jnp.clip(jnp.round(bf / sb), lo, hi).astype(jnp.int32) + offset
+    lut = lut_ref[...]                             # (n_codes * n_codes,)
+    bm, bk = a.shape
+    bn = b.shape[1]
+
+    def body(i, acc):
+        a_sl = jax.lax.dynamic_slice(a, (0, i * inner), (bm, inner))
+        b_sl = jax.lax.dynamic_slice(b, (i * inner, 0), (inner, bn))
+        idx = a_sl[:, :, None] * n_codes + b_sl[None, :, :]   # (bm, inner, bn)
+        prods = jnp.take(lut, idx.reshape(-1), unique_indices=False,
+                         indices_are_sorted=False).reshape(bm, inner, bn)
+        return acc + prods.sum(axis=1)
+
+    acc_ref[...] += jax.lax.fori_loop(0, bk // inner, body,
+                                      jnp.zeros((bm, bn), jnp.int32))
+
+    @pl.when(k_step == pl.num_programs(2) - 1)
+    def _dequant():
+        acc = acc_ref[...]
+        if k_pad:  # zero pads quantize to code 0 -> LUT[off, off] = M[0, 0]
+            acc = acc - k_pad * lut[offset * n_codes + offset]
+        if emit_acc:
+            o_ref[...] = acc
+        else:
+            o_ref[...] = acc.astype(jnp.float32) * (sa * sb)
+
+
+@functools.partial(jax.jit, static_argnames=("offset", "n_codes", "lo", "hi",
+                                             "k_pad", "bm", "bk", "bn",
+                                             "inner", "interpret", "emit_acc"))
+def fused_lut_bwd_kernel(a: jnp.ndarray, b: jnp.ndarray,
+                         lut_flat: jnp.ndarray, a_scale: jnp.ndarray,
+                         b_scale: jnp.ndarray, *, offset: int, n_codes: int,
+                         lo: int, hi: int, k_pad: int = 0, bm: int = 128,
+                         bk: int = 128, bn: int = 128, inner: int = 32,
+                         interpret: bool = True,
+                         emit_acc: bool = False) -> jnp.ndarray:
+    """a: (M, K) float; b: (K, N) float; both quantized in-kernel with the
+    per-tensor symmetric scales ``a_scale``/``b_scale`` (shape-(1,) f32).
+    Returns (M, N) float32 — or the raw int32 accumulator with
+    ``emit_acc=True`` (the sharded contraction route psums those partials
+    and dequantizes once after the collective)."""
+    M, K = a.shape
+    _, N = b.shape
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    inner = min(inner, bk)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0 and bk % inner == 0, (
+        f"shape {(M, K, N)} not divisible by tile {(bm, bk, bn)}/{inner}")
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, offset=offset, n_codes=n_codes, lo=lo,
+                          hi=hi, inner=inner, k_pad=k_pad, emit_acc=emit_acc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((n_codes * n_codes,), lambda i, j, k: (0,)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N),
+                                       jnp.int32 if emit_acc else jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a, b, lut_flat, a_scale, b_scale)
+
+
 @functools.partial(jax.jit, static_argnames=("offset", "n_codes", "lo", "hi",
                                              "k_pad", "bm", "bk", "bn",
                                              "inner", "interpret", "emit_acc"))

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .kernel import fused_lut_dense_kernel
+from .kernel import fused_lut_bwd_kernel, fused_lut_dense_kernel
 
 
 def fused_lut_dense(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
@@ -64,4 +64,45 @@ def fused_lut_dense(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
                                  offset=offset, n_codes=n_codes, lo=lo, hi=hi,
                                  k_pad=pk, bm=bm, bk=bk, bn=bn, inner=inner,
                                  interpret=interpret, emit_acc=emit_acc)
+    return out[:M, :N]
+
+
+def fused_lut_bwd(a: jnp.ndarray, b: jnp.ndarray, lut: jnp.ndarray,
+                  offset: int, a_scale, b_scale, *, bits: int = 8,
+                  bm: int = 128, bk: int = 256, bn: int = 128,
+                  inner: int = 32, interpret: bool = True,
+                  emit_acc: bool = False) -> jnp.ndarray:
+    """Fused approximate backward GEMM: quantize BOTH float operands
+    in-kernel (per-tensor symmetric, zero-point 0), LUT-gather GEMM, int32
+    accumulate, single combined-scale dequant ``acc * (sa * sb)``.
+
+    ``a``: (M, K) float; ``b``: (K, N) float — the incoming gradient and the
+    saved fake-quantized residual (in either operand order, depending on
+    which grad GEMM this is). Zero padding quantizes to code 0 under a
+    symmetric quantizer, so each padded k contributes ``LUT[off, off] =
+    M[0, 0]`` — subtracted from the accumulator in integer space exactly like
+    the forward. ``emit_acc=True`` returns the raw int32 accumulator for the
+    mesh contraction-sharded route (psum, correct once, dequant after).
+    """
+    n_codes = int(round(lut.size ** 0.5)) if lut.ndim == 1 else lut.shape[0]
+    lut_flat = lut.reshape(-1)
+    M, K = a.shape
+    _, N = b.shape
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    sa = jnp.asarray(a_scale, jnp.float32).reshape(1)
+    sb = jnp.asarray(b_scale, jnp.float32).reshape(1)
+    bm, bn = min(bm, 128), min(bn, 128)
+    pm = (-M) % min(bm, 128)
+    pk = (-K) % 128
+    pn = (-N) % min(bn, 128)
+    if pm or pk or pn:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    kp = K + pk
+    bk = kp if kp <= 512 else (bk if kp % bk == 0 else 128)
+    out = fused_lut_bwd_kernel(a, b, lut_flat, sa, sb, offset=offset,
+                               n_codes=n_codes, lo=lo, hi=hi, k_pad=pk,
+                               bm=bm, bk=bk, bn=bn, inner=inner,
+                               interpret=interpret, emit_acc=emit_acc)
     return out[:M, :N]

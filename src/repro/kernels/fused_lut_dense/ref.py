@@ -29,3 +29,22 @@ def fused_lut_dense_ref(x: jnp.ndarray, wq: jnp.ndarray,
     acc = jnp.take(lut_flat, idx.reshape(-1)).reshape(idx.shape).sum(axis=1)
     ws = jnp.asarray(w_scale, jnp.float32).reshape(1, -1)
     return acc.astype(jnp.float32) * (xs * ws)
+
+
+def fused_lut_bwd_ref(a: jnp.ndarray, b: jnp.ndarray, lut_flat: jnp.ndarray,
+                      offset: int, n_codes: int, a_scale, b_scale, *,
+                      bits: int = 8) -> jnp.ndarray:
+    """Backward flavor: both operands quantized per-tensor symmetric
+    (zero-point 0), then the same LUT gather, int32 sum, and single
+    combined-scale dequant. O(MKN) memory — test oracle only."""
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    sa = jnp.asarray(a_scale, jnp.float32)
+    sb = jnp.asarray(b_scale, jnp.float32)
+    qa = jnp.clip(jnp.round(a.astype(jnp.float32) / sa), lo, hi
+                  ).astype(jnp.int32) + offset
+    qb = jnp.clip(jnp.round(b.astype(jnp.float32) / sb), lo, hi
+                  ).astype(jnp.int32) + offset
+    idx = qa[:, :, None] * n_codes + qb[None, :, :]
+    acc = jnp.take(lut_flat, idx.reshape(-1)).reshape(idx.shape).sum(axis=1)
+    return acc.astype(jnp.float32) * (sa * sb)

@@ -115,24 +115,33 @@ def apply_mrope(x: Array, positions: Array, sections=(16, 24, 24),
 # ---------------------------------------------------------------------------
 
 def _mask_scores(s: Array, q_pos: Array, k_pos: Array, causal: bool,
-                 window: Optional[int]) -> Array:
+                 window: Optional[int],
+                 pad_mask: Optional[Array] = None) -> Array:
     mask = jnp.ones(s.shape[-2:], bool)
     if causal:
         mask &= k_pos[None, :] <= q_pos[:, None]
     if window is not None:
         mask &= k_pos[None, :] > q_pos[:, None] - window
+    if pad_mask is not None:
+        # (B, Tk) valid-key mask (serving: left-pad slots are False) joins
+        # the (cq, Tk) structural mask batched: (B, 1, 1, cq, Tk)
+        return jnp.where(mask[None, None, None] & pad_mask[:, None, None, None, :],
+                         s, -1e30)
     return jnp.where(mask, s, -1e30)
 
 
 def gqa_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                   window: Optional[int] = None, softcap: Optional[float] = None,
                   q_offset: int = 0, chunk: int = 512,
-                  impl: str = "chunked", causal_blocking: bool = False) -> Array:
+                  impl: str = "chunked", causal_blocking: bool = False,
+                  pad_mask: Optional[Array] = None) -> Array:
     """Grouped-query attention.
 
     q: (B, S, Hq, D); k/v: (B, T, Hkv, D); returns (B, S, Hq, D).
     ``q_offset``: absolute position of q[0] within the key sequence (decode).
     ``chunked`` processes q in blocks of ``chunk`` for O(S·chunk) score memory.
+    ``pad_mask``: optional (B, T) bool, False keys are never attended (batched
+    serving masks left-pad slots out of every query row).
     """
     b, s_len, hq, d = q.shape
     t_len = k.shape[1]
@@ -142,19 +151,20 @@ def gqa_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     qg = q.reshape(b, s_len, hkv, rep, d)
 
     def block(q_blk: Array, q_pos: Array, k_blk: Array, v_blk: Array,
-              k_pos: Array) -> Array:
+              k_pos: Array, pm: Optional[Array]) -> Array:
         # q_blk: (B, cq, Hkv, rep, D) -> scores (B, Hkv, rep, cq, Tk)
         sc = jnp.einsum("bqhrd,bthd->bhrqt", q_blk.astype(jnp.float32),
                         k_blk.astype(jnp.float32)) * scale
         if softcap is not None:
             sc = softcap * jnp.tanh(sc / softcap)
-        sc = _mask_scores(sc, q_pos, k_pos, causal, window)
+        sc = _mask_scores(sc, q_pos, k_pos, causal, window, pm)
         p = jax.nn.softmax(sc, axis=-1)
         o = jnp.einsum("bhrqt,bthd->bqhrd", p, v_blk.astype(jnp.float32))
         return o
 
     if impl == "naive" or s_len <= chunk or s_len % chunk != 0:
-        out = block(qg, jnp.arange(s_len) + q_offset, k, v, jnp.arange(t_len))
+        out = block(qg, jnp.arange(s_len) + q_offset, k, v,
+                    jnp.arange(t_len), pad_mask)
     else:
         # statically unrolled q-block loop (NOT lax.map): keeps score memory at
         # O(S*chunk) while every block appears in the HLO, so cost_analysis
@@ -176,9 +186,10 @@ def gqa_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                 k_blk = k[:, lo:hi]
                 v_blk = v[:, lo:hi]
                 k_pos = jnp.arange(lo, hi)
+                pm = None if pad_mask is None else pad_mask[:, lo:hi]
             else:
-                k_blk, v_blk, k_pos = k, v, jnp.arange(t_len)
-            outs.append(block(q_blk, pos, k_blk, v_blk, k_pos))
+                k_blk, v_blk, k_pos, pm = k, v, jnp.arange(t_len), pad_mask
+            outs.append(block(q_blk, pos, k_blk, v_blk, k_pos, pm))
         out = jnp.concatenate(outs, axis=1)
     return out.reshape(b, s_len, hq, d).astype(q.dtype)
 
@@ -186,11 +197,14 @@ def gqa_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 def attention_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig],
                     positions: Array, *, kv: Optional[tuple] = None,
                     cache=None, cache_pos: Optional[Array] = None,
-                    window: Optional[int] = None, causal: bool = True):
+                    window: Optional[int] = None, causal: bool = True,
+                    pad_mask: Optional[Array] = None):
     """Full attention sub-layer: qkv proj -> rope -> attention -> out proj.
 
     ``cache``: optional (k_cache, v_cache) of shape (B, Smax, Hkv, D);
     returns (out, new_cache). ``kv``: cross-attention source (B, T, D).
+    ``pad_mask``: (B, T) bool over the key length (the full cache when one is
+    threaded) — False slots never contribute to any query.
     """
     b, s_len, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -231,7 +245,8 @@ def attention_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig],
     out = gqa_attention(q, k, v, causal=causal and kv is None, window=window,
                         softcap=cfg.softcap_attn, q_offset=q_offset,
                         chunk=cfg.attn_chunk, impl=cfg.attn_impl,
-                        causal_blocking=getattr(cfg, "attn_causal_blocking", False))
+                        causal_blocking=getattr(cfg, "attn_causal_blocking", False),
+                        pad_mask=pad_mask)
     out = out.reshape(b, s_len, h * hd)
     out = approx_dense(out, p["wo"], p.get("bo"), acfg)
     return out, cache

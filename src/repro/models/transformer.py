@@ -190,7 +190,8 @@ def _norm(x, p, cfg: ModelConfig):
     return L.rms_norm(x, p["w"], plus_one=(cfg.norm == "rms1p"))
 
 
-def _apply_block(x, blk, kind, cfg, acfg, positions, cache, cache_pos, decode):
+def _apply_block(x, blk, kind, cfg, acfg, positions, cache, cache_pos, decode,
+                 pad_mask=None):
     """One layer; returns (x, new_cache_entry)."""
     new_cache = cache
     if kind.startswith("attn"):
@@ -199,7 +200,7 @@ def _apply_block(x, blk, kind, cfg, acfg, positions, cache, cache_pos, decode):
         attn_cache = cache["attn"] if cache is not None else None
         a, attn_cache = L.attention_block(
             h, blk["attn"], cfg, acfg, positions, cache=attn_cache,
-            cache_pos=cache_pos, window=window)
+            cache_pos=cache_pos, window=window, pad_mask=pad_mask)
         if cfg.post_norm:
             a = _norm(a, blk["post_norm1"], cfg)
         if cfg.parallel_block:
@@ -240,10 +241,17 @@ def mlp_apply(h, p, kind, cfg, acfg):
 def apply_model(params: dict, tokens: Array, cfg: ModelConfig, *,
                 acfg: Optional[ApproxConfig] = None, cache: Optional[dict] = None,
                 cache_pos: int | Array = 0, decode: bool = False,
-                last_only: bool = False):
+                last_only: bool = False, pos_offset: Optional[Array] = None,
+                pad_mask: Optional[Array] = None):
     """Token ids -> logits. With ``cache``, also threads KV/SSM state.
 
     cache: {"groups": pytree stacked (n_groups, ...)}; returns (logits, cache).
+
+    Batched serving with left-padded prompts passes ``pos_offset`` (B,) —
+    each row's pad count, subtracted from RoPE positions so every request
+    sees positions 0..len-1 regardless of wave padding — and ``pad_mask``
+    (B, T) over the key length so pad slots never contribute attention mass
+    (attention layers only; recurrent blocks still ingest pads).
     """
     b, s = tokens.shape
     x = L.embed(tokens, params["embed"])
@@ -251,6 +259,8 @@ def apply_model(params: dict, tokens: Array, cfg: ModelConfig, *,
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     x = shard(x, "batch", None, None)
     positions = jnp.arange(s)[None, :] + cache_pos
+    if pos_offset is not None:
+        positions = jnp.maximum(positions - pos_offset[:, None], 0)
     positions = jnp.broadcast_to(positions, (b, s))
 
     group_cache = cache["groups"] if cache is not None else None
@@ -262,7 +272,8 @@ def apply_model(params: dict, tokens: Array, cfg: ModelConfig, *,
         for i, kind in enumerate(cfg.pattern):
             blk_cache = None if gc is None else gc[f"b{i}"]
             x, blk_cache = _apply_block(x, gp[f"b{i}"], kind, cfg, acfg,
-                                        positions, blk_cache, cache_pos, decode)
+                                        positions, blk_cache, cache_pos, decode,
+                                        pad_mask)
             if new_gc is not None:
                 new_gc = {**new_gc, f"b{i}": blk_cache}
         return x, new_gc

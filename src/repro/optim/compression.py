@@ -26,9 +26,18 @@ def init_ef(grads_like) -> EFState:
         lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
 
 
-def compress(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """fp32 -> (int8 codes, scale)."""
-    amax = jnp.max(jnp.abs(g))
+def compress(g: jnp.ndarray, amax: jnp.ndarray | None = None
+             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """fp32 -> (int8 codes, scale).
+
+    ``amax`` overrides the calibration bound (``compressed_psum`` passes its
+    pmax'd cross-worker bound so every worker quantizes on the same grid —
+    local bounds would make the same value code differently per worker and
+    the psum'd average drift from what each worker's residual accounts for).
+    """
+    g = g.astype(jnp.float32)
+    if amax is None:
+        amax = jnp.max(jnp.abs(g))
     scale = jnp.maximum(amax, 1e-12) / 127.0
     q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
     return q, scale
@@ -42,14 +51,16 @@ def compressed_psum(grads, ef: EFState, axis_name: str):
     """Error-feedback int8 all-reduce over ``axis_name`` (inside shard_map).
 
     Scales are psum-maxed first so codes are commensurable across workers;
-    the residual keeps what int8 dropped.
+    the residual keeps what int8 dropped. Quantization goes through the same
+    :func:`compress`/:func:`decompress` pair as the standalone API, so the
+    wire format is actual int8 codes and the round-trip bound proven by the
+    standalone tests holds verbatim inside the psum path.
     """
     def one(g, r):
         g = g.astype(jnp.float32) + r
         amax = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name)
-        scale = jnp.maximum(amax, 1e-12) / 127.0
-        q = jnp.clip(jnp.round(g / scale), -127, 127)
-        sent = q * scale
+        q, scale = compress(g, amax)
+        sent = decompress(q, scale)
         new_r = g - sent
         summed = jax.lax.psum(sent, axis_name) / jax.lax.psum(1.0, axis_name)
         return summed, new_r

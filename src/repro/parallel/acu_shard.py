@@ -140,6 +140,61 @@ def wrap_fused(fused_call: Callable[..., Array],
     return fn
 
 
+def wrap_fused_bwd(bwd_call: Callable[..., Array],
+                   acc_call: Callable[..., Array], ctx: MeshContext,
+                   part: GemmPartition, m00: int) -> Callable[..., Array]:
+    """Shard a fused approximate-backward GEMM
+    ``fn(a, b, sa, sb) -> f32 (M, N)``.
+
+    Both operands are float residuals quantized *inside* the kernel with
+    per-tensor symmetric scales computed by the caller on the full tensors
+    (outside this wrap — every shard must see the same scale). ``part`` is a
+    permuted forward partition (:func:`~repro.parallel.planner.
+    bwd_gemm_partitions`), so the contraction axes here are the forward's
+    rows or cols axes. Without contraction sharding each shard runs the full
+    fused kernel; with it the kernel emits raw int32 partials (``acc_call``),
+    they psum in integer space, the K shard-padding correction — zero pads
+    quantize to code 0, contributing ``M[0, 0]`` each — lands exactly once
+    after the collective, and the single combined-scale dequant runs on the
+    reduced accumulator. Bit-exact vs the single-device kernel.
+    """
+    mesh = ctx.mesh
+
+    def fn(a: Array, b: Array, sa, sb) -> Array:
+        M, K = a.shape
+        N = b.shape[1]
+        pm, pk, pn = (-M) % part.n_rows, (-K) % part.n_k, (-N) % part.n_cols
+        a_p = _pad2(a, pm, pk)      # 0.0 quantizes to code 0 (symmetric)
+        b_p = _pad2(b, pk, pn)
+        sa_a = jnp.asarray(sa, jnp.float32).reshape(1)
+        sb_a = jnp.asarray(sb, jnp.float32).reshape(1)
+
+        if not part.k:
+            def local(a_blk, b_blk, sa_b, sb_b):
+                return bwd_call(a_blk, b_blk, sa_b, sb_b)
+        else:
+            def local(a_blk, b_blk, sa_b, sb_b):
+                acc = acc_call(a_blk, b_blk, sa_b, sb_b)
+                acc = jax.lax.psum(acc, part.k)
+                if pk and m00:
+                    acc = acc - jnp.asarray(pk * m00, acc.dtype)
+                # same single combined-scale multiply as the kernel's
+                # in-VMEM dequant, with the scale product pinned to one f32
+                # rounding: both factors are scalars here, and the jitted
+                # SPMD program otherwise reassociates acc * sa * sb
+                from repro.core.quantization import pin_rounding
+                return acc.astype(jnp.float32) * pin_rounding(sa_b[0] * sb_b[0])
+
+        out = shard_map(
+            local, mesh=mesh,
+            in_specs=(part.a_spec(), part.w_spec(), P(None), P(None)),
+            out_specs=part.out_spec(), check_rep=False,
+        )(a_p, b_p, sa_a, sb_a)
+        return out[:M, :N]
+
+    return fn
+
+
 def _conv_band_ways(n: int, ho: int, n_rows: int) -> int:
     """Output-row band ways for the conv rows partition: when the batch
     alone cannot fill the ``acu_conv_rows`` axes (N < n_rows with N | n_rows),
@@ -274,6 +329,159 @@ def wrap_fused_conv(conv_call: Callable[..., Array],
             out = out.reshape(n, band_ways * out.shape[1], wo, cout)
             return out[:, :ho]
         return out[:n, :, :, :cout]
+
+    return fn
+
+
+def wrap_conv_bwd_w(acc_call: Callable[..., Array], ctx: MeshContext,
+                    part: GemmPartition, spec) -> Callable[..., Array]:
+    """Shard the banded approximate conv weight-grad
+    ``fn(xf, g, sx, sg) -> (kh*kw, Cin, Cout) int32``.
+
+    The weight-grad contracts over output pixels — the *rows* of the conv
+    partition — so the batch x output-row-band dim shards over ``part.rows``
+    (halo'd band slabs, same machinery as the forward's
+    :func:`wrap_fused_conv`) and the per-shard int32 partials **psum over
+    the rows axes**. Output channels shard over ``part.cols`` and input
+    channels over ``part.k`` — both are *output* dims of gw, so they carve
+    the accumulator without collectives, staying sharded exactly as the
+    forward left them. There is no pad-correction term at all: padded batch
+    images and dead band-slab rows carry a zero ``rmask`` (the kernel masks
+    them multiplicatively, because an invalid row contributes the
+    non-constant ``M[x, 0]``), and padded cin/cout only produce discarded
+    accumulator slices. ``acc_call(x, g, rmask, sx, sg, padding)`` is the
+    single-device banded kernel wrapper; bit-exactness is by construction —
+    int32 pixel partials add associatively across shards.
+    """
+    mesh = ctx.mesh
+
+    def fn(xf: Array, g: Array, sx, sg) -> Array:
+        n, c, h = xf.shape[0], xf.shape[1], xf.shape[2]
+        cout = g.shape[3]
+        kh = spec.w_shape[2]
+        ho, wo = spec.out_spatial
+        band_ways = 1
+        if part.rows:
+            band_ways = _conv_band_ways(n, ho, part.n_rows)
+        pk = (-c) % part.n_k
+        pn = (-cout) % part.n_cols
+        sh = spec.stride[0]
+        dh = spec.dilation[0]
+        (ph0, _), (pw0, pw1) = spec.padding
+
+        if band_ways > 1:
+            # conv row padding materializes here (zeros); each shard
+            # dynamic-slices its halo'd slab from its rows-axis index —
+            # never an XLA concat feeding the shard_map
+            ho_band = -(-ho // band_ways)
+            slab_rows = (ho_band - 1) * sh + (kh - 1) * dh + 1
+            rows_needed = (band_ways - 1) * ho_band * sh + slab_rows
+            xf = jnp.pad(xf, ((0, 0), (0, pk),
+                              (ph0, max(0, rows_needed - h - ph0)), (0, 0)))
+            xf = xf[:, :, :rows_needed]
+            g = jnp.pad(g, ((0, 0), (0, band_ways * ho_band - ho),
+                            (0, 0), (0, pn)))
+            pad_kw = {"padding": ((0, 0), (pw0, pw1))}
+            x_rows = g_rows = None   # replicated; slabs carved per shard
+
+            def extract(x_blk, g_blk, rm_blk):
+                r = 0
+                for a in part.rows:
+                    r = r * mesh.shape[a] + jax.lax.axis_index(a)
+                b_idx = r // band_ways
+                band = r % band_ways
+                x_sl = jax.lax.dynamic_slice(
+                    x_blk, (b_idx, 0, band * ho_band * sh, 0),
+                    (1, x_blk.shape[1], slab_rows, x_blk.shape[3]))
+                g_sl = jax.lax.dynamic_slice(
+                    g_blk, (b_idx, band * ho_band, 0, 0),
+                    (1, ho_band, g_blk.shape[2], g_blk.shape[3]))
+                # slab rows past Ho (last band of an uneven split) are dead
+                rm = ((band * ho_band + jnp.arange(ho_band)) < ho
+                      ).astype(jnp.int32).reshape(1, ho_band)
+                return x_sl, g_sl, rm
+        else:
+            pb = (-n) % part.n_rows
+            if pb or pk:
+                xf = jnp.pad(xf, ((0, pb), (0, pk), (0, 0), (0, 0)))
+            if pb or pn:
+                g = jnp.pad(g, ((0, pb), (0, 0), (0, 0), (0, pn)))
+            rmask = jnp.pad(jnp.ones((n, ho), jnp.int32),
+                            ((0, pb), (0, 0)))   # padded images: dead rows
+            pad_kw = {"padding": spec.padding}
+            x_rows = g_rows = part._dim(part.rows)
+            extract = lambda x_blk, g_blk, rm_blk: (x_blk, g_blk, rm_blk)
+
+        sx_a = jnp.asarray(sx, jnp.float32).reshape(1)
+        sg_a = jnp.asarray(sg, jnp.float32).reshape(1)
+        cols = part._dim(part.cols)
+        kdim = part._dim(part.k)
+
+        def local(x_blk, g_blk, rm_blk, sx_b, sg_b):
+            x_sl, g_sl, rm = extract(x_blk, g_blk, rm_blk)
+            acc = acc_call(x_sl, g_sl, rm, sx_b, sg_b, **pad_kw)
+            if part.rows:
+                # the pixel contraction: int32 partials, one per band slab
+                acc = jax.lax.psum(acc, part.rows)
+            return acc
+
+        rm_arg = rmask if band_ways == 1 else \
+            jnp.zeros((1, 1), jnp.int32)   # unused; built inside extract
+        out = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(x_rows, kdim, None, None),
+                      P(g_rows, None, None, cols),
+                      P(g_rows, None) if band_ways == 1 else P(None, None),
+                      P(None), P(None)),
+            out_specs=P(None, kdim, cols), check_rep=False,
+        )(xf, g, rm_arg, sx_a, sg_a)
+        return out[:, :c, :cout]
+
+    return fn
+
+
+def wrap_conv_gx_gemm(acc_call: Callable[..., Array], ctx: MeshContext,
+                      part: GemmPartition, m00: int) -> Callable[..., Array]:
+    """Shard one per-band input-grad GEMM ``fn(g2, wfmat, sg, sw) -> int32``.
+
+    ``g2``: (band pixels, Cout) float gradient rows; ``wfmat``: (Cout,
+    C*kh*kw) float residual weights. The contraction dim is Cout — the conv
+    partition's *cols* axes — so the weight operand stays sharded exactly as
+    the forward left it: each cols shard runs the fused backward kernel on
+    its Cout slice (``acc_call`` = ``fused_lut_bwd`` with ``emit_acc``),
+    the int32 partials psum over ``part.cols``, and the Cout shard-padding
+    correction — zero pads quantize to code 0, contributing ``M[0, 0]``
+    each — lands exactly once, after the collective. Rows and k axes are
+    idle here (the band's pixel rows and the patch-feature columns stay
+    whole); they compute replicated. The caller scatters the returned
+    accumulator into the integer gradient canvas and dequants once.
+    """
+    mesh = ctx.mesh
+
+    def fn(g2: Array, bmat: Array, sg, sw) -> Array:
+        K = g2.shape[1]
+        pk = (-K) % part.n_cols
+        g2_p = _pad2(g2, 0, pk)     # 0.0 quantizes to code 0 (symmetric)
+        b_p = _pad2(bmat, pk, 0)
+        sg_a = jnp.asarray(sg, jnp.float32).reshape(1)
+        sw_a = jnp.asarray(sw, jnp.float32).reshape(1)
+        cols = part._dim(part.cols)
+
+        def local(a_blk, b_blk, sa_b, sb_b):
+            acc = acc_call(a_blk, b_blk, sa_b, sb_b)
+            if part.cols:
+                acc = jax.lax.psum(acc, part.cols)
+            return acc
+
+        out = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(None, cols), P(cols, None), P(None), P(None)),
+            out_specs=P(None, None), check_rep=False,
+        )(g2_p, b_p, sg_a, sw_a)
+        if pk and m00:
+            # global Cout shard-padding correction: once, after the psum
+            out = out - jnp.asarray(pk * m00, out.dtype)
+        return out
 
     return fn
 

@@ -301,6 +301,36 @@ def acu_gemm_partition(ctx, *, float_accum: bool = False
     return part, report
 
 
+def bwd_gemm_partitions(part: GemmPartition
+                        ) -> tuple[GemmPartition, GemmPartition]:
+    """Permuted partitions for the *approximate* STE backward GEMMs.
+
+    Each backward GEMM is a forward-shaped GEMM with the forward partition's
+    roles permuted — no new mesh axes are claimed, so the residuals arrive
+    already sharded the way the forward left them:
+
+    * ``gx = g (M, N) @ wf.T (N, K)``: output rows stay on the forward's
+      ``rows`` axes, output columns land on the forward's ``k`` axes, and the
+      contraction runs over the forward's ``cols`` axes.
+    * ``gw = xf.T (K, M) @ g (M, N)``: rows over the forward's ``k`` axes,
+      columns over the forward's ``cols`` axes, contraction over the
+      forward's ``rows`` axes.
+
+    A non-empty contraction (``k``) dim means int32 partial accumulators
+    psum before dequant with the shard-padding corrected exactly once —
+    the same discipline as an ``acu_k``-sharded forward. Under the default
+    rules (rows over ``("pod", "data")``, cols over ``("model",)``) both
+    backward GEMMs are contraction-sharded even though the forward is not.
+    """
+    gx = GemmPartition(rows=part.rows, cols=part.k, k=part.cols,
+                       n_rows=part.n_rows, n_cols=part.n_k, n_k=part.n_cols,
+                       report=("bwd gx: forward partition, cols<->k swapped",))
+    gw = GemmPartition(rows=part.k, cols=part.cols, k=part.rows,
+                       n_rows=part.n_k, n_cols=part.n_cols, n_k=part.n_rows,
+                       report=("bwd gw: forward partition, rows<->k swapped",))
+    return gx, gw
+
+
 def acu_conv_partition(ctx, *, float_accum: bool = False
                        ) -> tuple[GemmPartition, list[str]]:
     """The ``acu_conv`` partition rule: resolve ``acu_conv_rows`` /

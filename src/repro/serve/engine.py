@@ -58,14 +58,18 @@ class ServeEngine:
         else:
             self._mesh_scope = lambda: use_mesh(mesh)
 
-        def prefill(params, cache, tokens):
+        def prefill(params, cache, tokens, pos_offset, pad_mask):
             logits, cache = apply_model(params, tokens, cfg, acfg=acfg,
-                                        cache=cache, cache_pos=0)
+                                        cache=cache, cache_pos=0,
+                                        pos_offset=pos_offset,
+                                        pad_mask=pad_mask)
             return logits[:, -1], cache
 
-        def decode(params, cache, tokens, pos):
+        def decode(params, cache, tokens, pos, pos_offset, pad_mask):
             logits, cache = apply_model(params, tokens, cfg, acfg=acfg,
-                                        cache=cache, cache_pos=pos, decode=True)
+                                        cache=cache, cache_pos=pos, decode=True,
+                                        pos_offset=pos_offset,
+                                        pad_mask=pad_mask)
             return logits[:, -1], cache
 
         self._prefill = jax.jit(prefill)
@@ -76,32 +80,43 @@ class ServeEngine:
         b = self.slots
         plen = max(len(r.prompt) for r in reqs)
         toks = np.zeros((b, plen), np.int32)
+        offs = np.zeros(b, np.int32)           # per-request left-pad counts
+        valid = np.zeros((b, self.max_seq), bool)
         for i, r in enumerate(reqs):
-            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            off = plen - len(r.prompt)
+            toks[i, off:] = r.prompt           # left-pad
+            offs[i] = off
+            valid[i, off:] = True              # pad slots masked for the wave
         cache = init_cache(self.cfg, b, self.max_seq)
+        offs_j, valid_j = jnp.asarray(offs), jnp.asarray(valid)
         with self._mesh_scope():
             logits, cache = self._prefill(self.params, cache,
-                                          jnp.asarray(toks))
+                                          jnp.asarray(toks), offs_j, valid_j)
         cur = np.asarray(jnp.argmax(logits, -1))
-        for r in reqs:
-            r.out = np.array([], np.int32)
         max_new = max(r.max_new_tokens for r in reqs)
+        budget = max(0, min(max_new, self.max_seq - plen))
+        out = np.zeros((b, budget), np.int32)  # preallocated (was O(n^2)
+        n_out = np.zeros(b, np.int32)          # np.append per token)
         alive = np.ones(b, bool)
-        for t in range(min(max_new, self.max_seq - plen)):
-            for i, r in enumerate(reqs):
-                if alive[i]:
-                    r.out = np.append(r.out, cur[i])
-                    if on_token:
-                        on_token(i, int(cur[i]))
-                    if len(r.out) >= r.max_new_tokens:
-                        alive[i] = False
-            if not alive.any():
+        for t in range(budget):
+            for i in np.flatnonzero(alive):
+                out[i, t] = cur[i]
+                n_out[i] += 1
+                if on_token:
+                    on_token(int(i), int(cur[i]))
+                if n_out[i] >= reqs[i].max_new_tokens:
+                    alive[i] = False
+            # no decode once every slot is done, nor for the step whose
+            # logits nothing would consume (the old loop ran one extra)
+            if not alive.any() or t == budget - 1:
                 break
             with self._mesh_scope():
                 logits, cache = self._decode(self.params, cache,
                                              jnp.asarray(cur)[:, None],
-                                             plen + t)
+                                             plen + t, offs_j, valid_j)
             cur = np.asarray(jnp.argmax(logits, -1))
+        for i, r in enumerate(reqs):
+            r.out = out[i, :n_out[i]].copy()
 
     def run(self, requests: list[Request],
             on_token: Optional[Callable[[int, int], None]] = None) -> list[Request]:

@@ -16,6 +16,47 @@ def test_compress_roundtrip_bound(rng):
     assert q.dtype == jnp.int8
 
 
+def test_psum_path_roundtrips_through_compress(rng):
+    """Regression: the psum path must quantize through the same helper as
+    standalone compress() — with the pmax'd amax passed in, its transmitted
+    value is exactly decompress(compress(g, amax)) and the standalone
+    round-trip bound holds inside the collective path too."""
+    from repro.launch.mesh import compat_make_mesh
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = compat_make_mesh((1,), ("dp",))
+
+    g = jnp.asarray(rng.normal(size=(64,)) * 3, jnp.float32)
+    ef = init_ef({"w": g})
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(P(), P()),
+                       out_specs=(P(), P()), check_rep=False)
+    def step(g, r):
+        out, ef2 = compressed_psum({"w": g}, EFState(residual={"w": r}), "dp")
+        return out["w"], ef2.residual["w"]
+
+    sent, resid = step(g, ef.residual["w"])
+    q, scale = compress(g)                      # 1 worker: pmax == local amax
+    np.testing.assert_array_equal(np.asarray(sent),
+                                  np.asarray(decompress(q, scale)))
+    # residual is exactly what int8 dropped, bounded by half a code step
+    np.testing.assert_array_equal(np.asarray(resid),
+                                  np.asarray(g - decompress(q, scale)))
+    assert float(jnp.abs(resid).max()) <= float(scale) / 2 + 1e-6
+
+
+def test_compress_external_amax_roundtrip_bound(rng):
+    """compress() with a caller-supplied (e.g. pmax'd) bound still
+    round-trips within half a step of the *wider* grid."""
+    g = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    amax = jnp.max(jnp.abs(g)) * 4.0            # another worker's larger amax
+    q, scale = compress(g, amax)
+    assert q.dtype == jnp.int8
+    assert float(scale) == float(jnp.maximum(amax, 1e-12) / 127.0)
+    assert float(jnp.abs(decompress(q, scale) - g).max()) \
+        <= float(scale) / 2 + 1e-6
+
+
 def test_error_feedback_unbiased_over_steps(rng):
     """Sum of transmitted values + residual == sum of true gradients."""
     from repro.launch.mesh import compat_make_mesh

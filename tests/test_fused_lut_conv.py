@@ -563,3 +563,162 @@ def test_conv2d_separable_still_works():
     out = separable_conv2d(x, wdw, wpw, cfg=CFG)
     assert out.shape == (1, 6, 8, 8)
     assert bool(jnp.isfinite(out).all())
+
+
+# ---------------------------------------------------------------------------
+# approximate backward: banded weight-grad kernel + conv STE approx_bwd
+# ---------------------------------------------------------------------------
+
+from repro.core.approx_ops import _conv_qparams, _im2col
+from repro.core.quantization import fake_quantize, inline_symmetric_scale, \
+    pin_rounding
+from repro.kernels.fused_lut_conv.ops import conv_out_size, \
+    fused_lut_conv_bwd_w
+
+
+def _oracle_bwd_w(acu, xf, g, sx, sg, ksize, stride, padding, dilation):
+    """quantize -> im2col of CODES -> unfused LUT GEMM: the materialized
+    oracle the banded kernel must reproduce bitwise (int accumulators)."""
+    kh, kw = ksize
+    qx = jnp.clip(jnp.round(xf.astype(jnp.float32) / sx), -128, 127)
+    qg = jnp.clip(jnp.round(g.astype(jnp.float32) / sg), -128,
+                  127).astype(jnp.int32)
+    cols, _ = _im2col(qx, kh, kw, stride, padding, dilation)  # pads -> code 0
+    cols = cols.astype(jnp.int32).reshape(-1, cols.shape[-1])
+    g2 = qg.reshape(-1, g.shape[3])
+    acc = acu._lut_matmul_jnp(cols.T, g2, k_chunk=min(256, cols.shape[0]))
+    c = xf.shape[1]
+    return acc.reshape(c, kh * kw, g.shape[3]).transpose(1, 0, 2)
+
+
+@pytest.mark.parametrize("geom", [
+    # (n, c, h, w, cout, (kh, kw), stride, dilation, padding)
+    (2, 3, 9, 11, 5, (3, 3), (1, 1), (1, 1), ((1, 1), (1, 1))),
+    (1, 4, 12, 10, 7, (3, 2), (2, 1), (1, 2), ((0, 0), (1, 0))),
+    (2, 2, 8, 8, 3, (2, 2), (2, 2), (1, 1), ((0, 0), (0, 0))),
+    (1, 5, 14, 9, 6, (3, 3), (1, 2), (2, 1), ((2, 2), (1, 1))),
+])
+@pytest.mark.parametrize("bh", [0, 1, 3])
+def test_bwd_w_kernel_matches_im2col_oracle(geom, bh):
+    """Banded weight-grad kernel (patch rows streamed per output-row band,
+    invalid rows masked in-kernel) == materialized im2col-code oracle,
+    bitwise on the int32 accumulator, across stride/dilation/asymmetric-pad
+    geometry and band heights (bh=0 lets the VMEM model pick)."""
+    n, c, h, w, cout, ksize, stride, dil, pad = geom
+    rng = np.random.default_rng(sum(ksize) + n + c + h)
+    xf = jnp.asarray(rng.standard_normal((n, c, h, w)), jnp.float32)
+    ho = conv_out_size(h, ksize[0], stride[0], dil[0], pad[0])
+    wo = conv_out_size(w, ksize[1], stride[1], dil[1], pad[1])
+    g = jnp.asarray(rng.standard_normal((n, ho, wo, cout)), jnp.float32)
+    sx = inline_symmetric_scale(jnp.max(jnp.abs(xf)), 8)
+    sg = inline_symmetric_scale(jnp.max(jnp.abs(g)), 8)
+    ref = _oracle_bwd_w(ACU_FUSED, xf, g, sx, sg, ksize, stride, pad, dil)
+    got = fused_lut_conv_bwd_w(xf, g, LUT, 128, sx, sg, ksize=ksize,
+                               stride=stride, padding=pad, dilation=dil,
+                               bits=8, bh=bh, interpret=True)
+    assert got.dtype == jnp.int32
+    assert jnp.array_equal(got, ref)
+
+
+def test_bwd_w_kernel_biased_m00_masks_invalid_rows():
+    """Biased multiplier (M[0,0] = 7): band-alignment pad rows would each
+    leak a non-constant LUT[qx, off] sum — the in-kernel row mask must kill
+    them exactly (no post-hoc correction can)."""
+    rng = np.random.default_rng(4)
+    xf = jnp.asarray(rng.standard_normal((1, 3, 9, 8)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((1, 7, 6, 4)), jnp.float32)
+    sx = inline_symmetric_scale(jnp.max(jnp.abs(xf)), 8)
+    sg = inline_symmetric_scale(jnp.max(jnp.abs(g)), 8)
+    ref = _oracle_bwd_w(ACU_BIASED, xf, g, sx, sg, (3, 3), (1, 1),
+                        ((0, 0), (0, 0)), (1, 1))
+    for bh in (2, 3):   # 7 rows: both leave partial last bands
+        got = fused_lut_conv_bwd_w(xf, g, _BIASED_LUT, 128, sx, sg,
+                                   ksize=(3, 3), stride=(1, 1),
+                                   padding=((0, 0), (0, 0)), dilation=(1, 1),
+                                   bits=8, bh=bh, interpret=True)
+        assert jnp.array_equal(got, ref)
+
+
+def _oracle_approx_grads(acu, x, w, g_nchw, cfg, stride, padding, dilation):
+    """Unfused approximate-backward oracle for the conv STE: quantize
+    globally -> code im2col -> int LUT GEMMs -> int scatter (gx) -> ONE
+    combined-scale dequant per grad."""
+    n, cin, h, w_in = x.shape
+    cout, _, kh, kw = w.shape
+    sh, sw = stride
+    dh, dw = dilation
+    (ph0, ph1), (pw0, pw1) = padding
+    xqp, wqp = _conv_qparams(x, w, cfg, None, None)
+    xf = fake_quantize(x, xqp).astype(jnp.float32)
+    wf = fake_quantize(w, wqp).astype(jnp.float32)
+    g = g_nchw.transpose(0, 2, 3, 1).astype(jnp.float32)
+    ho, wo = g.shape[1:3]
+    sg = inline_symmetric_scale(jnp.max(jnp.abs(g)), 8)
+    sx = inline_symmetric_scale(jnp.max(jnp.abs(xf)), 8)
+    sw_s = inline_symmetric_scale(jnp.max(jnp.abs(wf)), 8)
+    accw = _oracle_bwd_w(acu, xf, g, sx, sg, (kh, kw), stride, padding,
+                         dilation)
+    gw = (accw.astype(jnp.float32) * pin_rounding(sx * sg)
+          ).transpose(2, 1, 0).reshape(cout, cin, kh, kw)
+    qg = jnp.clip(jnp.round(g / sg), -128, 127).astype(jnp.int32)
+    qw = jnp.clip(jnp.round(wf / sw_s), -128, 127).astype(jnp.int32)
+    accx = acu._lut_matmul_jnp(qg.reshape(-1, cout), qw.reshape(cout, -1),
+                               k_chunk=min(256, cout))
+    accx = accx.reshape(n, ho, wo, cin, kh, kw)
+    canvas = jnp.zeros((n, cin, h + ph0 + ph1, w_in + pw0 + pw1), jnp.int32)
+    for u in range(kh):
+        for v in range(kw):
+            canvas = canvas.at[
+                :, :, u * dh:u * dh + (ho - 1) * sh + 1:sh,
+                v * dw:v * dw + (wo - 1) * sw + 1:sw,
+            ].add(accx[:, :, :, :, u, v].transpose(0, 3, 1, 2))
+    canvas = canvas[:, :, ph0:ph0 + h, pw0:pw0 + w_in]
+    gx = canvas.astype(jnp.float32) * pin_rounding(sg * sw_s)
+    return gx, gw
+
+
+@pytest.mark.parametrize("geom", [
+    ((2, 3, 9, 11), (5, 3, 3, 3), (1, 1), "SAME", (1, 1)),
+    ((1, 4, 12, 10), (7, 4, 3, 2), (2, 1), "VALID", (1, 2)),
+])
+def test_conv2d_approx_bwd_matches_unfused_oracle(geom):
+    """End-to-end jax.vjp through conv2d with cfg.approx_bwd: the banded
+    fused backward (weight-grad kernel + per-band gx GEMMs scattering int32)
+    equals the materialized unfused composition bitwise, eager and jit. The
+    im2col patch tensor never exists in HBM on the fused route."""
+    x_shape, w_shape, stride, padding, dil = geom
+    rng = np.random.default_rng(x_shape[2])
+    cfg = ApproxConfig(acu=ACU_FUSED, approx_bwd=True)
+    x = jnp.asarray(rng.standard_normal(x_shape), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(w_shape), jnp.float32)
+    pad = resolve_conv_padding(padding, x_shape, w_shape, stride, dil)
+    spec = ConvSpec(x_shape=x_shape, w_shape=w_shape, stride=stride,
+                    padding=pad, dilation=dil)
+    plan = conv_plan(ACU_FUSED, spec, a_bits=8, fused=True, mesh=False)
+    assert plan.bwd_route == "banded"
+
+    def f(x, w):
+        return conv2d(x, w, stride=stride, padding=padding, dilation=dil,
+                      cfg=cfg)
+
+    y, vjp = jax.vjp(f, x, w)
+    g = jnp.asarray(rng.standard_normal(y.shape), jnp.float32)
+    gx, gw = vjp(g)
+    ogx, ogw = _oracle_approx_grads(ACU_FUSED, x, w, g, cfg, stride, pad, dil)
+    assert jnp.array_equal(gx, ogx)
+    assert jnp.array_equal(gw, ogw)
+    gx_j, gw_j = jax.jit(lambda x, w, g: jax.vjp(f, x, w)[1](g))(x, w, g)
+    assert jnp.array_equal(gx, gx_j) and jnp.array_equal(gw, gw_j)
+
+
+def test_conv_plan_resolves_bwd_route():
+    """Fused plans resolve a banded bwd_route + tiling under the VMEM budget;
+    unfused plans carry none."""
+    spec = ConvSpec(x_shape=(1, 8, 16, 16), w_shape=(8, 8, 3, 3),
+                    stride=(1, 1), padding=((1, 1), (1, 1)), dilation=(1, 1))
+    plan = conv_plan(ACU_FUSED, spec, a_bits=8, fused=True, mesh=False)
+    assert plan.bwd_route == "banded" and plan.bwd_tiling is not None
+    assert "bwd_route" in plan.describe()
+    acu_unfused = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True)
+    plan_u = conv_plan(acu_unfused, spec, a_bits=8, fused=False, mesh=False)
+    assert plan_u.bwd_route is None

@@ -190,3 +190,115 @@ def test_acu_matmul_unchanged_by_fused_flag():
     import dataclasses
     fused_acu = dataclasses.replace(ACU, fused=True)
     assert jnp.array_equal(fused_acu.matmul(a, w), ACU.matmul(a, w))
+
+
+# ---------------------------------------------------------------------------
+# approximate backward: fused_lut_bwd (in-kernel fake-quant STE grads)
+# ---------------------------------------------------------------------------
+
+import dataclasses
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.core.multipliers import make_exact
+from repro.kernels.fused_lut_dense.ops import fused_lut_bwd
+from repro.kernels.fused_lut_dense.ref import fused_lut_bwd_ref
+
+_BIASED_MULT = dataclasses.replace(
+    make_exact(8), name="mul8s_biased",
+    fn=lambda a, w: a.astype(jnp.int32) * w.astype(jnp.int32) + 7)
+_BIASED_LUT = jnp.asarray(build_lut(_BIASED_MULT))
+
+
+def _bwd_operands(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    sa = jnp.max(jnp.abs(a)) / 127.0
+    sb = jnp.max(jnp.abs(b)) / 127.0
+    return a, b, sa, sb
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 1), (8, 128, 8), (33, 257, 5),
+                                   (64, 96, 32), (130, 70, 129)])
+def test_fused_bwd_matches_ref_shapes(shape):
+    """Backward-flavor kernel (both operands quantized in-kernel, per-tensor
+    symmetric) vs its O(MKN) reference, odd and divisible M/K/N, eager and
+    jit, bitwise."""
+    a, b, sa, sb = _bwd_operands(*shape, seed=sum(shape))
+    ref = fused_lut_bwd_ref(a, b, LUT.reshape(-1), 128, 256, sa, sb, bits=8)
+    out = fused_lut_bwd(a, b, LUT, 128, sa, sb, bits=8, interpret=True)
+    assert jnp.array_equal(out, ref)
+    outj = jax.jit(lambda a, b: fused_lut_bwd(a, b, LUT, 128, sa, sb, bits=8,
+                                              interpret=True))(a, b)
+    assert jnp.array_equal(outj, ref)
+
+
+def test_fused_bwd_k_pad_correction_biased_m00():
+    """K=30 pads 98 ks; each contributes LUT[off, off] = 7 with the biased
+    multiplier — the kernel must subtract them in integer space."""
+    a, b, sa, sb = _bwd_operands(6, 30, 5, seed=3)
+    ref = fused_lut_bwd_ref(a, b, _BIASED_LUT.reshape(-1), 128, 256, sa, sb,
+                            bits=8)
+    out = fused_lut_bwd(a, b, _BIASED_LUT, 128, sa, sb, bits=8,
+                        interpret=True)
+    assert jnp.array_equal(out, ref)
+
+
+def test_fused_bwd_emit_acc_is_raw_accumulator():
+    """emit_acc=True is the int32 accumulator the mesh contraction route
+    psums — equal to the unfused code-GEMM, and dequantizing reproduces the
+    normal output bitwise."""
+    a, b, sa, sb = _bwd_operands(9, 40, 7, seed=13)
+    acc = fused_lut_bwd(a, b, LUT, 128, sa, sb, bits=8, interpret=True,
+                        emit_acc=True)
+    assert acc.dtype == jnp.int32
+    qa = jnp.clip(jnp.round(a / sa), -128, 127).astype(jnp.int32)
+    qb = jnp.clip(jnp.round(b / sb), -128, 127).astype(jnp.int32)
+    assert jnp.array_equal(acc, ACU._lut_matmul_jnp(qa, qb))
+    out = fused_lut_bwd(a, b, LUT, 128, sa, sb, bits=8, interpret=True)
+    assert jnp.array_equal(out, acc.astype(jnp.float32) * (sa * sb))
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 100), k=st.integers(1, 280), n=st.integers(1, 100),
+       biased=st.sampled_from([False, True]))
+def test_property_fused_bwd_oracle_bitwise(m, k, n, biased):
+    """Property harness: any drawn (M, K, N) — including K-pad branches —
+    and either multiplier, the fused backward equals the reference
+    bitwise."""
+    lut = _BIASED_LUT if biased else LUT
+    a, b, sa, sb = _bwd_operands(m, k, n, seed=m * 31 + k * 7 + n)
+    ref = fused_lut_bwd_ref(a, b, lut.reshape(-1), 128, 256, sa, sb, bits=8)
+    out = fused_lut_bwd(a, b, lut, 128, sa, sb, bits=8, interpret=True)
+    assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("shape", [(16, 32, 8), (33, 70, 21)])
+def test_ste_approx_bwd_fused_equals_unfused(shape):
+    """cfg.approx_bwd routes the STE grads through the ACU; the fused
+    in-kernel route and the unfused quantize->code-GEMM->dequant route are
+    the same computation and must agree bitwise — values AND both grads."""
+    M, K, N = shape
+    rng = np.random.default_rng(N)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    xqp = symmetric_qparams(jnp.max(jnp.abs(x)), 8)
+    wqp = symmetric_qparams(jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-9),
+                            8, axis=1)
+    acu_f = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True, fused=True)
+    c0 = ApproxConfig(acu=ACU_PALLAS, approx_bwd=True)
+    c1 = ApproxConfig(acu=acu_f, approx_bwd=True)
+
+    def loss(cfg):
+        return lambda x, w: (approx_matmul(x, w, cfg, xqp, wqp)
+                             * jnp.arange(N)).sum()
+
+    g0x, g0w = jax.grad(loss(c0), argnums=(0, 1))(x, w)
+    g1x, g1w = jax.grad(loss(c1), argnums=(0, 1))(x, w)
+    assert jnp.array_equal(g0x, g1x)
+    assert jnp.array_equal(g0w, g1w)
+    # jit agrees with eager (the scale expression is pinned against SPMD
+    # rewrites)
+    g2x, g2w = jax.jit(jax.grad(loss(c1), argnums=(0, 1)))(x, w)
+    assert jnp.array_equal(g1x, g2x)
+    assert jnp.array_equal(g1w, g2w)

@@ -40,6 +40,46 @@ def test_engine_matches_reference():
         assert list(r.out) == ref
 
 
+def test_mixed_length_wave_matches_solo():
+    """Regression: left-pad slots must not leak into attention or shift RoPE
+    positions — a short prompt decodes the same tokens whether it shares a
+    wave with a much longer prompt or runs incrementally unpadded."""
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    short = np.asarray([7, 11, 2], np.int32)
+    long = np.asarray([5, 17, 3, 99, 23, 41, 8, 1, 64, 12], np.int32)
+    ref_short = greedy_reference(params, cfg, short, 6)
+    ref_long = greedy_reference(params, cfg, long, 6)
+    eng = ServeEngine(params, cfg, slots=2, max_seq=64)
+    done = eng.run([Request(prompt=short, max_new_tokens=6),
+                    Request(prompt=long, max_new_tokens=6)])
+    assert list(done[0].out) == ref_short
+    assert list(done[1].out) == ref_long
+
+
+def test_no_trailing_decode_and_counts_unchanged():
+    """Regression: the wave loop must not issue a decode step whose logits
+    nothing consumes (N tokens need exactly N-1 decode calls after prefill),
+    and the preallocated output buffer yields the same token counts."""
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    eng = ServeEngine(params, cfg, slots=2, max_seq=8)
+    calls = [0]
+    inner = eng._decode
+
+    def counting(*a, **k):
+        calls[0] += 1
+        return inner(*a, **k)
+
+    eng._decode = counting
+    # budget = max_seq - plen = 6 caps max_new_tokens=10: the old loop ran a
+    # 7th decode after collecting the 6th token because the slot never died
+    done = eng.run([Request(prompt=np.asarray([3, 1], np.int32),
+                            max_new_tokens=10)])
+    assert len(done[0].out) == 6
+    assert calls[0] == 5
+
+
 def test_engine_multiple_waves_and_lengths():
     cfg = reduced_config("smollm-135m")
     params = init_params(KEY, cfg)

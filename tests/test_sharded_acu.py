@@ -431,3 +431,67 @@ def test_vision_serve_engine_mesh_parity(mesh):
     assert rep224["tiling"] is not None
     assert rep224["partition"] is not None
     assert not any("falling back" in r for r in rep224["report"])
+
+
+# ---------------------------------------------------------------------------
+# approximate backward (QAT grads through the ACU) under the mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(32, 64, 16), (33, 70, 21)])
+@pytest.mark.parametrize("k_sharded", [False, True])
+def test_dense_approx_bwd_grads_bit_exact(mesh, shape, k_sharded):
+    """cfg.approx_bwd dense STE: sharded grads (fused in-kernel backward,
+    int32 psum + exactly-once pad correction) == single-device, bitwise —
+    default rules and the contraction-sharded ``acu_k`` rules."""
+    M, K, N = shape
+    rng = np.random.default_rng(M + K)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    xqp = symmetric_qparams(jnp.max(jnp.abs(x)), 8)
+    wqp = symmetric_qparams(jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-9),
+                            8, axis=1)
+    acu = make_acu("mul8s_1L2H", AcuMode.LUT, use_pallas=True, fused=True)
+    cfg = ApproxConfig(acu=acu, approx_bwd=True)
+
+    def loss(x, w):
+        return (approx_matmul(x, w, cfg, xqp, wqp)
+                * jnp.arange(N, dtype=jnp.float32)).sum()
+
+    gx_ref, gw_ref = jax.grad(loss, argnums=(0, 1))(x, w)
+    scope = (use_mesh(mesh, {"acu_k": ("model",), "acu_cols": ()})
+             if k_sharded else use_mesh(mesh))
+    with scope:
+        gx, gw = jax.jit(jax.grad(loss, argnums=(0, 1)))(x, w)
+    assert jnp.array_equal(gx, gx_ref)
+    assert jnp.array_equal(gw, gw_ref)
+
+
+@pytest.mark.parametrize("geom", [
+    # batch fills the rows axes / band_ways path (n=1) / odd splits
+    ((8, 3, 9, 11), (8, 3, 3, 3), (1, 1), "SAME", (1, 1)),
+    ((1, 4, 12, 10), (8, 4, 3, 2), (2, 1), "VALID", (1, 2)),
+    ((2, 2, 16, 8), (12, 2, 2, 2), (2, 2), "SAME", (1, 1)),
+])
+def test_conv_approx_bwd_grads_bit_exact(mesh, geom):
+    """cfg.approx_bwd conv STE on the 2x4 mesh: the banded weight-grad
+    (band-slab shards psum int32 partials over the rows axes) and the
+    per-band gx GEMM (contraction over ``cols`` + once-only pad correction)
+    reproduce the single-device grads bitwise."""
+    x_shape, w_shape, stride, padding, dil = geom
+    rng = np.random.default_rng(x_shape[0] + w_shape[0])
+    cfg = ApproxConfig(acu=FUSED_CONV_ACU, approx_bwd=True)
+    x = jnp.asarray(rng.standard_normal(x_shape), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(w_shape), jnp.float32)
+
+    def f(x, w):
+        return conv2d(x, w, stride=stride, padding=padding, dilation=dil,
+                      cfg=cfg)
+
+    y_ref, vjp = jax.vjp(f, x, w)
+    g = jnp.asarray(rng.standard_normal(y_ref.shape), jnp.float32)
+    gx_ref, gw_ref = vjp(g)
+
+    with use_mesh(mesh):
+        gx, gw = jax.jit(lambda x, w, g: jax.vjp(f, x, w)[1](g))(x, w, g)
+    assert jnp.array_equal(gx, gx_ref)
+    assert jnp.array_equal(gw, gw_ref)
