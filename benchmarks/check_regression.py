@@ -26,7 +26,24 @@ new record is more than ``tol`` slower than the old record's:
   fused approximate backward must never fall behind the materialized eager
   approximate backward it replaced. The ``*_exact_bwd`` rows are context
   only — interpret-mode LUT gathers cannot beat native XLA f32 GEMMs, so
-  exact-f32 is deliberately NOT a floor baseline.
+  exact-f32 is deliberately NOT a floor baseline;
+* the ``attn`` section's ``attn_fused`` rows (approximate flash attention,
+  docs/benchmarks.md "[attn]") — gated from PR 7 on; the prefill row also
+  carries a within-record *parity* floor ``speedup_vs_unfused >= 0.75``.
+  The interpreter does not model the HBM round-trips the fusion removes
+  (the (Sq, Sk) score matrix the unfused oracle materializes is exactly
+  the traffic the interpreter doesn't charge for), so fused vs unfused
+  measures ~parity with heavy noise on CPU — the floor only catches the
+  fused route becoming a real de-optimization, and demanding a win here
+  would wedge the gate for the same reason the exact-bwd rows are not a
+  train floor. The decode-step row is trajectory-gated only: at Sq=1
+  per-call interpreter overhead dominates both sides;
+* the ``serve`` section's ``serve_continuous`` row (continuous-batching
+  sustained decode, docs/serving.md) — trajectory-gated µs per generated
+  token from PR 7 on, with the within-record floor
+  ``speedup_vs_wave >= 1.25``: slot-level admission/eviction must keep
+  beating the wave scheduler on the skewed request mix by a real margin,
+  or continuous batching has silently stopped paying for its complexity.
 
 Records are only comparable within the same host/backend pair; the committed
 series is produced on the dev container, so CI gates on the committed files
@@ -53,6 +70,12 @@ GATES = [
      {"mode": "train_dense_fused_bwd"}),
     ("train.conv224_fused_bwd", "train",
      {"mode": "train_conv224_fused_bwd"}),
+    ("attn.fused@prefill256", "attn",
+     {"mode": "attn_fused", "attn": "prefill256"}),
+    ("attn.fused@decode1x256", "attn",
+     {"mode": "attn_fused", "attn": "decode1x256"}),
+    ("serve.continuous", "serve",
+     {"mode": "serve_continuous"}),
 ]
 
 # within-record floors on the NEW record:
@@ -65,6 +88,11 @@ FLOORS = [
      {"mode": "train_dense_fused_bwd"}, "speedup_vs_eager_bwd", 1.0),
     ("train.conv224_fused_bwd >= eager", "train",
      {"mode": "train_conv224_fused_bwd"}, "speedup_vs_eager_bwd", 1.0),
+    ("attn.fused@prefill256 ~parity", "attn",
+     {"mode": "attn_fused", "attn": "prefill256"},
+     "speedup_vs_unfused", 0.75),
+    ("serve.continuous >= 1.25x wave", "serve",
+     {"mode": "serve_continuous"}, "speedup_vs_wave", 1.25),
 ]
 
 

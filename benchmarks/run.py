@@ -15,6 +15,11 @@ sections:
             approximate backward vs the materialized eager approximate
             backward vs the exact-f32 backward (context), dense and 224^2
             x 64ch conv geometry
+  [attn]    approximate flash attention: fused Pallas kernel vs the unfused
+            jnp oracle it is bitwise-identical to, prefill + decode shapes
+  [serve]   sustained serving tokens/s, wave vs continuous batching, with a
+            LUT-Pallas acfg (end-to-end approximate decode) — all-at-once
+            gated pair plus a Poisson arrival trace
   [sharded] the same routes under a 2x4 host-platform (data, model) mesh
             (needs XLA_FLAGS=--xla_force_host_platform_device_count=8;
             printed as skipped otherwise)
@@ -71,11 +76,10 @@ def kernel_micro(records: list | None = None):
         xqp = symmetric_qparams(jnp.max(jnp.abs(x)), 8)
         ws = jnp.full((N,), 0.01, jnp.float32)
         for name, fn in [
-            ("lut_matmul", lambda: lut_matmul(a, w, lut, 128, interpret=True)),
-            ("err_matmul", lambda: err_matmul(a, w, f, g, 128, interpret=True)),
+            ("lut_matmul", lambda: lut_matmul(a, w, lut, 128)),
+            ("err_matmul", lambda: err_matmul(a, w, f, g, 128)),
             ("fused_lut_dense", lambda: fused_lut_dense(
-                x, w, lut, 128, xqp.scale, xqp.zero_point, ws, bits=8,
-                interpret=True)),
+                x, w, lut, 128, xqp.scale, xqp.zero_point, ws, bits=8)),
         ]:
             us = _time_call(fn)
             flops = 2 * M * K * N
@@ -257,6 +261,132 @@ def train_modes(records: list | None = None):
     emit(times, "conv224", 1 * 224 * 224, 64 * 9, 64)
 
 
+def attn_modes(records: list | None = None):
+    """Approximate attention wall-clock: the fused flash kernel (in-kernel
+    quantize + LUT-gather QK^T/PV inside the streaming softmax) vs the
+    unfused jnp oracle composition it is bitwise-identical to, at a prefill
+    and a decode-step geometry. BH folds batch x heads (GQA rep=4)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import build_lut, get_multiplier
+    from repro.kernels.flash_attention.approx import approx_flash_attention
+    from repro.kernels.flash_attention.ref import approx_attention_ref
+
+    lut = jnp.asarray(build_lut(get_multiplier("mul8s_1L2H")))
+    rng = np.random.default_rng(4)
+    print("mode,attn,BH,Sq,Sk,D,us_per_call,vs_unfused")
+    for tag, bh_kv, rep, sq, sk, d, reps in [
+        ("prefill256", 2, 4, 256, 256, 32, 5),
+        ("decode1x256", 2, 4, 1, 256, 32, 8),
+    ]:
+        q = jnp.asarray(rng.normal(size=(bh_kv * rep, sq, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(bh_kv, sk, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(bh_kv, sk, d)), jnp.float32)
+        s = [jnp.float32(jnp.max(jnp.abs(t)) / 127.0) for t in (q, k, v)]
+        fns = {
+            "attn_fused": lambda: approx_flash_attention(
+                q, k, v, lut, 128, *s, causal=True),
+            "attn_unfused": lambda: approx_attention_ref(
+                q, k, v, lut, 128, *s, causal=True),
+        }
+        times = {m: _time_call(fn, reps=reps) for m, fn in fns.items()}
+        base = times["attn_unfused"]
+        for mode, us in times.items():
+            print(f"{mode},{tag},{bh_kv * rep},{sq},{sk},{d},{us:.0f},"
+                  f"{base/us:.2f}x")
+            if records is not None:
+                records.append({"mode": mode, "attn": tag,
+                                "BH": bh_kv * rep, "Sq": sq, "Sk": sk, "D": d,
+                                "us_per_call": round(us, 1),
+                                "speedup_vs_unfused": round(base / us, 3)})
+
+
+def serve_modes(records: list | None = None):
+    """Sustained serving throughput, wave vs continuous batching, end-to-end
+    approximate decode (LUT-Pallas acfg: every GEMM and every attention
+    layer rides the ACU kernels).
+
+    The request mix is deliberately skewed (a few long generations among
+    many short ones): the wave engine drains each batch at the pace of its
+    longest row, continuous batching refills freed slots immediately. Both
+    engines serve the IDENTICAL request set all-at-once for the gated pair
+    (``us_per_call`` = µs per generated token, so the trajectory gate
+    machinery applies unchanged; ``speedup_vs_wave`` carries the
+    within-record floor), plus one continuous row under a Poisson arrival
+    trace (rate 1.0/decode-step) as the sustained-load headline."""
+    import jax
+    import numpy as np
+    from repro.configs import reduced_config
+    from repro.core import make_acu
+    from repro.core.approx_ops import ApproxConfig
+    from repro.models.transformer import init_params
+    from repro.serve.engine import (ContinuousServeEngine, Request,
+                                    ServeEngine, poisson_arrivals)
+
+    cfg = reduced_config("smollm-135m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    acfg = ApproxConfig(acu=make_acu("mul8s_1L2H", use_pallas=True,
+                                     fused=True))
+    rng = np.random.default_rng(5)
+    budgets = [24, 2, 2, 2, 24, 2, 2, 2]
+
+    def make_reqs():
+        return [Request(prompt=rng.integers(1, cfg.vocab_size, 4
+                                            ).astype(np.int32),
+                        max_new_tokens=b)
+                for b in list(budgets)]
+
+    rows = []
+    print("mode,requests,tokens,decode_steps,tok_per_s,us_per_call,"
+          "speedup_vs_wave")
+
+    def timed(eng, arrivals=None, warm=True):
+        is_cont = isinstance(eng, ContinuousServeEngine)
+        if warm:   # compile THIS engine's prefill/decode outside the timing
+            wr = [Request(prompt=np.asarray([3, 1, 4, 1], np.int32),
+                          max_new_tokens=2)]
+            eng.run(wr, None) if is_cont else eng.run(wr)
+        reqs = make_reqs()
+        t0 = time.monotonic()
+        done = eng.run(reqs, arrivals) if is_cont else eng.run(reqs)
+        dt = time.monotonic() - t0
+        toks = sum(len(r.out) for r in done)
+        return toks, dt
+
+    wave = ServeEngine(params, cfg, slots=4, max_seq=32, acfg=acfg)
+    toks, dt = timed(wave)
+    rows.append({"mode": "serve_wave", "requests": len(budgets),
+                 "tokens": toks, "decode_steps": None,
+                 "tok_per_s": round(toks / dt, 2),
+                 "us_per_call": round(dt / toks * 1e6, 1)})
+
+    cont = ContinuousServeEngine(params, cfg, slots=4, max_seq=32, acfg=acfg)
+    toks, dt = timed(cont)
+    wave_tps = rows[0]["tok_per_s"]
+    rows.append({"mode": "serve_continuous", "requests": len(budgets),
+                 "tokens": toks, "decode_steps": cont.stats["decode_steps"],
+                 "tok_per_s": round(toks / dt, 2),
+                 "us_per_call": round(dt / toks * 1e6, 1),
+                 "speedup_vs_wave": round((toks / dt) / wave_tps, 3)})
+
+    # Poisson arrival trace through the SAME (already compiled) engine
+    toks, dt = timed(cont, arrivals=poisson_arrivals(len(budgets), 1.0,
+                                                     seed=7), warm=False)
+    rows.append({"mode": "serve_continuous_poisson",
+                 "requests": len(budgets), "tokens": toks,
+                 "decode_steps": cont.stats["decode_steps"],
+                 "tok_per_s": round(toks / dt, 2),
+                 "us_per_call": round(dt / toks * 1e6, 1),
+                 "occupancy": round(cont.stats["occupancy"], 2)})
+
+    for r in rows:
+        print(f"{r['mode']},{r['requests']},{r['tokens']},"
+              f"{r['decode_steps']},{r['tok_per_s']},{r['us_per_call']},"
+              f"{r.get('speedup_vs_wave', '')}")
+        if records is not None:
+            records.append(r)
+
+
 def sharded_modes(records: list | None = None):
     """approx_dense under an active 2x4 host mesh vs replicated (docs/
     sharding.md). On the CPU interpreter the sharded numbers mostly measure
@@ -334,6 +464,8 @@ def main(argv=None):
     kernel_records: list = []
     layer_records: list = []
     train_records: list = []
+    attn_records: list = []
+    serve_records: list = []
     sharded_records: list = []
     section("kernels")
     kernel_micro(kernel_records)
@@ -342,6 +474,10 @@ def main(argv=None):
     conv_modes(layer_records)
     section("train")
     train_modes(train_records)
+    section("attn")
+    attn_modes(attn_records)
+    section("serve")
+    serve_modes(serve_records)
     section("sharded")
     sharded_modes(sharded_records)
 
@@ -358,6 +494,8 @@ def main(argv=None):
             "kernels": kernel_records,
             "layers": layer_records,
             "train": train_records,
+            "attn": attn_records,
+            "serve": serve_records,
             "sharded": sharded_records,
         }
         with open(args.json, "w") as fh:

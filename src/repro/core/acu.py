@@ -69,7 +69,7 @@ class Acu:
     lowrank: Optional[LowRankError] = None
     mask: Optional[int] = None                # FACTORED path
     use_pallas: bool = False                  # route GEMMs through Pallas kernels
-    interpret: bool = True                    # CPU container: interpret kernels
+    interpret: bool | None = None             # None: repro.kernels.runtime default
     lut_chunk: int = 256                      # K-chunk for LUT gathers; 0 = the
                                               # paper's unoptimized baseline
                                               # (full (M,K,N) materialization)
@@ -768,8 +768,172 @@ def conv_plan(acu: Acu, spec: ConvSpec, *, a_bits: Optional[int] = None,
                     report=tuple(report))
 
 
+# ---------------------------------------------------------------------------
+# attention planning layer: GQA geometry x (mode, bits, use_pallas) x mesh
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    """Static geometry of one attention site (hashable: plan cache key).
+
+    ``hq``/``hkv``: query / KV head counts (``hq % hkv == 0``, GQA);
+    ``causal``/``window``/``softcap``: the mask/logit statics;
+    ``bq``/``bk``: kernel tile sizes (shrunk automatically for short
+    sequences by the kernel wrapper). Sequence lengths are deliberately NOT
+    part of the spec — the kernel geometry adapts per call, so one plan
+    serves prefill and decode.
+    """
+
+    hq: int
+    hkv: int
+    causal: bool = True
+    window: Optional[int] = None
+    softcap: Optional[float] = None
+    bq: int = 128
+    bk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnPlan:
+    """A resolved attention route for one ACU at one static geometry.
+
+    ``route`` is one of
+
+    * ``"fused_attn"`` — approximate flash attention
+      (``kernels/flash_attention.approx``): per-tensor quantize of Q/K/V
+      in-kernel, QK^T and PV as int32 LUT-gather GEMMs inside the streaming
+      softmax, pad corrections in integer space, dequant folded into the
+      running rescale. ``fn(q, k, v, q_scale, k_scale, v_scale, rowinfo)
+      -> (B, Hq, Sq, D) f32`` with ``q`` (B, Hq, Sq, D) float, ``k``/``v``
+      (B, Hkv, Sk, D), per-tensor scales computed by the caller on the FULL
+      tensors (``inline_symmetric_scale`` — mesh shards must see identical
+      scales), and ``rowinfo`` (B, 3) int32 ``[q_base, kv_start, kv_len]``
+      rows (``None`` = the end-aligned full-sequence default). Mesh-wrapped
+      when a partition is active — batch over ``acu_attn_rows``, KV heads
+      over ``acu_attn_heads``, no collectives, bit-exact by construction.
+    * ``"dense"`` — the audited fallback for non-LUT modes, non-Pallas ACUs
+      and missing tables: ``fn`` is None and the caller keeps its exact
+      float attention path (models/layers.py) — attention runs exact, only
+      the projections/MLP run approximately, mirroring the conv plan's
+      eager-im2col contract.
+    """
+
+    mode: AcuMode
+    bits: int
+    use_pallas: bool
+    route: str
+    spec: AttnSpec
+    fn: Optional[Callable[..., Array]] = None
+    partition: Optional[object] = None
+    report: tuple[str, ...] = ()
+
+    def __call__(self, *args) -> Array:
+        assert self.fn is not None, f"route {self.route} has no direct kernel"
+        return self.fn(*args)
+
+    def describe(self) -> dict:
+        part = self.partition
+        return {
+            "route": self.route,
+            "mode": self.mode.value,
+            "heads": f"hq={self.spec.hq} hkv={self.spec.hkv} "
+                     f"(rep={self.spec.hq // self.spec.hkv})",
+            "mask": f"causal={self.spec.causal} window={self.spec.window} "
+                    f"softcap={self.spec.softcap}",
+            "partition": None if part is None else
+                f"rows{part.rows}x heads{part.cols} "
+                f"({part.n_rows}x{part.n_cols} way)",
+            "report": list(self.report) + (list(part.report) if part else []),
+        }
+
+
+def attn_plan(acu: Acu, spec: AttnSpec, *, a_bits: Optional[int] = None,
+              mesh=None, route: Optional[str] = None) -> AttnPlan:
+    """Resolve one attention site: GQA geometry x (mode, bits, use_pallas) x
+    mesh -> a concrete route. Mirrors :func:`conv_plan`'s silent-but-audited
+    fallback contract: an ACU that cannot serve the fused approximate kernel
+    (non-LUT mode, no Pallas routing, no table) resolves to ``"dense"`` —
+    the caller keeps its exact float attention. ``route`` pins one
+    explicitly (``"fused_attn"`` raises if unavailable; ``"dense"`` forces
+    the exact path).
+
+    There is no unfused approximate attention route on purpose: the unfused
+    composition (``approx_attention_ref``) exists as the bit-exactness
+    oracle, not a serving path.
+    """
+    a_bits = acu.bits if a_bits is None else a_bits
+    ctx = _resolve_mesh(mesh)
+    report: list[str] = []
+    if spec.hq % spec.hkv != 0:
+        raise ValueError(f"hq={spec.hq} not a multiple of hkv={spec.hkv}")
+    if route not in (None, "fused_attn", "dense"):
+        raise ValueError(f"unknown attn route {route!r}")
+
+    can_fuse = acu.mode == AcuMode.LUT and acu.use_pallas \
+        and acu.lut is not None
+    if not can_fuse and route != "dense":
+        report.append(f"fused attention needs LUT mode + use_pallas + a "
+                      f"built table (have mode={acu.mode.value}, "
+                      f"use_pallas={acu.use_pallas}); attention stays exact")
+    if route == "fused_attn" and not can_fuse:
+        raise ValueError(f"fused_attn route unavailable: {report}")
+    if route == "dense" or not can_fuse:
+        if route == "dense":
+            report.append("route pinned to exact dense attention by caller")
+        return AttnPlan(mode=acu.mode, bits=acu.bits,
+                        use_pallas=acu.use_pallas, route="dense", spec=spec,
+                        report=tuple(report))
+
+    from repro.kernels.flash_attention.approx import approx_flash_attention
+
+    def attn_call(qf, kf, vf, qs, ks, vs, rowinfo):
+        # folded (B*H, S, D) operands; jnp.asarray stays inside fn: plans
+        # are cached across jit traces and a device constant created during
+        # one trace must not leak into another
+        return approx_flash_attention(
+            qf, kf, vf, jnp.asarray(acu.lut), acu.offset, qs, ks, vs,
+            bits=a_bits, causal=spec.causal, window=spec.window,
+            softcap=spec.softcap, rowinfo=rowinfo, bq=spec.bq, bk=spec.bk,
+            interpret=acu.interpret)
+
+    partition = None
+    if ctx is not None:
+        from repro.parallel import acu_shard
+        partition = acu_shard.resolve_attn_partition(ctx, hq=spec.hq,
+                                                     hkv=spec.hkv)
+
+    def _default_rowinfo(q, k, rowinfo):
+        if rowinfo is None:
+            b, sq, sk = q.shape[0], q.shape[2], k.shape[2]
+            rowinfo = jnp.broadcast_to(
+                jnp.array([sk - sq, 0, sk], jnp.int32), (b, 3))
+        return jnp.asarray(rowinfo, jnp.int32)
+
+    if partition is not None:
+        from repro.parallel import acu_shard
+        sharded = acu_shard.wrap_attn(attn_call, ctx, partition, hq=spec.hq,
+                                      hkv=spec.hkv)
+
+        def fn(q, k, v, qs, ks, vs, rowinfo=None):
+            return sharded(q, k, v, qs, ks, vs,
+                           _default_rowinfo(q, k, rowinfo))
+    else:
+        def fn(q, k, v, qs, ks, vs, rowinfo=None):
+            b, hq, sq, d = q.shape
+            hkv, sk = k.shape[1], k.shape[2]
+            info = jnp.repeat(_default_rowinfo(q, k, rowinfo), hq, axis=0)
+            out = attn_call(q.reshape(b * hq, sq, d),
+                            k.reshape(b * hkv, sk, d),
+                            v.reshape(b * hkv, sk, d), qs, ks, vs, info)
+            return out.reshape(b, hq, sq, d)
+
+    return AttnPlan(mode=acu.mode, bits=acu.bits, use_pallas=True,
+                    route="fused_attn", spec=spec, fn=fn,
+                    partition=partition, report=tuple(report))
+
+
 def make_acu(name: str, mode: AcuMode | str = AcuMode.LUT, rank: int = 8,
-             use_pallas: bool = False, interpret: bool = True,
+             use_pallas: bool = False, interpret: bool | None = None,
              fused: bool = False) -> Acu:
     """Build an ACU from a registered multiplier name.
 

@@ -224,6 +224,50 @@ def approx_dense(x: Array, w: Array, b: Optional[Array], cfg: Optional[ApproxCon
 
 
 # ---------------------------------------------------------------------------
+# Approximate attention: quantize -> LUT-gather QK^T / PV inside the
+# streaming-softmax kernel (kernels/flash_attention/approx.py), routed by
+# core/acu.attn_plan. The resolved plan is cached per (acu, bits, spec, mesh)
+# exactly like the STE GEMM fns.
+# ---------------------------------------------------------------------------
+
+def _get_attn_plan(acu: Acu, a_bits: int, spec, ctx):
+    from .acu import attn_plan
+    key = ("attn", id(acu), a_bits, spec, _mesh_cache_key(ctx))
+    if key in _STE_CACHE:
+        return _STE_CACHE[key]
+    plan = attn_plan(acu, spec, a_bits=a_bits, mesh=ctx or False)
+    _STE_CACHE[key] = plan
+    return plan
+
+
+def approx_attention(q: Array, k: Array, v: Array, cfg: ApproxConfig, *,
+                     causal: bool = True, window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     rowinfo: Optional[Array] = None) -> Optional[Array]:
+    """Attention through the ACU, or ``None`` when the plan audits to the
+    exact-substrate route (non-LUT mode, no Pallas, missing table) — the
+    caller keeps its float attention, mirroring conv's im2col contract.
+
+    ``q``: (B, Hq, Sq, D); ``k``/``v``: (B, Hkv, Sk, D). Per-tensor symmetric
+    scales are calibrated here on the full tensors (under a mesh every shard
+    must see the same scales — the amaxes happen before the plan's
+    shard_map). Inference-only: no custom_vjp, decode/prefill forward path.
+    """
+    from .acu import AttnSpec
+    from .quantization import inline_symmetric_scale
+    from repro.parallel.sharding import current_mesh_context
+    spec = AttnSpec(hq=q.shape[1], hkv=k.shape[1], causal=causal,
+                    window=window, softcap=softcap)
+    ctx = current_mesh_context()
+    plan = _get_attn_plan(cfg.acu, cfg.a_bits, spec, ctx)
+    if plan.route != "fused_attn":
+        return None
+    scales = [inline_symmetric_scale(jnp.maximum(jnp.max(jnp.abs(t)), 1e-6),
+                                     cfg.a_bits) for t in (q, k, v)]
+    return plan(q, k, v, *scales, rowinfo)
+
+
+# ---------------------------------------------------------------------------
 # Conv2D (paper §3.3.1) and separable conv (§3.3.2)
 #
 # Every approximate conv resolves a ConvPlan (core/acu.py): the fused route

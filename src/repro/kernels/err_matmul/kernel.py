@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _kernel(a_ref, w_ref, f_ref, g_ref, o_ref, *, offset: int, rank: int):
     k_step = pl.program_id(2)
@@ -53,7 +55,7 @@ def _kernel(a_ref, w_ref, f_ref, g_ref, o_ref, *, offset: int, rank: int):
 def err_matmul_kernel(a: jnp.ndarray, w: jnp.ndarray, f: jnp.ndarray,
                       g: jnp.ndarray, *, offset: int, rank: int,
                       bm: int = 128, bk: int = 128, bn: int = 128,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: bool | None = None) -> jnp.ndarray:
     M, K = a.shape
     _, N = w.shape
     n_codes = f.shape[0]
@@ -71,5 +73,5 @@ def err_matmul_kernel(a: jnp.ndarray, w: jnp.ndarray, f: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, w, f, g)

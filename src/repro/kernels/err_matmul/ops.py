@@ -8,7 +8,7 @@ from .kernel import err_matmul_kernel
 
 def err_matmul(a: jnp.ndarray, w: jnp.ndarray, f: jnp.ndarray, g: jnp.ndarray,
                offset: int, *, bm: int = 128, bk: int = 128, bn: int = 128,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool | None = None) -> jnp.ndarray:
     """Exact-int-matmul + low-rank error correction, padded to tile multiples.
 
     Padding uses code 0; the correction contribution of padded ks is

@@ -1,0 +1,339 @@
+"""Approximate flash attention: LUT-gather GEMMs inside the online softmax.
+
+Extends the fused quantize->LUT-GEMM->dequant scheme (kernels/fused_lut_dense)
+into the streaming-softmax loop. Per (batch*head, q_block) grid step:
+
+* Q is quantized in-kernel (per-tensor symmetric, shifted ACU codes) once;
+* each KV block quantizes K/V in-kernel, computes QK^T as an int32 LUT-gather
+  GEMM over the head dim (d-pad corrected with ``(dp - d) * LUT[off, off]``
+  in integer space), dequantizes with ONE pre-pinned combined scale
+  ``pin(pin(sq*sk) / sqrt(d))`` folded together with the 1/sqrt(d) softmax
+  scale, then applies softcap/masking and the running (m, l, acc) rescale;
+* the probabilities are quantized to static-scale codes ``round(p * hi)``
+  (p is in [0, 1] post-softmax, so the scale needs no amax) and PV is a
+  second int32 LUT-gather GEMM over the key block, Sk-pad corrected in int
+  space, dequantized with the pre-pinned ``pin(sv / hi)`` scale into the
+  float accumulator rescale.
+
+Emulation semantics (what "approximate attention on the ACU" means here):
+
+* *structural* padding this wrapper introduces (head-dim pad to the gather
+  chunk, Sk pad to the key-block multiple) is corrected in integer space, so
+  the result is independent of the tile geometry — exactly like the dense
+  and conv kernels;
+* *masked keys that exist in the input* (left-pad slots below ``kv_start``,
+  cache positions at/above ``kv_len``, causally-future or out-of-window
+  keys) get probability 0.0, which quantizes to code 0 — and the ACU still
+  multiplies code 0 by the key's V codes, contributing ``LUT[0, v]`` per
+  masked key. That is the faithful hardware emulation (a real ACU array
+  multiplies everything in the tile); for every registered multiplier
+  ``M[0, x] == 0`` so the contribution vanishes, and for biased synthetic
+  multipliers the oracle reproduces it bit-for-bit;
+* the causal block-skip bound (blocks no query in the tile can see are never
+  executed) is part of the defined semantics, and the oracle replicates it.
+
+The running max/exp/rescale stays in float32, and float32 online-softmax
+arithmetic is where the bitwise contract gets subtle: XLA's CPU backend
+contracts ``a*b + c`` into an FMA under jit — straight through
+``optimization_barrier`` and even bitcast round-trips (the same contraction
+behind the documented 1-ulp partitioned bias-add caveat from the sharding
+work). No graph-level fence stops it, so instead of trying to pin each
+multiply we pin the *structure*: the entire per-KV-block update lives in
+:func:`_online_block`, shared verbatim by the Pallas kernel and the jnp
+oracle (the PR-4 "shared tap-accumulate core" idiom). Both sides compile
+the identical ``fori_loop`` body — a loop body is its own XLA computation,
+so surrounding context cannot re-fuse it — and both public entry points run
+their math under jit, which is why they agree bit for bit. Scales are
+pinned with ``pin_rounding`` OUTSIDE the kernel and passed in as (1,)
+operands, so single-device and sharded runs also see identical bits.
+
+GQA shares KV through the BlockSpec index map (``b // rep``) — repeated K/V
+never exist in HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quantization import pin_rounding
+from repro.kernels.runtime import resolve_interpret
+
+from .kernel import NEG_INF
+
+
+def _mul_barrier(a, b):
+    """``a * b`` behind an optimization barrier.
+
+    NOT sufficient on its own — XLA CPU contracts through barriers (see
+    module docstring) — but it keeps the graphs conservative on backends
+    that do honor it. The real bitwise guarantee is the shared
+    ``_online_block`` body.
+    """
+    return jax.lax.optimization_barrier(a * b)
+
+
+def _quantize_sym(x, scale, lo, hi, offset):
+    """Per-tensor symmetric quantize to shifted ACU codes (zero-point 0)."""
+    return jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int32) + offset
+
+
+def attn_scales(q_scale, k_scale, v_scale, d_real: int, hi: int):
+    """The two combined dequant scales, pinned outside the kernel.
+
+    ``score = pin(pin(sq*sk) * (1/sqrt(d)))`` dequantizes the QK^T int32
+    accumulator straight into softmax logits; ``pv = pin(sv * (1/hi))``
+    dequantizes the PV accumulator (p codes carry the static 1/hi scale).
+    """
+    inv_sqrt_d = jnp.float32(1.0 / math.sqrt(d_real))
+    score = pin_rounding(pin_rounding(q_scale * k_scale) * inv_sqrt_d)
+    pv = pin_rounding(v_scale * jnp.float32(1.0 / hi))
+    return score, pv
+
+
+def _lut_gemm(a_codes, b_codes, lut, inner: int, n_codes: int):
+    """``out[i, n] = sum_j LUT[a[i, j], b[j, n]]`` — int32, streamed in
+    ``inner``-wide contraction chunks so the gather working set stays
+    (m, inner, n)."""
+    m_dim, k_dim = a_codes.shape
+    n_dim = b_codes.shape[1]
+
+    def step(i, acc):
+        a_sl = jax.lax.dynamic_slice(a_codes, (0, i * inner), (m_dim, inner))
+        b_sl = jax.lax.dynamic_slice(b_codes, (i * inner, 0), (inner, n_dim))
+        idx = a_sl[:, :, None] * n_codes + b_sl[None, :, :]
+        prods = jnp.take(lut, idx.reshape(-1), unique_indices=False,
+                         indices_are_sorted=False).reshape(m_dim, inner, n_dim)
+        return acc + prods.sum(axis=1)
+
+    return jax.lax.fori_loop(0, k_dim // inner, step,
+                             jnp.zeros((m_dim, n_dim), jnp.int32))
+
+
+def _online_block(ki, carry, *, qq, q_pos, k_all, v_all, lut, m00, sks, svs,
+                  score_scale, pv_scale, kv_start, kv_len, bq: int, bk: int,
+                  seq_k_real: int, d_real: int, n_codes: int, offset: int,
+                  lo: int, hi: int, causal: bool, window: int | None,
+                  softcap: float | None, inner_d: int, inner_k: int):
+    """One KV block of the approximate online softmax — the shared core.
+
+    Kernel and oracle both drive this exact function inside the same
+    ``fori_loop`` shape; its body compiles once per program as its own XLA
+    computation, which is what makes the two bitwise-identical (module
+    docstring: FMA contraction cannot be fenced op-by-op on XLA CPU).
+    """
+    m, l, acc = carry
+    dp = k_all.shape[-1]
+    kf = jax.lax.dynamic_slice(k_all, (ki * bk, 0), (bk, dp)
+                               ).astype(jnp.float32)
+    vf = jax.lax.dynamic_slice(v_all, (ki * bk, 0), (bk, dp)
+                               ).astype(jnp.float32)
+    kq = _quantize_sym(kf, sks, lo, hi, offset)
+    vq = _quantize_sym(vf, svs, lo, hi, offset)
+
+    s_int = _lut_gemm(qq, kq.T, lut, inner_d, n_codes)         # (bq, bk)
+    s_int = s_int - (dp - d_real) * m00
+    s = _mul_barrier(s_int.astype(jnp.float32), score_scale)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (k_pos >= kv_start) & (k_pos < kv_len)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m - m_new)
+    # the normalizer accumulates the FLOAT probabilities; only the PV
+    # contraction runs on the ACU
+    l_new = _mul_barrier(alpha, l) + p.sum(axis=-1)
+    pq = jnp.clip(jnp.round(p * hi), 0, hi).astype(jnp.int32) + offset
+    pv_int = _lut_gemm(pq, vq, lut, inner_k, n_codes)          # (bq, dp)
+    pv_int = pv_int - jnp.clip((ki + 1) * bk - seq_k_real, 0, bk) * m00
+    pv = _mul_barrier(pv_int.astype(jnp.float32), pv_scale)
+    acc_new = _mul_barrier(acc, alpha[:, None]) + pv
+    return m_new, l_new, acc_new
+
+
+def causal_block_bound(q_base, qi: int, bq: int, bk: int, n_kv: int):
+    """Index one past the last kv block any query row of tile ``qi`` can see
+    (``q_base`` shifts the tile to its absolute cache position). Part of the
+    defined semantics: blocks beyond the bound are never executed, which is
+    observable under biased multipliers (``M[0, x] != 0``), so the oracle
+    uses the same bound."""
+    return jnp.minimum(n_kv, (q_base + (qi + 1) * bq - 1) // bk + 1)
+
+
+def _approx_kernel(q_ref, k_ref, v_ref, lut_ref, info_ref, sq_ref, sk_ref,
+                   sv_ref, ss_ref, pvs_ref, o_ref, *, bq: int, bk: int,
+                   seq_k: int, seq_k_real: int, d_real: int, n_codes: int,
+                   offset: int, lo: int, hi: int, causal: bool,
+                   window: int | None, softcap: float | None, inner_d: int,
+                   inner_k: int):
+    qi = pl.program_id(1)
+    dp = q_ref.shape[-1]
+    lut = lut_ref[...]
+    m00 = lut[offset * n_codes + offset]
+    info = info_ref[...]
+    q_base, kv_start, kv_len = info[0, 0], info[0, 1], info[0, 2]
+
+    qf = q_ref[...][0].astype(jnp.float32)                     # (bq, dp)
+    qq = _quantize_sym(qf, sq_ref[0], lo, hi, offset)
+    q_pos = (q_base + qi * bq
+             + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+
+    k_all = k_ref[...][0]                                      # (seq_k, dp)
+    v_all = v_ref[...][0]
+
+    n_kv = seq_k // bk
+    if causal:
+        n_kv_eff = causal_block_bound(q_base, qi, bq, bk, n_kv)
+    else:
+        n_kv_eff = n_kv
+
+    body = functools.partial(
+        _online_block, qq=qq, q_pos=q_pos, k_all=k_all, v_all=v_all, lut=lut,
+        m00=m00, sks=sk_ref[0], svs=sv_ref[0], score_scale=ss_ref[0],
+        pv_scale=pvs_ref[0], kv_start=kv_start, kv_len=kv_len, bq=bq, bk=bk,
+        seq_k_real=seq_k_real, d_real=d_real, n_codes=n_codes, offset=offset,
+        lo=lo, hi=hi, causal=causal, window=window, softcap=softcap,
+        inner_d=inner_d, inner_k=inner_k)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, dp), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv_eff, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[...] = out[None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "seq_k_real", "d_real", "n_codes", "offset", "lo", "hi", "causal",
+    "window", "softcap", "bq", "bk", "rep", "inner_d", "inner_k", "interpret"))
+def approx_flash_attention_kernel(q, k, v, lut_flat, rowinfo, sqs, sks, svs,
+                                  score_scale, pv_scale, *, seq_k_real: int,
+                                  d_real: int, n_codes: int, offset: int,
+                                  lo: int, hi: int, causal: bool,
+                                  window: int | None, softcap: float | None,
+                                  bq: int, bk: int, rep: int, inner_d: int,
+                                  inner_k: int,
+                                  interpret: bool | None = None):
+    """Pre-padded entry: q (B*Hq, Sq_p, Dp) f32, k/v (B*Hkv, Sk_p, Dp),
+    ``rowinfo`` (B*Hq, 3) int32 rows ``[q_base, kv_start, kv_len]``, five
+    (1,)-shaped f32 scale operands. Returns (B*Hq, Sq_p, Dp) float32."""
+    bh, sq_p, dp = q.shape
+    bh_kv, sk_p, _ = k.shape
+    assert bh == bh_kv * rep, (bh, bh_kv, rep)
+    assert sq_p % bq == 0 and sk_p % bk == 0, (sq_p, sk_p, bq, bk)
+    assert dp % inner_d == 0 and bk % inner_k == 0, (dp, inner_d, bk, inner_k)
+    grid = (bh, sq_p // bq)
+    scale_spec = pl.BlockSpec((1,), lambda b, i: (0,))
+    return pl.pallas_call(
+        functools.partial(_approx_kernel, bq=bq, bk=bk, seq_k=sk_p,
+                          seq_k_real=seq_k_real, d_real=d_real,
+                          n_codes=n_codes, offset=offset, lo=lo, hi=hi,
+                          causal=causal, window=window, softcap=softcap,
+                          inner_d=inner_d, inner_k=inner_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dp), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, sk_p, dp), lambda b, i: (b // rep, 0, 0)),
+            pl.BlockSpec((1, sk_p, dp), lambda b, i: (b // rep, 0, 0)),
+            pl.BlockSpec((n_codes * n_codes,), lambda b, i: (0,)),
+            pl.BlockSpec((1, 3), lambda b, i: (b, 0)),
+            scale_spec, scale_spec, scale_spec, scale_spec, scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, bq, dp), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_p, dp), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(q, k, v, lut_flat, rowinfo, sqs, sks, svs, score_scale, pv_scale)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def prepare_approx_attention(q, k, v, lut, offset, q_scale, k_scale, v_scale,
+                             *, bits: int, rowinfo, bq: int, bk: int):
+    """Shared padding/geometry/scale resolution for the kernel wrapper AND
+    the jnp oracle — both must see byte-identical padded operands and
+    statics for the bitwise contract to be meaningful.
+
+    Returns ``(operands, statics)``: operands is the tuple the kernel takes
+    positionally; statics is a dict of the static keyword arguments.
+    """
+    n_codes = int(round(lut.size ** 0.5)) if lut.ndim == 1 else lut.shape[0]
+    lut_flat = jnp.asarray(lut).reshape(-1).astype(jnp.int32)
+    bh, sq, d = q.shape
+    bh_kv, sk, _ = k.shape
+    rep = bh // bh_kv
+    assert bh == bh_kv * rep, (bh, bh_kv)
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    # q tiles align to 8 sublanes, kv blocks to the 128-lane tile; small
+    # sequences shrink the block instead of padding to the full default
+    bq = min(bq, _round_up(sq, 8))
+    bk = min(bk, _round_up(sk, 128))
+    dp = _round_up(d, 16)
+    inner_d = 16
+    inner_k = next(x for x in (32, 16, 8, 4, 2, 1) if bk % x == 0)
+    sq_p = _round_up(sq, bq)
+    sk_p = _round_up(sk, bk)
+    qf = jnp.asarray(q, jnp.float32)
+    kf = jnp.asarray(k, jnp.float32)
+    vf = jnp.asarray(v, jnp.float32)
+    if sq_p != sq or dp != d:
+        qf = jnp.pad(qf, ((0, 0), (0, sq_p - sq), (0, dp - d)))
+    if sk_p != sk or dp != d:
+        kf = jnp.pad(kf, ((0, 0), (0, sk_p - sk), (0, dp - d)))
+        vf = jnp.pad(vf, ((0, 0), (0, sk_p - sk), (0, dp - d)))
+    if rowinfo is None:
+        # decode convention: queries end-aligned to the key sequence
+        row = jnp.array([sk - sq, 0, sk], jnp.int32)
+        rowinfo = jnp.broadcast_to(row, (bh, 3))
+    rowinfo = jnp.asarray(rowinfo, jnp.int32)
+    assert rowinfo.shape == (bh, 3), rowinfo.shape
+    sqs = jnp.asarray(q_scale, jnp.float32).reshape(1)
+    sks = jnp.asarray(k_scale, jnp.float32).reshape(1)
+    svs = jnp.asarray(v_scale, jnp.float32).reshape(1)
+    score_scale, pv_scale = attn_scales(sqs, sks, svs, d, hi)
+    operands = (qf, kf, vf, lut_flat, rowinfo, sqs, sks, svs, score_scale,
+                pv_scale)
+    statics = dict(seq_k_real=sk, d_real=d, n_codes=n_codes, offset=offset,
+                   lo=lo, hi=hi, bq=bq, bk=bk, rep=rep, inner_d=inner_d,
+                   inner_k=inner_k)
+    return operands, statics
+
+
+def approx_flash_attention(q, k, v, lut, offset, q_scale, k_scale, v_scale, *,
+                           bits: int = 8, causal: bool = True,
+                           window: int | None = None,
+                           softcap: float | None = None, rowinfo=None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool | None = None):
+    """Approximate GQA flash attention on the ACU.
+
+    ``q``: (B*Hq, Sq, D) float; ``k``/``v``: (B*Hkv, Sk, D) float with
+    ``Hq % Hkv == 0`` folded into the leading dim; ``lut`` the ACU product
+    table ((n, n) or flattened) with shifted-code ``offset``;
+    ``q_scale``/``k_scale``/``v_scale`` per-tensor symmetric scales (compute
+    with ``inline_symmetric_scale`` so they are pinned and context-safe).
+    ``rowinfo``: optional (B*Hq, 3) int32 ``[q_base, kv_start, kv_len]`` —
+    the absolute cache position of query row 0, and the half-open valid key
+    range (serving: left-pad offset and written-cache length). Defaults to
+    the end-aligned decode convention over the full key sequence.
+    Returns (B*Hq, Sq, D) float32, bitwise-identical to
+    ``approx_attention_ref``.
+    """
+    sq, d = q.shape[1], q.shape[2]
+    operands, statics = prepare_approx_attention(
+        q, k, v, lut, offset, q_scale, k_scale, v_scale, bits=bits,
+        rowinfo=rowinfo, bq=bq, bk=bk)
+    out = approx_flash_attention_kernel(
+        *operands, causal=causal, window=window, softcap=softcap,
+        interpret=interpret, **statics)
+    return out[:, :sq, :d]

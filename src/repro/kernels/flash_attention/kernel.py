@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -70,17 +72,21 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, seq_k: int,
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
-                                             "bq", "bk", "interpret"))
+                                             "bq", "bk", "rep", "interpret"))
 def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                            causal: bool = True, window: int | None = None,
                            softcap: float | None = None, bq: int = 256,
-                           bk: int = 256, interpret: bool = True) -> jnp.ndarray:
-    """q: (BH, Sq, D), k/v: (BH, Sk, D) — heads pre-folded into batch.
+                           bk: int = 256, rep: int = 1,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """q: (B*Hq, Sq, D), k/v: (B*Hkv, Sk, D) — heads pre-folded into batch.
 
-    GQA is handled by the caller (repeat/flatten of kv heads).
+    GQA never materializes repeated KV: ``rep = Hq // Hkv`` query-head rows
+    share one KV row through the BlockSpec index map (``b // rep``), so K/V
+    stay at their (B*Hkv, Sk, D) HBM footprint.
     """
     bh, sq, d = q.shape
-    _, sk, _ = k.shape
+    bh_kv, sk, _ = k.shape
+    assert bh == bh_kv * rep, (bh, bh_kv, rep)
     bq = min(bq, sq)
     bk = min(bk, sk)
     assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
@@ -92,10 +98,10 @@ def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, sk, d), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, sk, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda b, i: (b // rep, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda b, i: (b // rep, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

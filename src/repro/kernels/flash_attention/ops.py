@@ -1,24 +1,29 @@
-"""Public wrapper: (B, H, S, D) GQA attention via the flash kernel."""
+"""Public wrappers: (B, H, S, D) GQA attention via the flash kernels.
+
+GQA no longer materializes ``jnp.repeat(k, rep, axis=1)`` (which copied K/V
+``rep×`` in HBM before the kernel ever ran) — the kernels map query-head
+blocks onto their shared KV head through the BlockSpec index map.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .approx import approx_flash_attention  # noqa: F401  (re-export)
 from .kernel import flash_attention_kernel
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: int | None = None,
                     softcap: float | None = None, bq: int = 256,
-                    bk: int = 256, interpret: bool = True) -> jnp.ndarray:
+                    bk: int = 256, interpret: bool | None = None
+                    ) -> jnp.ndarray:
     """q: (B, Hq, S, D); k/v: (B, Hkv, S, D) with Hq % Hkv == 0 (GQA)."""
     b, hq, s, d = q.shape
     hkv = k.shape[1]
     rep = hq // hkv
-    if rep > 1:
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
+    assert hq == hkv * rep, (hq, hkv)
     out = flash_attention_kernel(
-        q.reshape(b * hq, s, d), k.reshape(b * hq, s, d),
-        v.reshape(b * hq, s, d), causal=causal, window=window,
-        softcap=softcap, bq=bq, bk=bk, interpret=interpret)
+        q.reshape(b * hq, s, d), k.reshape(b * hkv, s, d),
+        v.reshape(b * hkv, s, d), causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, rep=rep, interpret=interpret)
     return out.reshape(b, hq, s, d)

@@ -1,5 +1,20 @@
-"""Pure-jnp oracle: naive attention with causal/window/softcap masking."""
+"""Pure-jnp oracles: naive exact attention, and the unfused approximate
+composition the approx kernel must match bitwise.
+
+The approximate oracle is deliberately NOT an independent re-derivation of
+the float arithmetic: XLA CPU contracts ``a*b + c`` into an FMA under jit,
+straight through ``optimization_barrier`` (see the approx module docstring),
+so two independently-written online-softmax loops land 1 ulp apart. Instead
+the oracle drives the same :func:`~.approx._online_block` the kernel runs,
+inside the same ``fori_loop`` shape, under jit — identical loop-body jaxprs
+compile to identical machine code, which is the bitwise contract. What the
+oracle independently exercises is the *orchestration*: python loops over
+(row, q-block) instead of a Pallas grid, whole-array indexing instead of
+BlockSpec pipelines, and the GQA ``b // rep`` mapping as plain indexing.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -26,3 +41,71 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     s = jnp.where(mask[None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "seq_k_real", "d_real", "n_codes",
+    "offset", "lo", "hi", "bq", "bk", "rep", "inner_d", "inner_k"))
+def _approx_ref_core(qp, kp, vp, lut_flat, info, sqs, sks, svs, score_scale,
+                     pv_scale, *, causal: bool, window: int | None,
+                     softcap: float | None, seq_k_real: int, d_real: int,
+                     n_codes: int, offset: int, lo: int, hi: int, bq: int,
+                     bk: int, rep: int, inner_d: int, inner_k: int):
+    from .approx import NEG_INF, _online_block, _quantize_sym, \
+        causal_block_bound
+
+    bh, sq_p, dp = qp.shape
+    sk_p = kp.shape[1]
+    n_kv = sk_p // bk
+    m00 = lut_flat[offset * n_codes + offset]
+    out_rows = []
+    for b in range(bh):
+        q_base, kv_start, kv_len = info[b, 0], info[b, 1], info[b, 2]
+        k_all = kp[b // rep]
+        v_all = vp[b // rep]
+        q_blocks = []
+        for qi in range(sq_p // bq):
+            qf = qp[b, qi * bq:(qi + 1) * bq].astype(jnp.float32)
+            qq = _quantize_sym(qf, sqs[0], lo, hi, offset)
+            q_pos = (q_base + qi * bq
+                     + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+            if causal:
+                n_kv_eff = causal_block_bound(q_base, qi, bq, bk, n_kv)
+            else:
+                n_kv_eff = n_kv
+            body = functools.partial(
+                _online_block, qq=qq, q_pos=q_pos, k_all=k_all, v_all=v_all,
+                lut=lut_flat, m00=m00, sks=sks[0], svs=svs[0],
+                score_scale=score_scale[0], pv_scale=pv_scale[0],
+                kv_start=kv_start, kv_len=kv_len, bq=bq, bk=bk,
+                seq_k_real=seq_k_real, d_real=d_real, n_codes=n_codes,
+                offset=offset, lo=lo, hi=hi, causal=causal, window=window,
+                softcap=softcap, inner_d=inner_d, inner_k=inner_k)
+            m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((bq,), jnp.float32)
+            acc0 = jnp.zeros((bq, dp), jnp.float32)
+            m, l, acc = jax.lax.fori_loop(0, n_kv_eff, body, (m0, l0, acc0))
+            q_blocks.append(acc / jnp.maximum(l, 1e-30)[:, None])
+        out_rows.append(jnp.concatenate(q_blocks, axis=0))
+    return jnp.stack(out_rows)
+
+
+def approx_attention_ref(q, k, v, lut, offset, q_scale, k_scale, v_scale, *,
+                         bits: int = 8, causal: bool = True,
+                         window: int | None = None,
+                         softcap: float | None = None, rowinfo=None,
+                         bq: int = 128, bk: int = 128):
+    """Unfused oracle for ``approx_flash_attention`` — same operand
+    preparation (``prepare_approx_attention``), same per-KV-block update
+    (``_online_block``), different orchestration. Bitwise-identical output
+    by construction; see the module docstring for why sharing the block
+    update is load-bearing."""
+    from .approx import prepare_approx_attention
+
+    sq, d = q.shape[1], q.shape[2]
+    operands, statics = prepare_approx_attention(
+        q, k, v, lut, offset, q_scale, k_scale, v_scale, bits=bits,
+        rowinfo=rowinfo, bq=bq, bk=bk)
+    out = _approx_ref_core(*operands, causal=causal, window=window,
+                           softcap=softcap, **statics)
+    return out[:, :sq, :d]

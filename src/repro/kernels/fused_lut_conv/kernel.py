@@ -63,6 +63,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 
@@ -155,7 +157,7 @@ def fused_lut_conv_kernel(xp: jnp.ndarray, wq: jnp.ndarray,
                           inner: int, kh: int, kw: int, sh: int, sw: int,
                           dh: int, dw: int, bh: int, bn: int, wo: int,
                           ho_pad: int, c_pad_corr: int = 0,
-                          interpret: bool = True,
+                          interpret: bool | None = None,
                           emit_acc: bool = False) -> jnp.ndarray:
     """Whole-image variant. xp: (N, C, Hp, Wp) float, spatially pre-padded,
     C a multiple of ``inner``; wq: (kh*kw, C, Cout) shifted int weight codes,
@@ -189,7 +191,7 @@ def fused_lut_conv_kernel(xp: jnp.ndarray, wq: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct(
             (n, ho_pad, wo, cout), jnp.int32 if emit_acc else jnp.float32),
         scratch_shapes=[pltpu.VMEM((c, hp, wp), jnp.int32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xp, wq, lut_flat, x_scale, x_zp, w_scale_row)
 
 
@@ -291,7 +293,7 @@ def fused_lut_conv_bwd_w_kernel(xp: jnp.ndarray, g: jnp.ndarray,
                                 mc: int, kh: int, kw: int, sh: int, sw: int,
                                 dh: int, dw: int, bh: int, bn: int, wo: int,
                                 ho_pad: int, n_copies: int,
-                                interpret: bool = True) -> jnp.ndarray:
+                                interpret: bool | None = None) -> jnp.ndarray:
     """Banded approximate conv weight-grad. ``xp``: (N, C, Hp, Wp) float
     residuals, spatially pre-padded like the tiled forward (rows to
     ``(n_bands + n_copies - 1) * bh * sh``); ``g``: (N, ho_pad, Wo, Cout)
@@ -332,7 +334,7 @@ def fused_lut_conv_bwd_w_kernel(xp: jnp.ndarray, g: jnp.ndarray,
         out_specs=pl.BlockSpec((kh * kw * c, bn), lambda j, n, i: (0, j)),
         out_shape=jax.ShapeDtypeStruct((kh * kw * c, cout), jnp.int32),
         scratch_shapes=[pltpu.VMEM((kh * kw * c, bn), jnp.int32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(*([xp] * n_copies), g, rmask, lut_flat, x_scale, g_scale)
 
 
@@ -389,7 +391,7 @@ def fused_lut_conv_tiled_kernel(xp: jnp.ndarray, wq: jnp.ndarray,
                                 hi: int, inner: int, kh: int, kw: int,
                                 sh: int, sw: int, dh: int, dw: int, bh: int,
                                 bn: int, wo: int, ho_pad: int, n_copies: int,
-                                c_pad_corr: int = 0, interpret: bool = True,
+                                c_pad_corr: int = 0, interpret: bool | None = None,
                                 emit_acc: bool = False) -> jnp.ndarray:
     """Spatially-tiled variant. Same operand layout as
     :func:`fused_lut_conv_kernel`, but ``xp`` rows must be padded to
@@ -431,5 +433,5 @@ def fused_lut_conv_tiled_kernel(xp: jnp.ndarray, wq: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct(
             (n, ho_pad, wo, cout), jnp.int32 if emit_acc else jnp.float32),
         scratch_shapes=[pltpu.VMEM((c, n_copies * s_rows, wp), jnp.int32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(*([xp] * n_copies), wq, lut_flat, x_scale, x_zp, w_scale_row)

@@ -271,7 +271,7 @@ def fused_lut_conv(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
                    offset: int, x_scale, x_zp, w_scale, *,
                    stride=(1, 1), padding=((0, 0), (0, 0)), dilation=(1, 1),
                    bits: int = 8, inner: int = 32, bh: int = 0, bn: int = 128,
-                   interpret: bool = True, emit_acc: bool = False
+                   interpret: bool | None = None, emit_acc: bool = False
                    ) -> jnp.ndarray:
     """Fused approximate conv2d forward (whole-image kernel).
 
@@ -319,7 +319,7 @@ def fused_lut_conv_tiled(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
                          dilation=(1, 1), bits: int = 8, inner: int = 0,
                          bh: int = 0, bn: int = 0,
                          budget: int = CONV_VMEM_BUDGET,
-                         interpret: bool = True, emit_acc: bool = False
+                         interpret: bool | None = None, emit_acc: bool = False
                          ) -> jnp.ndarray:
     """Fused approximate conv2d forward, spatially tiled over output-row
     bands — same contract and operand layout as :func:`fused_lut_conv`, but
@@ -381,7 +381,7 @@ def fused_lut_conv_bwd_w(x: jnp.ndarray, g: jnp.ndarray, lut: jnp.ndarray,
                          padding=((0, 0), (0, 0)), dilation=(1, 1),
                          bits: int = 8, bh: int = 0, bn: int = 0, mc: int = 8,
                          budget: int = CONV_VMEM_BUDGET,
-                         interpret: bool = True,
+                         interpret: bool | None = None,
                          rmask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Banded approximate conv weight-grad (ApproxTrain regime).
 

@@ -35,6 +35,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 
@@ -138,7 +140,7 @@ def fused_lut_bwd_kernel(a: jnp.ndarray, b: jnp.ndarray,
                          b_scale: jnp.ndarray, *, offset: int, n_codes: int,
                          lo: int, hi: int, k_pad: int = 0, bm: int = 128,
                          bk: int = 128, bn: int = 128, inner: int = 32,
-                         interpret: bool = True,
+                         interpret: bool | None = None,
                          emit_acc: bool = False) -> jnp.ndarray:
     """a: (M, K) float; b: (K, N) float; both quantized in-kernel with the
     per-tensor symmetric scales ``a_scale``/``b_scale`` (shape-(1,) f32).
@@ -167,7 +169,7 @@ def fused_lut_bwd_kernel(a: jnp.ndarray, b: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((M, N),
                                        jnp.int32 if emit_acc else jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, b, lut_flat, a_scale, b_scale)
 
 
@@ -180,7 +182,7 @@ def fused_lut_dense_kernel(x: jnp.ndarray, wq: jnp.ndarray,
                            offset: int, n_codes: int, lo: int, hi: int,
                            k_pad: int = 0, bm: int = 128, bk: int = 128,
                            bn: int = 128, inner: int = 32,
-                           interpret: bool = True,
+                           interpret: bool | None = None,
                            emit_acc: bool = False) -> jnp.ndarray:
     """x: (M, K) float; wq: (K, N) shifted int weight codes;
     lut_flat: (n_codes**2,) int32; x_scale/x_zp: shape-(1,) f32;
@@ -210,5 +212,5 @@ def fused_lut_dense_kernel(x: jnp.ndarray, wq: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((M, N),
                                        jnp.int32 if emit_acc else jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, wq, lut_flat, x_scale, x_zp, w_scale_row)

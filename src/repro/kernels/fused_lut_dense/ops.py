@@ -20,7 +20,7 @@ from .kernel import fused_lut_bwd_kernel, fused_lut_dense_kernel
 def fused_lut_dense(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
                     offset: int, x_scale, x_zp, w_scale, *, bits: int = 8,
                     bm: int = 128, bk: int = 256, bn: int = 128,
-                    inner: int = 32, interpret: bool = True,
+                    inner: int = 32, interpret: bool | None = None,
                     emit_acc: bool = False) -> jnp.ndarray:
     """Fused approximate dense forward.
 
@@ -70,7 +70,7 @@ def fused_lut_dense(x: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray,
 def fused_lut_bwd(a: jnp.ndarray, b: jnp.ndarray, lut: jnp.ndarray,
                   offset: int, a_scale, b_scale, *, bits: int = 8,
                   bm: int = 128, bk: int = 256, bn: int = 128,
-                  inner: int = 32, interpret: bool = True,
+                  inner: int = 32, interpret: bool | None = None,
                   emit_acc: bool = False) -> jnp.ndarray:
     """Fused approximate backward GEMM: quantize BOTH float operands
     in-kernel (per-tensor symmetric, zero-point 0), LUT-gather GEMM, int32

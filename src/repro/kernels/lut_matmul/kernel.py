@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _kernel(a_ref, w_ref, lut_ref, o_ref, *, offset: int, n_codes: int,
             inner: int):
@@ -54,7 +56,7 @@ def _kernel(a_ref, w_ref, lut_ref, o_ref, *, offset: int, n_codes: int,
 def lut_matmul_kernel(a: jnp.ndarray, w: jnp.ndarray, lut_flat: jnp.ndarray,
                       *, offset: int, n_codes: int, bm: int = 128,
                       bk: int = 128, bn: int = 128, inner: int = 8,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: bool | None = None) -> jnp.ndarray:
     """a: (M, K) int, w: (K, N) int (signed codes); lut_flat: (n_codes**2,)."""
     M, K = a.shape
     _, N = w.shape
@@ -73,5 +75,5 @@ def lut_matmul_kernel(a: jnp.ndarray, w: jnp.ndarray, lut_flat: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, w, lut_flat)

@@ -15,7 +15,7 @@ def _pick_tile(dim: int, pref: int) -> int:
 
 def lut_matmul(a: jnp.ndarray, w: jnp.ndarray, lut: jnp.ndarray, offset: int,
                *, bm: int = 128, bk: int = 128, bn: int = 128,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool | None = None) -> jnp.ndarray:
     """LUT-gather GEMM with automatic tile selection / zero-padding.
 
     ``lut`` may be (n_codes, n_codes) or flattened. Padding uses code 0, whose

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _kernel(x_ref, s_ref, z_ref, o_ref, *, lo: int, hi: int):
     x = x_ref[...].astype(jnp.float32)
@@ -24,7 +26,7 @@ def _kernel(x_ref, s_ref, z_ref, o_ref, *, lo: int, hi: int):
 @functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
 def quantize_kernel(x: jnp.ndarray, scale: jnp.ndarray, zero_point: jnp.ndarray,
                     *, bits: int = 8, block: int = 1024,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool | None = None) -> jnp.ndarray:
     """Per-tensor affine quantization of a flattened tensor.
 
     x: (N,) float; scale/zero_point: scalars as shape-(1,) arrays.
@@ -44,5 +46,5 @@ def quantize_kernel(x: jnp.ndarray, scale: jnp.ndarray, zero_point: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, scale, zero_point)

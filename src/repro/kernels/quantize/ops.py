@@ -7,7 +7,7 @@ from .kernel import quantize_kernel
 
 
 def quantize_op(x: jnp.ndarray, scale, zero_point, *, bits: int = 8,
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: bool | None = None) -> jnp.ndarray:
     shape = x.shape
     flat = x.reshape(-1)
     n = flat.shape[0]

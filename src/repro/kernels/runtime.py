@@ -1,0 +1,46 @@
+"""Process-wide execution-mode knob for every Pallas kernel wrapper.
+
+Every kernel in this package historically hardcoded ``interpret=True`` in its
+own signature (the dev container has no TPU, so kernels run under the Pallas
+interpreter on CPU). That scattered default made the ROADMAP real-hardware
+item an N-file sweep. It now lives here, once:
+
+* wrappers declare ``interpret: bool | None = None`` and resolve the actual
+  value with :func:`resolve_interpret` right before ``pallas_call``;
+* the default is env-overridable — ``REPRO_INTERPRET=0`` flips the whole
+  package to compiled Mosaic kernels without touching a call site.
+
+Explicitly passing ``interpret=True/False`` at a call site still wins (tests
+pin interpret mode that way); only the *default* is centralized. The env var
+is read when a kernel is traced, so it is a process-level switch, not a
+per-call one. ``tests/test_runtime.py`` asserts no kernel wrapper regresses
+to a hardcoded default.
+"""
+from __future__ import annotations
+
+import os
+
+_ENV = "REPRO_INTERPRET"
+_FALSY = {"0", "false", "no", "off", ""}
+
+
+def interpret_default() -> bool:
+    """The package-wide default for ``pallas_call(interpret=...)``.
+
+    ``True`` unless ``REPRO_INTERPRET`` is set to a falsy value (``0``,
+    ``false``, ``no``, ``off``) — the one-switch flip for running on real
+    TPU hardware.
+    """
+    v = os.environ.get(_ENV)
+    if v is None:
+        return True
+    return v.strip().lower() not in _FALSY
+
+
+def resolve_interpret(value: bool | None) -> bool:
+    """Resolve a wrapper's ``interpret`` argument: an explicit ``True`` /
+    ``False`` wins; ``None`` (the signature default everywhere) defers to
+    :func:`interpret_default`."""
+    if value is None:
+        return interpret_default()
+    return bool(value)

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref, *,
             seq: int):
@@ -50,7 +52,7 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref, *,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def wkv_kernel(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
                u: jnp.ndarray, s0: jnp.ndarray, *,
-               interpret: bool = True):
+               interpret: bool | None = None):
     """r/k/v/w: (BH, T, hd) f32 with heads folded h-major (BH = B*H, row
     b*H + h); u: (H, hd) per-head bonus; s0: (BH, hd, hd).
 
@@ -69,5 +71,5 @@ def wkv_kernel(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
         out_specs=[io_spec, st_spec],
         out_shape=[jax.ShapeDtypeStruct((bh, t, hd), jnp.float32),
                    jax.ShapeDtypeStruct((bh, hd, hd), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(r, k, v, w, u, s0)

@@ -7,7 +7,7 @@ from .kernel import wkv_kernel
 
 
 def wkv(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
-        u: jnp.ndarray, s0: jnp.ndarray, *, interpret: bool = True):
+        u: jnp.ndarray, s0: jnp.ndarray, *, interpret: bool | None = None):
     """r/k/v/w: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd).
 
     Returns (out (B, T, H, hd), sT (B, H, hd, hd)). Heads fold into the grid

@@ -1,7 +1,12 @@
-"""Serving launcher: batched greedy decoding through the ServeEngine.
+"""Serving launcher: batched greedy decoding through the serving engines.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
-        [--approx mul8s_1L2H:lut] [--requests 8] [--new-tokens 16]
+        [--approx mul8s_1L2H:lut] [--requests 8] [--new-tokens 16] \
+        [--continuous] [--arrival-rate 0.5]
+
+``--continuous`` swaps the wave engine for slot-level continuous batching;
+``--arrival-rate`` (arrivals per decode step) replays a Poisson trace
+through it instead of firing every request at t=0.
 """
 from __future__ import annotations
 
@@ -19,29 +24,41 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--continuous", action="store_true")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="Poisson arrivals per decode step (continuous only)")
     args = ap.parse_args()
 
     from repro.configs import get_config, reduced_config
     from repro.launch.specs import make_acfg
     from repro.models.transformer import init_params
-    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.engine import (ContinuousServeEngine, Request,
+                                    ServeEngine, poisson_arrivals)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(params, cfg, slots=args.slots, max_seq=256,
-                      acfg=make_acfg(args.approx))
+    cls = ContinuousServeEngine if args.continuous else ServeEngine
+    eng = cls(params, cfg, slots=args.slots, max_seq=256,
+              acfg=make_acfg(args.approx))
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(1, cfg.vocab_size,
                                         rng.integers(4, 12)).astype(np.int32),
                     max_new_tokens=args.new_tokens)
             for _ in range(args.requests)]
+    arrivals = None
+    if args.arrival_rate is not None:
+        if not args.continuous:
+            ap.error("--arrival-rate needs --continuous")
+        arrivals = poisson_arrivals(len(reqs), args.arrival_rate, seed=0)
     import time
     t0 = time.monotonic()
-    done = eng.run(reqs)
+    done = eng.run(reqs, arrivals) if args.continuous else eng.run(reqs)
     dt = time.monotonic() - t0
     n_tok = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s)")
+    if args.continuous:
+        print(f"stats: {eng.stats}")
     for i, r in enumerate(done[:4]):
         print(f"req{i}: {list(r.prompt)[:6]}... -> {list(r.out)[:8]}...")
 

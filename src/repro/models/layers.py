@@ -11,7 +11,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.approx_ops import ApproxConfig, approx_dense, conv2d
+from repro.core.approx_ops import (ApproxConfig, approx_attention,
+                                   approx_dense, conv2d)
 from repro.parallel.sharding import shard
 
 Array = jnp.ndarray
@@ -117,6 +118,17 @@ def apply_mrope(x: Array, positions: Array, sections=(16, 24, 24),
 def _mask_scores(s: Array, q_pos: Array, k_pos: Array, causal: bool,
                  window: Optional[int],
                  pad_mask: Optional[Array] = None) -> Array:
+    if q_pos.ndim == 2:
+        # per-row query positions (continuous batching: every slot decodes
+        # at its own cache offset) — the structural mask gains a batch dim
+        mask = jnp.ones((q_pos.shape[0], *s.shape[-2:]), bool)
+        if causal:
+            mask &= k_pos[None, None, :] <= q_pos[:, :, None]
+        if window is not None:
+            mask &= k_pos[None, None, :] > q_pos[:, :, None] - window
+        if pad_mask is not None:
+            mask &= pad_mask[:, None, :]
+        return jnp.where(mask[:, None, None], s, -1e30)
     mask = jnp.ones(s.shape[-2:], bool)
     if causal:
         mask &= k_pos[None, :] <= q_pos[:, None]
@@ -138,7 +150,9 @@ def gqa_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     """Grouped-query attention.
 
     q: (B, S, Hq, D); k/v: (B, T, Hkv, D); returns (B, S, Hq, D).
-    ``q_offset``: absolute position of q[0] within the key sequence (decode).
+    ``q_offset``: absolute position of q[0] within the key sequence (decode) —
+    an int/scalar, or a (B,) int vector when every batch row sits at its own
+    cache position (continuous batching).
     ``chunked`` processes q in blocks of ``chunk`` for O(S·chunk) score memory.
     ``pad_mask``: optional (B, T) bool, False keys are never attended (batched
     serving masks left-pad slots out of every query row).
@@ -149,6 +163,13 @@ def gqa_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     rep = hq // hkv
     scale = 1.0 / (d ** 0.5)
     qg = q.reshape(b, s_len, hkv, rep, d)
+    per_row = jnp.ndim(q_offset) == 1
+
+    def q_positions(start: int, length: int) -> Array:
+        pos = jnp.arange(length) + start
+        if per_row:
+            return pos[None, :] + jnp.asarray(q_offset, jnp.int32)[:, None]
+        return pos + q_offset
 
     def block(q_blk: Array, q_pos: Array, k_blk: Array, v_blk: Array,
               k_pos: Array, pm: Optional[Array]) -> Array:
@@ -163,7 +184,7 @@ def gqa_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
         return o
 
     if impl == "naive" or s_len <= chunk or s_len % chunk != 0:
-        out = block(qg, jnp.arange(s_len) + q_offset, k, v,
+        out = block(qg, q_positions(0, s_len), k, v,
                     jnp.arange(t_len), pad_mask)
     else:
         # statically unrolled q-block loop (NOT lax.map): keeps score memory at
@@ -174,8 +195,9 @@ def gqa_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
         outs = []
         for i in range(n_blk):
             q_blk = jax.lax.dynamic_slice_in_dim(qg, i * chunk, chunk, axis=1)
-            pos = jnp.arange(chunk) + i * chunk + q_offset
-            if causal_blocking and causal and q_offset == 0 and s_len == t_len:
+            pos = q_positions(i * chunk, chunk)
+            if causal_blocking and causal and isinstance(q_offset, int) \
+                    and q_offset == 0 and s_len == t_len:
                 # §Perf hillclimb: a causal q-block only sees keys < its end;
                 # slicing K/V per block drops ~half the attention FLOPs.
                 hi = (i + 1) * chunk
@@ -235,12 +257,42 @@ def attention_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig],
     if cache is not None:
         kc, vc = cache
         if kv is None:  # self-attention: append to cache
-            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), cache_pos, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), cache_pos, axis=1)
+            if jnp.ndim(cache_pos) == 1:
+                # continuous batching: every slot writes at its own offset
+                upd = jax.vmap(lambda c, new, p0: jax.lax.
+                               dynamic_update_slice_in_dim(c, new, p0, axis=0))
+                kc = upd(kc, k.astype(kc.dtype), cache_pos)
+                vc = upd(vc, v.astype(vc.dtype), cache_pos)
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), cache_pos, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), cache_pos, axis=1)
             k, v = kc, vc
             cache = (kc, vc)
         q_offset = cache_pos
         # mask out not-yet-written cache slots via causal masking at q_offset
+
+    if acfg is not None and not acfg.fake_quant_only and kv is None \
+            and cache is not None:
+        # ACU route: fused quantize->LUT-gather QK^T / PV inside the
+        # streaming-softmax kernel (core/acu.attn_plan). Falls through to the
+        # exact-substrate gqa_attention when the plan audits to "dense".
+        b_rows = jnp.broadcast_to(
+            jnp.asarray(cache_pos, jnp.int32).reshape(-1), (b,))
+        if pad_mask is not None:
+            # serving pad is left-contiguous: first True marks the kv start
+            kv_start = jnp.argmax(pad_mask, axis=1).astype(jnp.int32)
+        else:
+            kv_start = jnp.zeros((b,), jnp.int32)
+        rowinfo = jnp.stack([b_rows, kv_start, b_rows + s_len], axis=1)
+        fused = approx_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), acfg, causal=causal, window=window,
+            softcap=cfg.softcap_attn, rowinfo=rowinfo)
+        if fused is not None:
+            out = fused.transpose(0, 2, 1, 3).astype(q.dtype)
+            out = out.reshape(b, s_len, h * hd)
+            out = approx_dense(out, p["wo"], p.get("bo"), acfg)
+            return out, cache
 
     out = gqa_attention(q, k, v, causal=causal and kv is None, window=window,
                         softcap=cfg.softcap_attn, q_offset=q_offset,

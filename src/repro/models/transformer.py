@@ -258,7 +258,10 @@ def apply_model(params: dict, tokens: Array, cfg: ModelConfig, *,
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     x = shard(x, "batch", None, None)
-    positions = jnp.arange(s)[None, :] + cache_pos
+    cp = jnp.asarray(cache_pos)
+    # cache_pos may be a (B,) vector — continuous batching, every slot decodes
+    # at its own cache offset — or the usual scalar (wave serving / training)
+    positions = jnp.arange(s)[None, :] + (cp[:, None] if cp.ndim == 1 else cp)
     if pos_offset is not None:
         positions = jnp.maximum(positions - pos_offset[:, None], 0)
     positions = jnp.broadcast_to(positions, (b, s))

@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from .planner import GemmPartition, acu_conv_partition, acu_gemm_partition
+from .planner import (GemmPartition, acu_attn_partition, acu_conv_partition,
+                      acu_gemm_partition)
 from .sharding import MeshContext
 
 Array = jnp.ndarray
@@ -52,8 +53,75 @@ def resolve_conv_partition(ctx: MeshContext, *, float_accum: bool = False
     return part if part.total > 1 else None
 
 
+def resolve_attn_partition(ctx: MeshContext, *, hq: int, hkv: int
+                           ) -> Optional[GemmPartition]:
+    """The ``acu_attn`` partition for the active mesh (rows = batch, cols =
+    KV heads with whole GQA groups per shard), or None when every axis is
+    trivial."""
+    part, _ = acu_attn_partition(ctx, hq=hq, hkv=hkv)
+    return part if part.total > 1 else None
+
+
 def _pad2(x: Array, pr: int, pc: int) -> Array:
     return jnp.pad(x, ((0, pr), (0, pc))) if (pr or pc) else x
+
+
+def wrap_attn(attn_call: Callable[..., Array], ctx: MeshContext,
+              part: GemmPartition, *, hq: int, hkv: int
+              ) -> Callable[..., Array]:
+    """Shard an approximate attention plan
+    ``fn(q, k, v, qs, ks, vs, rowinfo) -> (B, Hq, Sq, D) f32``.
+
+    ``q``: (B, Hq, Sq, D) float; ``k``/``v``: (B, Hkv, Sk, D);
+    ``rowinfo``: (B, 3) int32 ``[q_base, kv_start, kv_len]`` rows (one per
+    batch row — heads of a sequence share its cache geometry). Batch rows
+    shard over ``part.rows``, KV heads over ``part.cols`` — each shard gets
+    whole GQA groups (``rep`` query heads per KV head), runs the full fused
+    kernel on its (B_loc * Hq_loc) fold, and there are no collectives: the
+    kernel grid is embarrassingly parallel over (batch*head, q_block), so
+    the wrap is bit-exact by construction. Scales are computed by the
+    caller on the FULL tensors and replicated — every shard sees identical
+    quantization. Padded batch rows carry rowinfo ``[0, 0, 0]``: every key
+    masked, finite garbage output, sliced off here.
+    """
+    mesh = ctx.mesh
+    assert hq % hkv == 0 and hkv % part.n_cols == 0, (hq, hkv, part.n_cols)
+
+    def fn(q: Array, k: Array, v: Array, qs, ks, vs, rowinfo: Array) -> Array:
+        b, _, sq, d = q.shape
+        pb = (-b) % part.n_rows
+        if pb:
+            q = jnp.pad(q, ((0, pb), (0, 0), (0, 0), (0, 0)))
+            k = jnp.pad(k, ((0, pb), (0, 0), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, pb), (0, 0), (0, 0), (0, 0)))
+            rowinfo = jnp.pad(rowinfo, ((0, pb), (0, 0)))
+        qs_a = jnp.asarray(qs, jnp.float32).reshape(1)
+        ks_a = jnp.asarray(ks, jnp.float32).reshape(1)
+        vs_a = jnp.asarray(vs, jnp.float32).reshape(1)
+
+        rows = part._dim(part.rows)
+        cols = part._dim(part.cols)
+
+        def local(q_blk, k_blk, v_blk, qs_b, ks_b, vs_b, info_blk):
+            bl, hql = q_blk.shape[0], q_blk.shape[1]
+            info = jnp.repeat(info_blk, hql, axis=0)     # (bl*hql, 3)
+            out = attn_call(
+                q_blk.reshape(bl * hql, *q_blk.shape[2:]),
+                k_blk.reshape(bl * k_blk.shape[1], *k_blk.shape[2:]),
+                v_blk.reshape(bl * v_blk.shape[1], *v_blk.shape[2:]),
+                qs_b, ks_b, vs_b, info)
+            return out.reshape(bl, hql, *out.shape[1:])
+
+        out = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(rows, cols, None, None), P(rows, cols, None, None),
+                      P(rows, cols, None, None), P(None), P(None), P(None),
+                      P(rows, None)),
+            out_specs=P(rows, cols, None, None), check_rep=False,
+        )(q, k, v, qs_a, ks_a, vs_a, rowinfo)
+        return out[:b]
+
+    return fn
 
 
 def wrap_unfused(base_fn: Callable[[Array, Array], Array], ctx: MeshContext,

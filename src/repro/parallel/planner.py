@@ -366,6 +366,37 @@ def acu_conv_partition(ctx, *, float_accum: bool = False
     return part, report
 
 
+def acu_attn_partition(ctx, *, hq: int, hkv: int
+                       ) -> tuple[GemmPartition, list[str]]:
+    """Resolve the ``acu_attn_rows`` / ``acu_attn_heads`` logical rules for
+    one approximate attention site: ``rows`` shards the batch dim (serving
+    slots), ``cols`` the **KV** heads — each shard owns whole GQA groups
+    (its ``rep = hq // hkv`` query heads per KV head ride along), so the
+    kernel's ``b // rep`` index map stays local and there are no
+    collectives. ``k`` is always empty: the online softmax is sequential
+    over KV blocks and the float (m, l, acc) rescale cannot psum
+    bit-exactly. Same audited-fallback discipline as the GEMM/conv
+    partitions: head axes that do not divide ``hkv`` are dropped (reported)
+    and the batch padding is handled by the wrap.
+    """
+    report: list[str] = []
+    cols = ctx.axes_for("acu_attn_heads")
+    while cols and hkv % ctx.axis_prod(cols) != 0:
+        cols = cols[:-1]
+    if len(cols) != len(ctx.axes_for("acu_attn_heads")):
+        report.append(f"kv heads {hkv} %% acu_attn_heads axes != 0 -> heads "
+                      f"{'partially sharded' if cols else 'replicated'} "
+                      f"(GQA groups must stay whole per shard)")
+    used = set(cols)
+    rows = tuple(a for a in ctx.axes_for("acu_attn_rows") if a not in used)
+    part = GemmPartition(rows=rows, cols=cols, k=(),
+                         n_rows=ctx.axis_prod(rows),
+                         n_cols=ctx.axis_prod(cols),
+                         n_k=1,
+                         report=tuple(report))
+    return part, report
+
+
 def opt_state_specs(param_plan: Plan, opt_state) -> Any:
     """Optimizer moments shard exactly like their params; scalars replicate."""
     pspecs = param_plan.specs

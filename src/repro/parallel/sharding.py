@@ -58,6 +58,13 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "acu_conv_rows": ("pod", "data"),  # batch x output-row-band rows
     "acu_conv_cols": ("model",),       # output channels (Cout)
     "acu_conv_k": (),                  # input channels (C); empty = replicated
+    # ---- approximate attention (core/acu.py attn_plan routes): batch rows
+    # (serving slots) shard like tokens, KV heads like any TP head dim —
+    # whole GQA groups per shard, rowinfo rides with the batch, LUT
+    # replicated. No contraction sharding: the online softmax is sequential
+    # in KV and bit-exactness forbids re-associating the float rescale.
+    "acu_attn_rows": ("pod", "data"),  # batch rows (B)
+    "acu_attn_heads": ("model",),      # KV heads (GQA groups stay whole)
 }
 
 

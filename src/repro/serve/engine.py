@@ -1,14 +1,19 @@
 """Serving engines: batched LM prefill/decode and batched vision inference.
 
-Requests are served in *waves*: up to ``slots`` prompts are padded to a
-common length, prefilled in one batched call, then decoded in lockstep (one
-jit'd decode step per token for the whole batch). Per-request early stop
-masks finished rows. Both steps are jit'd once and reused for every wave.
+Two LM engines share the jitted ``apply_model`` steps:
 
-(True per-slot continuous batching needs per-row cache positions — a vmap'd
-cache update — which trades compile complexity for admission latency; the
-wave design keeps the decode step identical to the dry-run ``serve_step``,
-which is what the multi-pod config proves out.)
+* :class:`ServeEngine` — *waves*: up to ``slots`` prompts are padded to a
+  common length, prefilled in one batched call, then decoded in lockstep
+  (one jit'd decode step per token for the whole batch). Per-request early
+  stop masks finished rows, but a finished slot idles until the whole wave
+  drains, and arrivals queue behind the current wave.
+* :class:`ContinuousServeEngine` — true continuous batching: every slot
+  advances at its *own* cache position (``cache_pos`` is a (slots,) vector;
+  the KV append is a vmap'd per-row ``dynamic_update_slice``), a finished
+  slot is evicted and refilled immediately (batch-1 bucketed prefill +
+  jitted row insertion into the batched cache), so the decode batch stays
+  full under load. Sustained tokens/s under a Poisson arrival trace is the
+  ``[serve]`` benchmark's headline number.
 """
 from __future__ import annotations
 
@@ -128,6 +133,189 @@ class ServeEngine:
                 wave.append(Request(prompt=np.zeros(1, np.int32),
                                     max_new_tokens=1))
             self._wave(wave, on_token)
+        return requests
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Next power-of-two >= n (>= lo): bounds prefill recompiles to log2
+    distinct prompt shapes."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """Cumulative Poisson-process arrival times for ``n`` requests, in
+    decode-step units (``rate`` = mean arrivals per decode step)."""
+    rng = np.random.RandomState(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+class ContinuousServeEngine:
+    """Continuous-batching LM serving: slot-level admission and eviction.
+
+    Each incoming request is prefilled alone (prompt left-padded to a
+    power-of-two bucket, so at most log2(max_seq) prefill shapes compile),
+    its batch-1 cache row is inserted into the live batched cache by a
+    jitted ``dynamic_update_slice``, and from then on the slot decodes in
+    the shared batched step at its own cache position — ``cache_pos`` is a
+    (slots,) vector and every attention layer appends KV with a vmap'd
+    per-row update. A slot that exhausts its ``max_new_tokens`` (honored
+    exactly, per request) is evicted the same step and its slot refilled by
+    the next queued arrival, so unlike the wave engine no row idles behind
+    the longest request in its batch.
+
+    ``run(requests, arrivals=None)``: ``arrivals`` are request arrival
+    times in decode-step units (``None`` = all at t=0); the engine's clock
+    is the decode-step counter, so a trace replays deterministically.
+    ``self.stats`` afterwards holds ``decode_steps``, ``prefills``,
+    ``tokens`` and mean slot ``occupancy`` per decode step.
+
+    Same mesh contract as :class:`ServeEngine`; with a LUT-Pallas ``acfg``
+    every attention layer rides the fused approximate flash kernel
+    (per-row ``rowinfo`` built from the position vector and pad mask).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 max_seq: int = 512, acfg=None, mesh=None):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.acfg = acfg
+        self.stats: dict = {}
+        if mesh is None:
+            self._mesh_scope = contextlib.nullcontext
+        elif isinstance(mesh, MeshContext):
+            self._mesh_scope = lambda: use_mesh_context(mesh)
+        else:
+            self._mesh_scope = lambda: use_mesh(mesh)
+
+        def prefill(params, cache, tokens, pos_offset, pad_mask):
+            logits, cache = apply_model(params, tokens, cfg, acfg=acfg,
+                                        cache=cache, cache_pos=0,
+                                        pos_offset=pos_offset,
+                                        pad_mask=pad_mask, last_only=True)
+            return logits[:, -1], cache
+
+        def insert(cache, row, slot):
+            return jax.tree.map(
+                lambda c, r: jax.lax.dynamic_update_slice_in_dim(
+                    c, r.astype(c.dtype), slot, axis=1), cache, row)
+
+        def decode(params, cache, tokens, pos, pos_offset, pad_mask):
+            logits, cache = apply_model(params, tokens, cfg, acfg=acfg,
+                                        cache=cache, cache_pos=pos,
+                                        decode=True, pos_offset=pos_offset,
+                                        pad_mask=pad_mask)
+            return logits[:, -1], cache
+
+        self._prefill = jax.jit(prefill)
+        # no donation on insert: a fresh init_cache aliases its k/v leaves
+        # (the same zeros array twice), which donation rejects
+        self._insert = jax.jit(insert)
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+    def _admit(self, req: Request, slot: int, cache):
+        """Prefill one request and insert its cache row at ``slot``.
+        Returns (cache, first_token, next_pos, pad_off, budget)."""
+        plen = len(req.prompt)
+        bucket = min(_bucket(plen), self.max_seq)
+        assert plen <= bucket, (plen, self.max_seq)
+        off = bucket - plen
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, off:] = req.prompt
+        valid = np.zeros((1, self.max_seq), bool)
+        valid[0, off:] = True
+        row_cache = init_cache(self.cfg, 1, self.max_seq)
+        with self._mesh_scope():
+            logits, row_cache = self._prefill(
+                self.params, row_cache, jnp.asarray(toks),
+                jnp.asarray([off], jnp.int32), jnp.asarray(valid))
+            cache = self._insert(cache, row_cache,
+                                 jnp.asarray(slot, jnp.int32))
+        self.stats["prefills"] += 1
+        tok = int(np.asarray(jnp.argmax(logits[0])))
+        budget = max(0, min(req.max_new_tokens, self.max_seq - bucket))
+        return cache, tok, bucket, off, budget
+
+    def run(self, requests: list[Request], arrivals=None,
+            on_token: Optional[Callable[[int, int], None]] = None
+            ) -> list[Request]:
+        reqs = list(requests)
+        n = len(reqs)
+        arr = (np.zeros(n) if arrivals is None
+               else np.asarray(arrivals, np.float64))
+        assert len(arr) == n
+        order = sorted(range(n), key=lambda j: (arr[j], j))
+        qi = 0
+        slots = self.slots
+        active = np.zeros(slots, bool)
+        pos = np.zeros(slots, np.int32)
+        offs = np.zeros(slots, np.int32)
+        valid = np.zeros((slots, self.max_seq), bool)
+        cur = np.zeros(slots, np.int32)
+        n_out = np.zeros(slots, np.int64)
+        budget = np.zeros(slots, np.int64)
+        ridx = np.full(slots, -1, np.int64)
+        outs: list[Optional[np.ndarray]] = [None] * slots
+        cache = init_cache(self.cfg, slots, self.max_seq)
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
+                      "occupancy_sum": 0}
+        step = 0.0  # decode-step clock
+        done = 0
+        while done < n:
+            # admit queued arrivals into free slots (one prefill each)
+            while qi < len(order) and arr[order[qi]] <= step:
+                free = np.flatnonzero(~active)
+                if not free.size:
+                    break
+                i, j = int(free[0]), order[qi]
+                qi += 1
+                cache, tok, p0, off, bud = self._admit(reqs[j], i, cache)
+                if bud <= 0:       # prompt fills max_seq: nothing to emit
+                    reqs[j].out = np.zeros(0, np.int32)
+                    done += 1
+                    continue
+                active[i] = True
+                pos[i], offs[i], cur[i] = p0, off, tok
+                valid[i] = False
+                valid[i, off:] = True
+                n_out[i], budget[i], ridx[i] = 0, bud, j
+                outs[i] = np.zeros(bud, np.int32)
+            if not active.any():
+                if qi >= len(order):
+                    break
+                step = max(step, float(arr[order[qi]]))  # idle: jump clock
+                continue
+            # emit the token produced by the previous model call; evict
+            # slots that hit their per-request budget the same step
+            for i in np.flatnonzero(active):
+                outs[i][n_out[i]] = cur[i]
+                n_out[i] += 1
+                self.stats["tokens"] += 1
+                if on_token:
+                    on_token(int(ridx[i]), int(cur[i]))
+                if n_out[i] >= budget[i]:
+                    reqs[ridx[i]].out = outs[i][:n_out[i]].copy()
+                    active[i] = False
+                    done += 1
+            if not active.any():
+                continue
+            with self._mesh_scope():
+                logits, cache = self._decode(
+                    self.params, cache, jnp.asarray(cur)[:, None],
+                    jnp.asarray(pos), jnp.asarray(offs), jnp.asarray(valid))
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            live = np.flatnonzero(active)
+            cur[live] = nxt[live]
+            pos[live] += 1
+            self.stats["decode_steps"] += 1
+            self.stats["occupancy_sum"] += int(live.size)
+            step += 1.0
+        self.stats["occupancy"] = (
+            self.stats["occupancy_sum"] / max(1, self.stats["decode_steps"]))
         return requests
 
 

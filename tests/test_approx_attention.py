@@ -1,0 +1,265 @@
+"""Approximate flash attention: kernel == unfused oracle, bitwise.
+
+The contract under test (kernels/flash_attention/approx.py): the fused
+Pallas kernel — per-tensor quantize of Q/K/V in-kernel, QK^T and PV as int32
+LUT-gather GEMMs inside the streaming softmax, pad corrections in integer
+space, dequant folded into the running rescale — is bit-identical to
+``approx_attention_ref``, the unfused jnp composition driving the same
+shared per-KV-block core. Plus the planning layer (core/acu.attn_plan):
+route resolution, audited dense fallback, the end-aligned default rowinfo,
+and the model-level wiring through ``attention_block``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.acu import AttnSpec, attn_plan, make_acu
+from repro.core.approx_ops import ApproxConfig, approx_attention
+from repro.core.lut import build_lut
+from repro.core.multipliers import get_multiplier
+from repro.kernels.flash_attention.approx import approx_flash_attention
+from repro.kernels.flash_attention.ref import approx_attention_ref
+
+MULT = "mul8s_1L2H"      # biased approximate multiplier: LUT[0, x] != 0 for
+                         # some x, so masked-key and pad-correction semantics
+                         # are observable, not vacuously zero
+
+
+def _lut(name=MULT):
+    return build_lut(get_multiplier(name))
+
+
+def _qkv(bh, sq, sk, d, bh_kv=None, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(bh, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh_kv or bh, sk, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh_kv or bh, sk, d)), jnp.float32)
+    s = [jnp.float32(jnp.max(jnp.abs(t)) / 127.0) for t in (q, k, v)]
+    return q, k, v, s
+
+
+CASES = [
+    # (sq, sk, d, rep, causal, window, softcap, bq, bk)
+    (128, 128, 32, 1, True, None, None, 64, 64),
+    (128, 256, 32, 1, False, None, None, 64, 64),     # multi-kv-block
+    (128, 128, 32, 4, True, None, None, 64, 64),      # GQA
+    (96, 203, 24, 1, True, 17, 30.0, 64, 64),         # odd S + window+softcap
+    (1, 131, 32, 2, True, None, None, 64, 64),        # decode step, odd Sk
+    (64, 64, 20, 1, True, 9, None, 32, 32),           # odd head dim
+]
+
+
+@pytest.mark.parametrize("sq,sk,d,rep,causal,window,softcap,bq,bk", CASES)
+def test_kernel_matches_oracle_bitwise(sq, sk, d, rep, causal, window,
+                                       softcap, bq, bk):
+    lut = _lut()
+    bh_kv = 2
+    q, k, v, (qs, ks, vs) = _qkv(bh_kv * rep, sq, sk, d, bh_kv, seed=sq + sk)
+    out = approx_flash_attention(q, k, v, lut, 128, qs, ks, vs, causal=causal,
+                                 window=window, softcap=softcap, bq=bq, bk=bk)
+    ref = approx_attention_ref(q, k, v, lut, 128, qs, ks, vs, causal=causal,
+                               window=window, softcap=softcap, bq=bq, bk=bk)
+    assert out.dtype == jnp.float32 and out.shape == (bh_kv * rep, sq, d)
+    assert jnp.array_equal(out, ref), float(jnp.max(jnp.abs(out - ref)))
+
+
+def test_outer_jit_bitwise():
+    """Embedding the kernel call in an outer jit (the serving decode step)
+    must not perturb a single bit vs the direct call."""
+    lut = _lut()
+    q, k, v, (qs, ks, vs) = _qkv(4, 64, 192, 32, 2, seed=7)
+    fn = lambda q, k, v, qs, ks, vs: approx_flash_attention(
+        q, k, v, lut, 128, qs, ks, vs, causal=True, bq=64, bk=64)
+    direct = fn(q, k, v, qs, ks, vs)
+    jitted = jax.jit(fn)(q, k, v, qs, ks, vs)
+    assert jnp.array_equal(direct, jitted)
+
+
+def test_gqa_equals_explicit_repeat():
+    """Folded-GQA (k/v indexed via b // rep in the BlockSpec) == physically
+    repeating K/V to rep=1 — the layout optimization must be invisible."""
+    lut = _lut()
+    rep = 4
+    q, k, v, (qs, ks, vs) = _qkv(2 * rep, 96, 160, 32, 2, seed=11)
+    out = approx_flash_attention(q, k, v, lut, 128, qs, ks, vs, causal=True,
+                                 bq=64, bk=64)
+    kr = jnp.repeat(k, rep, axis=0)
+    vr = jnp.repeat(v, rep, axis=0)
+    ref = approx_flash_attention(q, kr, vr, lut, 128, qs, ks, vs, causal=True,
+                                 bq=64, bk=64)
+    assert jnp.array_equal(out, ref)
+
+
+def test_default_rowinfo_is_end_aligned():
+    """rowinfo=None == explicit [sk-sq, 0, sk] rows (decode convention)."""
+    lut = _lut()
+    q, k, v, (qs, ks, vs) = _qkv(3, 32, 96, 16, seed=3)
+    info = jnp.broadcast_to(jnp.array([64, 0, 96], jnp.int32), (3, 3))
+    a = approx_flash_attention(q, k, v, lut, 128, qs, ks, vs, causal=True,
+                               bq=32, bk=32)
+    b = approx_flash_attention(q, k, v, lut, 128, qs, ks, vs, causal=True,
+                               rowinfo=info, bq=32, bk=32)
+    assert jnp.array_equal(a, b)
+
+
+def test_heterogeneous_rowinfo_bitwise():
+    """Per-row [q_base, kv_start, kv_len] (the continuous-batching serving
+    state: every slot at its own cache offset with its own left-pad) — the
+    kernel matches the oracle bit for bit."""
+    lut = _lut()
+    q, k, v, (qs, ks, vs) = _qkv(3, 1, 96, 16, seed=5)
+    info = jnp.array([[95, 13, 96],     # left-padded slot, full cache
+                      [40, 0, 41],      # young slot: short written prefix
+                      [7, 3, 8]], jnp.int32)
+    out = approx_flash_attention(q, k, v, lut, 128, qs, ks, vs, causal=True,
+                                 rowinfo=info, bq=32, bk=32)
+    ref = approx_attention_ref(q, k, v, lut, 128, qs, ks, vs, causal=True,
+                               rowinfo=info, bq=32, bk=32)
+    assert jnp.array_equal(out, ref)
+    # the young slot must not read keys past kv_len: perturbing them there
+    # cannot change its row
+    k2 = k.at[1, 41:].set(99.0)
+    v2 = v.at[1, 41:].set(-99.0)
+    out2 = approx_flash_attention(q, k2, v2, lut, 128, qs, ks, vs,
+                                  causal=True, rowinfo=info, bq=32, bk=32)
+    assert jnp.array_equal(out[1], out2[1])
+
+
+# ---------------------------------------------------------------------------
+# planning layer
+# ---------------------------------------------------------------------------
+
+def test_attn_plan_routes_and_audits():
+    spec = AttnSpec(hq=8, hkv=2)
+    fused = attn_plan(make_acu(MULT, use_pallas=True), spec)
+    assert fused.route == "fused_attn" and fused.fn is not None
+    d = fused.describe()
+    assert d["route"] == "fused_attn" and "rep=4" in d["heads"]
+
+    # every way an ACU fails the fused contract resolves to audited "dense"
+    for acu in (make_acu(MULT),                          # no pallas
+                make_acu(MULT, mode="functional", use_pallas=True),
+                make_acu("mul12s_exact", use_pallas=True)):  # >10b: no LUT
+        plan = attn_plan(acu, spec)
+        assert plan.route == "dense" and plan.fn is None
+        assert any("attention stays exact" in r for r in plan.report)
+        with pytest.raises(ValueError, match="fused_attn route unavailable"):
+            attn_plan(acu, spec, route="fused_attn")
+
+    pinned = attn_plan(make_acu(MULT, use_pallas=True), spec, route="dense")
+    assert pinned.route == "dense"
+    with pytest.raises(ValueError, match="unknown attn route"):
+        attn_plan(make_acu(MULT, use_pallas=True), spec, route="bogus")
+    with pytest.raises(ValueError, match="not a multiple"):
+        attn_plan(make_acu(MULT, use_pallas=True), AttnSpec(hq=6, hkv=4))
+
+
+def test_attn_plan_fn_matches_kernel():
+    """The plan's (B, H, S, D) fn is exactly the folded kernel call."""
+    acu = make_acu(MULT, use_pallas=True)
+    plan = attn_plan(acu, AttnSpec(hq=4, hkv=2, bq=32, bk=32))
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 4, 32, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 2, 96, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 96, 16)), jnp.float32)
+    s = [jnp.float32(jnp.max(jnp.abs(t)) / 127.0) for t in (q, k, v)]
+    out = plan(q, k, v, *s)
+    ref = approx_flash_attention(
+        q.reshape(8, 32, 16), k.reshape(4, 96, 16), v.reshape(4, 96, 16),
+        jnp.asarray(acu.lut), acu.offset, *s, causal=True, bq=32, bk=32)
+    assert jnp.array_equal(out, ref.reshape(2, 4, 32, 16))
+
+
+def test_approx_attention_helper_routes():
+    """approx_ops.approx_attention: fused plan -> output, dense -> None."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 4, 16, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 48, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 48, 16)), jnp.float32)
+    fused_cfg = ApproxConfig(acu=make_acu(MULT, use_pallas=True))
+    out = approx_attention(q, k, v, fused_cfg)
+    assert out is not None and out.shape == (1, 4, 16, 16)
+    dense_cfg = ApproxConfig(acu=make_acu(MULT))
+    assert approx_attention(q, k, v, dense_cfg) is None
+
+
+def test_decode_vector_cache_pos_matches_scalar():
+    """Continuous batching plumbing: a (B,) cache_pos vector with equal
+    entries decodes bitwise the same logits as the scalar path, on both the
+    exact substrate and the ACU route."""
+    from repro.configs import reduced_config
+    from repro.models.transformer import apply_model, init_cache, init_params
+    cfg = reduced_config("smollm-135m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray([[5, 17, 3, 99], [5, 17, 3, 99]], jnp.int32)
+    for acfg in (None, ApproxConfig(acu=make_acu(MULT, use_pallas=True,
+                                                 fused=True))):
+        cache_s = init_cache(cfg, 2, 32)
+        _, cache_s = apply_model(params, toks, cfg, acfg=acfg, cache=cache_s)
+        cache_v = jax.tree.map(jnp.copy, cache_s)
+        tok = jnp.asarray([[7], [7]], jnp.int32)
+        ls, _ = apply_model(params, tok, cfg, acfg=acfg, cache=cache_s,
+                            cache_pos=4, decode=True)
+        lv, _ = apply_model(params, tok, cfg, acfg=acfg, cache=cache_v,
+                            cache_pos=jnp.asarray([4, 4], jnp.int32),
+                            decode=True)
+        assert jnp.array_equal(ls, lv)
+
+
+def test_model_decode_rides_acu_route(monkeypatch):
+    """attention_block must dispatch decode through approx_attention when
+    the plan fuses — and fall back cleanly when it audits to dense."""
+    from repro.configs import reduced_config
+    from repro.models import layers as L
+    from repro.models.transformer import apply_model, init_cache, init_params
+    cfg = reduced_config("smollm-135m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    calls = {"n": 0}
+    real = L.approx_attention
+
+    def counting(*a, **kw):
+        out = real(*a, **kw)
+        calls["n"] += 1 if out is not None else 0
+        return out
+
+    monkeypatch.setattr(L, "approx_attention", counting)
+    acfg = ApproxConfig(acu=make_acu(MULT, use_pallas=True, fused=True))
+    cache = init_cache(cfg, 1, 16)
+    toks = jnp.asarray([[5, 17, 3]], jnp.int32)
+    apply_model(params, toks, cfg, acfg=acfg, cache=cache, cache_pos=0)
+    assert calls["n"] > 0
+    calls["n"] = 0
+    dense = ApproxConfig(acu=make_acu(MULT))   # no pallas: dense fallback
+    apply_model(params, toks, cfg, acfg=dense, cache=init_cache(cfg, 1, 16),
+                cache_pos=0)
+    assert calls["n"] == 0
+
+
+# ---------------------------------------------------------------------------
+# sharded == single-device (2x4 host mesh; skips below 8 devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+@pytest.mark.parametrize("b,hq,hkv", [(4, 8, 4), (2, 4, 1), (3, 8, 2)])
+def test_sharded_attn_bit_exact(b, hq, hkv):
+    """Batch over ("data",) rows and KV heads over ("model",): the sharded
+    plan output equals the single-device plan bit for bit — including batch
+    and head counts that do not divide the mesh axes."""
+    from repro.launch.mesh import make_host_multi_mesh
+    from repro.parallel.sharding import use_mesh
+    mesh = make_host_multi_mesh((2, 4))
+    acu = make_acu(MULT, use_pallas=True)
+    spec = AttnSpec(hq=hq, hkv=hkv, bq=32, bk=32)
+    rng = np.random.default_rng(b + hq)
+    q = jnp.asarray(rng.normal(size=(b, hq, 32, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, 96, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, 96, 16)), jnp.float32)
+    s = [jnp.float32(jnp.max(jnp.abs(t)) / 127.0) for t in (q, k, v)]
+    ref = attn_plan(acu, spec, mesh=False)(q, k, v, *s)
+    with use_mesh(mesh):
+        plan = attn_plan(acu, spec)
+        out = plan(q, k, v, *s)
+    assert jnp.array_equal(out, ref)

@@ -1,0 +1,57 @@
+"""The centralized interpret-mode knob (repro.kernels.runtime)."""
+import pathlib
+import re
+
+import pytest
+
+from repro.kernels.runtime import interpret_default, resolve_interpret
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+def test_default_is_interpret(monkeypatch):
+    monkeypatch.delenv("REPRO_INTERPRET", raising=False)
+    assert interpret_default() is True
+
+
+@pytest.mark.parametrize("value,expect", [
+    ("0", False), ("false", False), ("no", False), ("off", False),
+    ("", False), ("  FALSE  ", False),
+    ("1", True), ("true", True), ("compiled-anyway", True),
+])
+def test_env_override(monkeypatch, value, expect):
+    monkeypatch.setenv("REPRO_INTERPRET", value)
+    assert interpret_default() is expect
+
+
+def test_resolve_explicit_wins(monkeypatch):
+    monkeypatch.setenv("REPRO_INTERPRET", "0")
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    assert resolve_interpret(None) is False
+    monkeypatch.delenv("REPRO_INTERPRET")
+    assert resolve_interpret(None) is True
+
+
+def test_no_hardcoded_interpret_defaults():
+    """No kernel wrapper may regress to ``interpret: bool = True`` — the
+    default lives in runtime.interpret_default() so flipping to compiled
+    Mosaic kernels stays a one-env-var switch."""
+    pat = re.compile(r"interpret\s*:\s*bool\s*=\s*(True|False)")
+    offenders = []
+    for path in SRC.rglob("*.py"):
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{path.relative_to(SRC)}:{i}: {line.strip()}")
+    assert not offenders, "\n".join(offenders)
+
+
+def test_every_pallas_call_resolves():
+    """Every ``pallas_call(... interpret=...)`` site must route through
+    resolve_interpret (or an Acu field that defaults to None)."""
+    for path in SRC.rglob("kernel.py"):
+        src = path.read_text()
+        if "pallas_call" not in src:
+            continue
+        raw = re.findall(r"interpret=interpret\b", src)
+        assert not raw, f"{path}: pallas_call takes raw interpret argument"

@@ -1,26 +1,31 @@
-"""Serving engine: batched waves == per-sequence incremental reference."""
+"""Serving engines: batched waves == per-sequence incremental reference,
+and continuous batching == waves (same greedy tokens, fewer decode steps)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import reduced_config
 from repro.models.transformer import apply_model, init_cache, init_params
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import (ContinuousServeEngine, Request, ServeEngine,
+                                poisson_arrivals)
 
 KEY = jax.random.PRNGKey(0)
 
 
-def greedy_reference(params, cfg, prompt, n_new):
+def greedy_reference(params, cfg, prompt, n_new, acfg=None):
     toks = jnp.asarray(prompt)[None, :]
     cache = init_cache(cfg, 1, len(prompt) + n_new + 2)
-    logits, cache = apply_model(params, toks, cfg, cache=cache, cache_pos=0)
+    logits, cache = apply_model(params, toks, cfg, acfg=acfg, cache=cache,
+                                cache_pos=0)
     out = []
     cur = int(jnp.argmax(logits[0, -1]))
     pos = len(prompt)
     for _ in range(n_new):
         out.append(cur)
         logits, cache = apply_model(params, jnp.asarray([[cur]]), cfg,
-                                    cache=cache, cache_pos=pos, decode=True)
+                                    acfg=acfg, cache=cache, cache_pos=pos,
+                                    decode=True)
         cur = int(jnp.argmax(logits[0, -1]))
         pos += 1
     return out
@@ -89,3 +94,141 @@ def test_engine_multiple_waves_and_lengths():
     for i, r in enumerate(done):
         assert len(r.out) == 3 + i
         assert all(0 <= t < cfg.vocab_padded for t in r.out)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+def _reqs(specs):
+    return [Request(prompt=np.asarray(p, np.int32), max_new_tokens=n)
+            for p, n in specs]
+
+
+def test_continuous_matches_wave():
+    """Continuous batching is a scheduling change, not a math change: the
+    exact-path greedy tokens equal the wave engine's, mixed prompt lengths
+    included."""
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    specs = [([5, 17, 3, 99], 6), ([7, 11, 2], 4),
+             ([5, 17, 3, 99, 23, 41, 8, 1, 64, 12], 5), ([9, 9], 7)]
+    wave = ServeEngine(params, cfg, slots=2, max_seq=64).run(_reqs(specs))
+    cont = ContinuousServeEngine(params, cfg, slots=2,
+                                 max_seq=64).run(_reqs(specs))
+    for w, c in zip(wave, cont):
+        assert list(w.out) == list(c.out)
+
+
+def test_continuous_fewer_decode_steps():
+    """The point of continuous batching: a freed slot admits the next queued
+    request instead of idling behind the longest row of its wave, so mixed
+    short/long budgets take strictly fewer decode steps."""
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    specs = [([3, 1], 3), ([4, 2], 12), ([5, 3], 3), ([6, 4], 12)]
+
+    wave_eng = ServeEngine(params, cfg, slots=2, max_seq=32)
+    calls = [0]
+    inner = wave_eng._decode
+
+    def counting(*a, **k):
+        calls[0] += 1
+        return inner(*a, **k)
+
+    wave_eng._decode = counting
+    wave = wave_eng.run(_reqs(specs))
+
+    cont_eng = ContinuousServeEngine(params, cfg, slots=2, max_seq=32)
+    cont = cont_eng.run(_reqs(specs))
+    for w, c in zip(wave, cont):
+        assert list(w.out) == list(c.out)
+    assert cont_eng.stats["decode_steps"] < calls[0], \
+        (cont_eng.stats["decode_steps"], calls[0])
+    assert cont_eng.stats["tokens"] == sum(n for _, n in specs)
+
+
+def test_continuous_per_request_budget_exact():
+    """Regression (per-slot max_new_tokens): every request gets exactly its
+    own budget even when short and long requests share the batch — no row
+    over-generates to the batch max or under-generates to the batch min."""
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    budgets = [1, 9, 2, 7, 3]
+    reqs = _reqs([([i + 1, i + 2], b) for i, b in enumerate(budgets)])
+    eng = ContinuousServeEngine(params, cfg, slots=3, max_seq=32)
+    done = eng.run(reqs)
+    assert [len(r.out) for r in done] == budgets
+    assert eng.stats["tokens"] == sum(budgets)
+
+
+def test_continuous_approx_matches_straightline_decode():
+    """ACU route end to end: a slots=1 continuous engine with a LUT-Pallas
+    acfg emits exactly the tokens of straight-line apply_model calls using
+    the same bucketed-prefill semantics (per-tensor activation scales depend
+    on padding, so the reference pads identically)."""
+    from repro.core.acu import make_acu
+    from repro.core.approx_ops import ApproxConfig
+    from repro.serve.engine import _bucket
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    acfg = ApproxConfig(acu=make_acu("mul8s_1L2H", use_pallas=True,
+                                     fused=True))
+    prompt, n_new, max_seq = [5, 17, 3, 99, 23], 5, 32
+
+    bucket = _bucket(len(prompt))
+    off = bucket - len(prompt)
+    toks = np.zeros((1, bucket), np.int32)
+    toks[0, off:] = prompt
+    valid = np.zeros((1, max_seq), bool)
+    valid[0, off:] = True
+    cache = init_cache(cfg, 1, max_seq)
+    logits, cache = apply_model(params, jnp.asarray(toks), cfg, acfg=acfg,
+                                cache=cache, cache_pos=0,
+                                pos_offset=jnp.asarray([off], jnp.int32),
+                                pad_mask=jnp.asarray(valid), last_only=True)
+    ref, cur, pos = [], int(jnp.argmax(logits[0, -1])), bucket
+    for _ in range(n_new - 1):
+        ref.append(cur)
+        logits, cache = apply_model(
+            params, jnp.asarray([[cur]]), cfg, acfg=acfg, cache=cache,
+            cache_pos=jnp.asarray([pos], jnp.int32), decode=True,
+            pos_offset=jnp.asarray([off], jnp.int32),
+            pad_mask=jnp.asarray(valid))
+        cur = int(jnp.argmax(logits[0, -1]))
+        pos += 1
+    ref.append(cur)
+
+    eng = ContinuousServeEngine(params, cfg, slots=1, max_seq=max_seq,
+                                acfg=acfg)
+    done = eng.run(_reqs([(prompt, n_new)]))
+    assert list(done[0].out) == ref
+
+
+@pytest.mark.tier2
+def test_continuous_poisson_trace():
+    """Long staggered trace: every request served with its exact budget,
+    arrivals respected (a request never produces tokens before it arrives),
+    and the batch refills — occupancy above one slot on average."""
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(0)
+    n = 16
+    reqs = [Request(prompt=rng.integers(1, cfg.vocab_size,
+                                        rng.integers(2, 9)).astype(np.int32),
+                    max_new_tokens=int(rng.integers(2, 10)))
+            for _ in range(n)]
+    budgets = [r.max_new_tokens for r in reqs]
+    arrivals = poisson_arrivals(n, rate=0.6, seed=3)
+    eng = ContinuousServeEngine(params, cfg, slots=4, max_seq=32)
+    done = eng.run(reqs, arrivals=arrivals)
+    assert [len(r.out) for r in done] == budgets
+    assert eng.stats["prefills"] == n
+    assert eng.stats["occupancy"] > 1.0
+    # same requests, all-at-once: tokens identical (arrival times only
+    # reorder work, they cannot change any request's greedy decode)
+    reqs2 = [Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens)
+             for r in reqs]
+    done2 = ContinuousServeEngine(params, cfg, slots=4, max_seq=32).run(reqs2)
+    for a, b in zip(done, done2):
+        assert list(a.out) == list(b.out)
