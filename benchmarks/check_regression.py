@@ -43,7 +43,15 @@ new record is more than ``tol`` slower than the old record's:
   token from PR 7 on, with the within-record floor
   ``speedup_vs_wave >= 1.25``: slot-level admission/eviction must keep
   beating the wave scheduler on the skewed request mix by a real margin,
-  or continuous batching has silently stopped paying for its complexity.
+  or continuous batching has silently stopped paying for its complexity;
+* the ``serve`` section's ``serve_paged`` row (paged KV + prefix reuse
+  under a fixed HBM budget, docs/serving.md "Paged KV") — trajectory-gated
+  µs per generated token from PR 8 on, with two within-record floors:
+  ``speedup_vs_contiguous >= 1.0`` (against the contiguous engine serving
+  the identical memory-pressure trace under the same budget — paged must
+  never lose to the layout it replaced) and ``prefix_hit_rate >= 0.1``
+  (the shared-prefix trace must actually hit the prefix cache, or reuse
+  has silently broken).
 
 Records are only comparable within the same host/backend pair; the committed
 series is produced on the dev container, so CI gates on the committed files
@@ -76,6 +84,8 @@ GATES = [
      {"mode": "attn_fused", "attn": "decode1x256"}),
     ("serve.continuous", "serve",
      {"mode": "serve_continuous"}),
+    ("serve.paged", "serve",
+     {"mode": "serve_paged"}),
 ]
 
 # within-record floors on the NEW record:
@@ -93,6 +103,10 @@ FLOORS = [
      "speedup_vs_unfused", 0.75),
     ("serve.continuous >= 1.25x wave", "serve",
      {"mode": "serve_continuous"}, "speedup_vs_wave", 1.25),
+    ("serve.paged >= contiguous under same budget", "serve",
+     {"mode": "serve_paged"}, "speedup_vs_contiguous", 1.0),
+    ("serve.paged prefix cache hitting", "serve",
+     {"mode": "serve_paged"}, "prefix_hit_rate", 0.1),
 ]
 
 

@@ -782,6 +782,14 @@ class AttnSpec:
     sequences by the kernel wrapper). Sequence lengths are deliberately NOT
     part of the spec — the kernel geometry adapts per call, so one plan
     serves prefill and decode.
+
+    ``kv_layout`` selects how the kernel reads KV:
+
+    * ``"contiguous"`` — K/V arrive as per-row ``(B, Hkv, Sk, D)`` tensors.
+    * ``"paged"`` — K/V live in a shared physical block pool
+      ``(Hkv, P, bk, D)`` and each row reads through an int32 page table;
+      ``bk`` is then also the paged block size (the pool's block extent
+      must equal it). The serve engine's block allocator owns the pool.
     """
 
     hq: int
@@ -791,6 +799,7 @@ class AttnSpec:
     softcap: Optional[float] = None
     bq: int = 128
     bk: int = 128
+    kv_layout: str = "contiguous"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -811,11 +820,25 @@ class AttnPlan:
       rows (``None`` = the end-aligned full-sequence default). Mesh-wrapped
       when a partition is active — batch over ``acu_attn_rows``, KV heads
       over ``acu_attn_heads``, no collectives, bit-exact by construction.
+    * ``"fused_attn_paged"`` — the same approximate flash attention reading
+      KV through a per-row page table
+      (``spec.kv_layout == "paged"``): ``fn(q, k_pool, v_pool, q_scale,
+      k_scale, v_scale, rowinfo, page_table) -> (B, Hq, Sq, D) f32`` with
+      ``k_pool``/``v_pool`` ``(Hkv, P, spec.bk, D)`` physical block pools
+      shared by all rows, ``page_table`` ``(B, n_logical)`` int32 logical →
+      physical block ids (repeated per query head internally), and
+      ``rowinfo`` REQUIRED (there is no sensible full-pool default).
+      Bitwise-identical to the contiguous route when the gathered blocks
+      hold the same values. Mesh-wrapped like the contiguous route with the
+      pool sharded over KV heads and the page table replicated per row
+      shard.
     * ``"dense"`` — the audited fallback for non-LUT modes, non-Pallas ACUs
       and missing tables: ``fn`` is None and the caller keeps its exact
       float attention path (models/layers.py) — attention runs exact, only
       the projections/MLP run approximately, mirroring the conv plan's
-      eager-im2col contract.
+      eager-im2col contract. Under ``kv_layout == "paged"`` the caller
+      additionally gathers pool blocks back to a contiguous layout first
+      (exact math is layout-independent, so the gather is just indexing).
     """
 
     mode: AcuMode
@@ -838,6 +861,9 @@ class AttnPlan:
             "mode": self.mode.value,
             "heads": f"hq={self.spec.hq} hkv={self.spec.hkv} "
                      f"(rep={self.spec.hq // self.spec.hkv})",
+            "kv_layout": self.spec.kv_layout
+                + (f" (block={self.spec.bk})"
+                   if self.spec.kv_layout == "paged" else ""),
             "mask": f"causal={self.spec.causal} window={self.spec.window} "
                     f"softcap={self.spec.softcap}",
             "partition": None if part is None else
@@ -866,8 +892,16 @@ def attn_plan(acu: Acu, spec: AttnSpec, *, a_bits: Optional[int] = None,
     report: list[str] = []
     if spec.hq % spec.hkv != 0:
         raise ValueError(f"hq={spec.hq} not a multiple of hkv={spec.hkv}")
-    if route not in (None, "fused_attn", "dense"):
+    if spec.kv_layout not in ("contiguous", "paged"):
+        raise ValueError(f"unknown kv_layout {spec.kv_layout!r}")
+    paged = spec.kv_layout == "paged"
+    fused_route = "fused_attn_paged" if paged else "fused_attn"
+    if route not in (None, "fused_attn", "fused_attn_paged", "dense"):
         raise ValueError(f"unknown attn route {route!r}")
+    if route is not None and route.startswith("fused") and route != fused_route:
+        raise ValueError(f"route pin {route!r} does not match "
+                         f"kv_layout={spec.kv_layout!r} (fused route here "
+                         f"is {fused_route!r})")
 
     can_fuse = acu.mode == AcuMode.LUT and acu.use_pallas \
         and acu.lut is not None
@@ -875,8 +909,12 @@ def attn_plan(acu: Acu, spec: AttnSpec, *, a_bits: Optional[int] = None,
         report.append(f"fused attention needs LUT mode + use_pallas + a "
                       f"built table (have mode={acu.mode.value}, "
                       f"use_pallas={acu.use_pallas}); attention stays exact")
-    if route == "fused_attn" and not can_fuse:
-        raise ValueError(f"fused_attn route unavailable: {report}")
+        if paged:
+            report.append("paged KV on the dense route: caller gathers pool "
+                          "blocks to a contiguous layout (exact math is "
+                          "layout-independent)")
+    if route == fused_route and not can_fuse:
+        raise ValueError(f"{fused_route} route unavailable: {report}")
     if route == "dense" or not can_fuse:
         if route == "dense":
             report.append("route pinned to exact dense attention by caller")
@@ -884,7 +922,10 @@ def attn_plan(acu: Acu, spec: AttnSpec, *, a_bits: Optional[int] = None,
                         use_pallas=acu.use_pallas, route="dense", spec=spec,
                         report=tuple(report))
 
-    from repro.kernels.flash_attention.approx import approx_flash_attention
+    from repro.kernels.flash_attention.approx import (
+        approx_flash_attention, approx_flash_attention_paged)
+
+    rep = spec.hq // spec.hkv
 
     def attn_call(qf, kf, vf, qs, ks, vs, rowinfo):
         # folded (B*H, S, D) operands; jnp.asarray stays inside fn: plans
@@ -895,6 +936,13 @@ def attn_plan(acu: Acu, spec: AttnSpec, *, a_bits: Optional[int] = None,
             bits=a_bits, causal=spec.causal, window=spec.window,
             softcap=spec.softcap, rowinfo=rowinfo, bq=spec.bq, bk=spec.bk,
             interpret=acu.interpret)
+
+    def attn_call_paged(qf, k_pool, v_pool, qs, ks, vs, rowinfo, pt):
+        return approx_flash_attention_paged(
+            qf, k_pool, v_pool, jnp.asarray(acu.lut), acu.offset, qs, ks, vs,
+            bits=a_bits, causal=spec.causal, window=spec.window,
+            softcap=spec.softcap, rowinfo=rowinfo, page_table=pt, rep=rep,
+            bq=spec.bq, interpret=acu.interpret)
 
     partition = None
     if ctx is not None:
@@ -909,7 +957,27 @@ def attn_plan(acu: Acu, spec: AttnSpec, *, a_bits: Optional[int] = None,
                 jnp.array([sk - sq, 0, sk], jnp.int32), (b, 3))
         return jnp.asarray(rowinfo, jnp.int32)
 
-    if partition is not None:
+    if paged:
+        if partition is not None:
+            from repro.parallel import acu_shard
+            sharded = acu_shard.wrap_attn_paged(
+                attn_call_paged, ctx, partition, hq=spec.hq, hkv=spec.hkv)
+
+            def fn(q, k_pool, v_pool, qs, ks, vs, rowinfo, page_table):
+                return sharded(q, k_pool, v_pool, qs, ks, vs,
+                               jnp.asarray(rowinfo, jnp.int32),
+                               jnp.asarray(page_table, jnp.int32))
+        else:
+            def fn(q, k_pool, v_pool, qs, ks, vs, rowinfo, page_table):
+                b, hq, sq, d = q.shape
+                info = jnp.repeat(jnp.asarray(rowinfo, jnp.int32), hq,
+                                  axis=0)
+                pt = jnp.repeat(jnp.asarray(page_table, jnp.int32), hq,
+                                axis=0)
+                out = attn_call_paged(q.reshape(b * hq, sq, d), k_pool,
+                                      v_pool, qs, ks, vs, info, pt)
+                return out.reshape(b, hq, sq, d)
+    elif partition is not None:
         from repro.parallel import acu_shard
         sharded = acu_shard.wrap_attn(attn_call, ctx, partition, hq=spec.hq,
                                       hkv=spec.hkv)
@@ -928,7 +996,7 @@ def attn_plan(acu: Acu, spec: AttnSpec, *, a_bits: Optional[int] = None,
             return out.reshape(b, hq, sq, d)
 
     return AttnPlan(mode=acu.mode, bits=acu.bits, use_pallas=True,
-                    route="fused_attn", spec=spec, fn=fn,
+                    route=fused_route, spec=spec, fn=fn,
                     partition=partition, report=tuple(report))
 
 

@@ -267,6 +267,42 @@ def approx_attention(q: Array, k: Array, v: Array, cfg: ApproxConfig, *,
     return plan(q, k, v, *scales, rowinfo)
 
 
+def approx_attention_paged(q: Array, k_pool: Array, v_pool: Array,
+                           cfg: ApproxConfig, *, page_table: Array,
+                           rowinfo: Array, causal: bool = True,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None
+                           ) -> Optional[Array]:
+    """Attention through the ACU over block-paged KV, or ``None`` when the
+    plan audits to the exact-substrate route (the caller then gathers the
+    pool blocks back to a contiguous layout and keeps its float attention).
+
+    ``q``: (B, Hq, Sq, D); ``k_pool``/``v_pool``: (Hkv, P, bk, D) physical
+    block pools; ``page_table``: (B, n_logical) int32; ``rowinfo``: (B, 3)
+    int32 — both REQUIRED. The K/V calibration amaxes run over the blocks
+    the page tables actually reference (``pool[:, page_table]``), NOT the
+    whole pool: a prefix-cache hit must see exactly the scales a cold run
+    of the same request would compute, and the pool's unrelated residents
+    (other requests, stale freed blocks) must never perturb them.
+    """
+    from .acu import AttnSpec
+    from .quantization import inline_symmetric_scale
+    from repro.parallel.sharding import current_mesh_context
+    spec = AttnSpec(hq=q.shape[1], hkv=k_pool.shape[0], causal=causal,
+                    window=window, softcap=softcap, bk=k_pool.shape[2],
+                    kv_layout="paged")
+    ctx = current_mesh_context()
+    plan = _get_attn_plan(cfg.acu, cfg.a_bits, spec, ctx)
+    if plan.route != "fused_attn_paged":
+        return None
+    pt = jnp.asarray(page_table, jnp.int32)
+    amaxes = (jnp.maximum(jnp.max(jnp.abs(q)), 1e-6),) + tuple(
+        jnp.maximum(jnp.max(jnp.abs(pool[:, pt])), 1e-6)
+        for pool in (k_pool, v_pool))
+    scales = [inline_symmetric_scale(a, cfg.a_bits) for a in amaxes]
+    return plan(q, k_pool, v_pool, *scales, rowinfo, pt)
+
+
 # ---------------------------------------------------------------------------
 # Conv2D (paper §3.3.1) and separable conv (§3.3.2)
 #

@@ -49,6 +49,25 @@ operands, so single-device and sharded runs also see identical bits.
 
 GQA shares KV through the BlockSpec index map (``b // rep``) — repeated K/V
 never exist in HBM.
+
+Paged KV (:func:`approx_flash_attention_paged`): the serving engines store
+KV in fixed-size *physical blocks* drawn from a global pool instead of one
+contiguous row per sequence, and the kernel reads them through a per-row
+page table. The per-row ``rowinfo=[q_base, kv_start, kv_len]`` extents
+already decouple logical from physical layout, so this is not a kernel
+rewrite: the KV block size *is* the kernel's ``bk`` tile, the pool arrives
+as one ``(Hkv, P*bk, D)`` operand (each grid row selects its KV head via
+the same ``(b // rep)`` BlockSpec index map, now mod ``Hkv``), and the only
+change inside the loop is where logical block ``ki`` starts —
+``page_table[ki] * bk`` instead of ``ki * bk``. ``_online_block`` grows an
+optional ``kv_blocks`` operand for exactly that indirection; with
+``kv_blocks=None`` the body is byte-identical to the contiguous path, and
+the paged oracle (:func:`~.ref.approx_attention_paged_ref`) drives the same
+body with the same page table, so paged == contiguous == oracle bitwise
+whenever the gathered blocks hold the same values as the contiguous layout
+(masked keys keep the faithful ``LUT[0, ·]`` contribution either way —
+which is why pool blocks must be zeroed on allocation, not on free: a
+recycled block's stale codes would be observable under biased multipliers).
 """
 from __future__ import annotations
 
@@ -117,19 +136,33 @@ def _online_block(ki, carry, *, qq, q_pos, k_all, v_all, lut, m00, sks, svs,
                   score_scale, pv_scale, kv_start, kv_len, bq: int, bk: int,
                   seq_k_real: int, d_real: int, n_codes: int, offset: int,
                   lo: int, hi: int, causal: bool, window: int | None,
-                  softcap: float | None, inner_d: int, inner_k: int):
+                  softcap: float | None, inner_d: int, inner_k: int,
+                  kv_blocks=None):
     """One KV block of the approximate online softmax — the shared core.
 
     Kernel and oracle both drive this exact function inside the same
     ``fori_loop`` shape; its body compiles once per program as its own XLA
     computation, which is what makes the two bitwise-identical (module
     docstring: FMA contraction cannot be fenced op-by-op on XLA CPU).
+
+    ``kv_blocks``: optional (n_logical_blocks,) int32 page-table row mapping
+    logical KV block ``ki`` to its physical block in the pool ``k_all`` /
+    ``v_all`` are laid out as. ``None`` keeps the contiguous layout
+    (physical start = ``ki * bk``) with a body byte-identical to the
+    pre-paged kernel; masking, positions and pad corrections always speak
+    *logical* coordinates, so the two layouts agree bit for bit when the
+    gathered blocks hold the same values.
     """
     m, l, acc = carry
     dp = k_all.shape[-1]
-    kf = jax.lax.dynamic_slice(k_all, (ki * bk, 0), (bk, dp)
+    if kv_blocks is None:
+        start = ki * bk
+    else:
+        start = jax.lax.dynamic_index_in_dim(
+            kv_blocks, ki, keepdims=False).astype(jnp.int32) * bk
+    kf = jax.lax.dynamic_slice(k_all, (start, 0), (bk, dp)
                                ).astype(jnp.float32)
-    vf = jax.lax.dynamic_slice(v_all, (ki * bk, 0), (bk, dp)
+    vf = jax.lax.dynamic_slice(v_all, (start, 0), (bk, dp)
                                ).astype(jnp.float32)
     kq = _quantize_sym(kf, sks, lo, hi, offset)
     vq = _quantize_sym(vf, svs, lo, hi, offset)
@@ -335,5 +368,185 @@ def approx_flash_attention(q, k, v, lut, offset, q_scale, k_scale, v_scale, *,
         rowinfo=rowinfo, bq=bq, bk=bk)
     out = approx_flash_attention_kernel(
         *operands, causal=causal, window=window, softcap=softcap,
+        interpret=interpret, **statics)
+    return out[:, :sq, :d]
+
+
+# ---------------------------------------------------------------------------
+# paged KV: same online softmax, KV read through a per-row page table
+# ---------------------------------------------------------------------------
+
+def _approx_paged_kernel(q_ref, k_ref, v_ref, lut_ref, info_ref, pt_ref,
+                         sq_ref, sk_ref, sv_ref, ss_ref, pvs_ref, o_ref, *,
+                         bq: int, bk: int, n_logical: int, d_real: int,
+                         n_codes: int, offset: int, lo: int, hi: int,
+                         causal: bool, window: int | None,
+                         softcap: float | None, inner_d: int, inner_k: int):
+    """Paged twin of ``_approx_kernel``: ``k_ref``/``v_ref`` hold one KV
+    head's slice of the physical block pool, ``pt_ref`` the row's page
+    table; the loop body is the same ``_online_block`` with the
+    ``kv_blocks`` indirection. ``seq_k_real`` is always the full logical
+    extent (``n_logical * bk``) — pool blocks are whole by construction, so
+    there is no structural tail pad to correct; validity lives entirely in
+    ``kv_len``."""
+    qi = pl.program_id(1)
+    dp = q_ref.shape[-1]
+    lut = lut_ref[...]
+    m00 = lut[offset * n_codes + offset]
+    info = info_ref[...]
+    q_base, kv_start, kv_len = info[0, 0], info[0, 1], info[0, 2]
+    pt = pt_ref[...][0]                                        # (n_logical,)
+
+    qf = q_ref[...][0].astype(jnp.float32)                     # (bq, dp)
+    qq = _quantize_sym(qf, sq_ref[0], lo, hi, offset)
+    q_pos = (q_base + qi * bq
+             + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+
+    k_all = k_ref[...][0]                                      # (P*bk, dp)
+    v_all = v_ref[...][0]
+
+    if causal:
+        n_kv_eff = causal_block_bound(q_base, qi, bq, bk, n_logical)
+    else:
+        n_kv_eff = n_logical
+
+    body = functools.partial(
+        _online_block, qq=qq, q_pos=q_pos, k_all=k_all, v_all=v_all, lut=lut,
+        m00=m00, sks=sk_ref[0], svs=sv_ref[0], score_scale=ss_ref[0],
+        pv_scale=pvs_ref[0], kv_start=kv_start, kv_len=kv_len, bq=bq, bk=bk,
+        seq_k_real=n_logical * bk, d_real=d_real, n_codes=n_codes,
+        offset=offset, lo=lo, hi=hi, causal=causal, window=window,
+        softcap=softcap, inner_d=inner_d, inner_k=inner_k, kv_blocks=pt)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, dp), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv_eff, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[...] = out[None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "d_real", "n_codes", "offset", "lo", "hi", "causal", "window", "softcap",
+    "bq", "bk", "rep", "inner_d", "inner_k", "interpret"))
+def approx_flash_attention_paged_kernel(q, k_pool, v_pool, lut_flat, rowinfo,
+                                        page_table, sqs, sks, svs,
+                                        score_scale, pv_scale, *,
+                                        d_real: int, n_codes: int,
+                                        offset: int, lo: int, hi: int,
+                                        causal: bool, window: int | None,
+                                        softcap: float | None, bq: int,
+                                        bk: int, rep: int, inner_d: int,
+                                        inner_k: int,
+                                        interpret: bool | None = None):
+    """Pre-padded paged entry: q (B*Hq, Sq_p, Dp) f32; ``k_pool``/``v_pool``
+    (Hkv, P*bk, Dp) — the physical block pool, one row per KV head, blocks
+    laid out back to back; ``rowinfo`` (B*Hq, 3) int32
+    ``[q_base, kv_start, kv_len]`` in *logical* coordinates; ``page_table``
+    (B*Hq, n_logical) int32 mapping each row's logical block to a physical
+    block index into the pool. Returns (B*Hq, Sq_p, Dp) float32."""
+    bh, sq_p, dp = q.shape
+    hkv, pool_len, _ = k_pool.shape
+    n_logical = page_table.shape[1]
+    assert page_table.shape[0] == bh and rowinfo.shape == (bh, 3)
+    assert sq_p % bq == 0 and pool_len % bk == 0, (sq_p, pool_len, bq, bk)
+    assert dp % inner_d == 0 and bk % inner_k == 0, (dp, inner_d, bk, inner_k)
+    grid = (bh, sq_p // bq)
+    scale_spec = pl.BlockSpec((1,), lambda b, i: (0,))
+    return pl.pallas_call(
+        functools.partial(_approx_paged_kernel, bq=bq, bk=bk,
+                          n_logical=n_logical, d_real=d_real,
+                          n_codes=n_codes, offset=offset, lo=lo, hi=hi,
+                          causal=causal, window=window, softcap=softcap,
+                          inner_d=inner_d, inner_k=inner_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dp), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, pool_len, dp),
+                         lambda b, i: ((b // rep) % hkv, 0, 0)),
+            pl.BlockSpec((1, pool_len, dp),
+                         lambda b, i: ((b // rep) % hkv, 0, 0)),
+            pl.BlockSpec((n_codes * n_codes,), lambda b, i: (0,)),
+            pl.BlockSpec((1, 3), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, n_logical), lambda b, i: (b, 0)),
+            scale_spec, scale_spec, scale_spec, scale_spec, scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, bq, dp), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_p, dp), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(q, k_pool, v_pool, lut_flat, rowinfo, page_table, sqs, sks, svs,
+      score_scale, pv_scale)
+
+
+def prepare_approx_attention_paged(q, k_pool, v_pool, lut, offset, q_scale,
+                                   k_scale, v_scale, *, bits: int, rowinfo,
+                                   page_table, bq: int):
+    """Shared padding/geometry/scale resolution for the paged kernel AND its
+    jnp oracle (mirror of :func:`prepare_approx_attention`). The KV block
+    size is fixed by the pool layout (``bk = pool block extent``), so only
+    q-side geometry adapts; the pool's head dim is padded to the gather
+    chunk exactly like the contiguous operands."""
+    n_codes = int(round(lut.size ** 0.5)) if lut.ndim == 1 else lut.shape[0]
+    lut_flat = jnp.asarray(lut).reshape(-1).astype(jnp.int32)
+    bh, sq, d = q.shape
+    hkv, n_phys, bk, _ = k_pool.shape
+    page_table = jnp.asarray(page_table, jnp.int32)
+    rowinfo = jnp.asarray(rowinfo, jnp.int32)
+    assert rowinfo.shape == (bh, 3), rowinfo.shape
+    assert page_table.shape[0] == bh, (page_table.shape, bh)
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    bq = min(bq, _round_up(sq, 8))
+    dp = _round_up(d, 16)
+    inner_d = 16
+    inner_k = next(x for x in (32, 16, 8, 4, 2, 1) if bk % x == 0)
+    sq_p = _round_up(sq, bq)
+    qf = jnp.asarray(q, jnp.float32)
+    kp = jnp.asarray(k_pool, jnp.float32).reshape(hkv, n_phys * bk, d)
+    vp = jnp.asarray(v_pool, jnp.float32).reshape(hkv, n_phys * bk, d)
+    if sq_p != sq or dp != d:
+        qf = jnp.pad(qf, ((0, 0), (0, sq_p - sq), (0, dp - d)))
+    if dp != d:
+        kp = jnp.pad(kp, ((0, 0), (0, 0), (0, dp - d)))
+        vp = jnp.pad(vp, ((0, 0), (0, 0), (0, dp - d)))
+    sqs = jnp.asarray(q_scale, jnp.float32).reshape(1)
+    sks = jnp.asarray(k_scale, jnp.float32).reshape(1)
+    svs = jnp.asarray(v_scale, jnp.float32).reshape(1)
+    score_scale, pv_scale = attn_scales(sqs, sks, svs, d, hi)
+    operands = (qf, kp, vp, lut_flat, rowinfo, page_table, sqs, sks, svs,
+                score_scale, pv_scale)
+    statics = dict(d_real=d, n_codes=n_codes, offset=offset, lo=lo, hi=hi,
+                   bq=bq, bk=bk, inner_d=inner_d, inner_k=inner_k)
+    return operands, statics
+
+
+def approx_flash_attention_paged(q, k_pool, v_pool, lut, offset, q_scale,
+                                 k_scale, v_scale, *, rowinfo, page_table,
+                                 rep: int, bits: int = 8, causal: bool = True,
+                                 window: int | None = None,
+                                 softcap: float | None = None, bq: int = 128,
+                                 interpret: bool | None = None):
+    """Approximate GQA flash attention over block-paged KV.
+
+    ``q``: (B*Hq, Sq, D) float; ``k_pool``/``v_pool``: (Hkv, P, bk, D) —
+    the physical KV block pool shared by every sequence (``P`` physical
+    blocks of ``bk`` positions each, per KV head); ``page_table``:
+    (B*Hq, n_logical) int32, each row mapping its logical KV blocks to
+    physical block indices (entries past the row's allocation should point
+    at an always-zero block so non-causal masks still see the contiguous
+    layout's zeros); ``rowinfo``: (B*Hq, 3) int32 logical
+    ``[q_base, kv_start, kv_len]`` — REQUIRED here, there is no full-pool
+    default that makes sense. ``rep = Hq // Hkv`` maps query row
+    ``b`` to pool row ``(b // rep) % Hkv``.
+
+    Bitwise-identical to ``approx_attention_paged_ref``, and to the
+    contiguous :func:`approx_flash_attention` at ``bk = block size`` when
+    the gathered blocks hold the same values as the contiguous layout.
+    """
+    sq, d = q.shape[1], q.shape[2]
+    operands, statics = prepare_approx_attention_paged(
+        q, k_pool, v_pool, lut, offset, q_scale, k_scale, v_scale,
+        bits=bits, rowinfo=rowinfo, page_table=page_table, bq=bq)
+    out = approx_flash_attention_paged_kernel(
+        *operands, causal=causal, window=window, softcap=softcap, rep=rep,
         interpret=interpret, **statics)
     return out[:, :sq, :d]

@@ -109,3 +109,73 @@ def approx_attention_ref(q, k, v, lut, offset, q_scale, k_scale, v_scale, *,
     out = _approx_ref_core(*operands, causal=causal, window=window,
                            softcap=softcap, **statics)
     return out[:, :sq, :d]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "d_real", "n_codes", "offset", "lo", "hi",
+    "bq", "bk", "rep", "inner_d", "inner_k"))
+def _approx_paged_ref_core(qp, kp, vp, lut_flat, info, page_table, sqs, sks,
+                           svs, score_scale, pv_scale, *, causal: bool,
+                           window: int | None, softcap: float | None,
+                           d_real: int, n_codes: int, offset: int, lo: int,
+                           hi: int, bq: int, bk: int, rep: int, inner_d: int,
+                           inner_k: int):
+    from .approx import NEG_INF, _online_block, _quantize_sym, \
+        causal_block_bound
+
+    bh, sq_p, dp = qp.shape
+    hkv = kp.shape[0]
+    n_logical = page_table.shape[1]
+    m00 = lut_flat[offset * n_codes + offset]
+    out_rows = []
+    for b in range(bh):
+        q_base, kv_start, kv_len = info[b, 0], info[b, 1], info[b, 2]
+        k_all = kp[(b // rep) % hkv]
+        v_all = vp[(b // rep) % hkv]
+        pt = page_table[b]
+        q_blocks = []
+        for qi in range(sq_p // bq):
+            qf = qp[b, qi * bq:(qi + 1) * bq].astype(jnp.float32)
+            qq = _quantize_sym(qf, sqs[0], lo, hi, offset)
+            q_pos = (q_base + qi * bq
+                     + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+            if causal:
+                n_kv_eff = causal_block_bound(q_base, qi, bq, bk, n_logical)
+            else:
+                n_kv_eff = n_logical
+            body = functools.partial(
+                _online_block, qq=qq, q_pos=q_pos, k_all=k_all, v_all=v_all,
+                lut=lut_flat, m00=m00, sks=sks[0], svs=svs[0],
+                score_scale=score_scale[0], pv_scale=pv_scale[0],
+                kv_start=kv_start, kv_len=kv_len, bq=bq, bk=bk,
+                seq_k_real=n_logical * bk, d_real=d_real, n_codes=n_codes,
+                offset=offset, lo=lo, hi=hi, causal=causal, window=window,
+                softcap=softcap, inner_d=inner_d, inner_k=inner_k,
+                kv_blocks=pt)
+            m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((bq,), jnp.float32)
+            acc0 = jnp.zeros((bq, dp), jnp.float32)
+            m, l, acc = jax.lax.fori_loop(0, n_kv_eff, body, (m0, l0, acc0))
+            q_blocks.append(acc / jnp.maximum(l, 1e-30)[:, None])
+        out_rows.append(jnp.concatenate(q_blocks, axis=0))
+    return jnp.stack(out_rows)
+
+
+def approx_attention_paged_ref(q, k_pool, v_pool, lut, offset, q_scale,
+                               k_scale, v_scale, *, rowinfo, page_table,
+                               rep: int, bits: int = 8, causal: bool = True,
+                               window: int | None = None,
+                               softcap: float | None = None, bq: int = 128):
+    """Unfused oracle for ``approx_flash_attention_paged`` — same operand
+    preparation (``prepare_approx_attention_paged``), same per-KV-block
+    update with the same ``kv_blocks`` page-table indirection, python
+    orchestration. Bitwise-identical output by construction."""
+    from .approx import prepare_approx_attention_paged
+
+    sq, d = q.shape[1], q.shape[2]
+    operands, statics = prepare_approx_attention_paged(
+        q, k_pool, v_pool, lut, offset, q_scale, k_scale, v_scale,
+        bits=bits, rowinfo=rowinfo, page_table=page_table, bq=bq)
+    out = _approx_paged_ref_core(*operands, causal=causal, window=window,
+                                 softcap=softcap, rep=rep, **statics)
+    return out[:, :sq, :d]

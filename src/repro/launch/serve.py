@@ -2,11 +2,17 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
         [--approx mul8s_1L2H:lut] [--requests 8] [--new-tokens 16] \
-        [--continuous] [--arrival-rate 0.5]
+        [--continuous | --paged] [--arrival-rate 0.5] \
+        [--block-size 16] [--hbm-budget BYTES]
 
 ``--continuous`` swaps the wave engine for slot-level continuous batching;
-``--arrival-rate`` (arrivals per decode step) replays a Poisson trace
-through it instead of firing every request at t=0.
+``--paged`` selects the paged-KV continuous engine (block pool + prefix
+reuse, docs/serving.md "Paged KV") and prints the resolved attention plan
+report plus the pool geometry. ``--block-size`` and ``--hbm-budget``
+(bytes; default = the contiguous engine's footprint for the same slots)
+shape the pool. ``--arrival-rate`` (arrivals per decode step,
+continuous/paged only) replays a Poisson trace instead of firing every
+request at t=0.
 """
 from __future__ import annotations
 
@@ -25,39 +31,69 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--continuous", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-KV continuous engine (implies slot-level "
+                         "scheduling; see docs/serving.md)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV block size in tokens (paged only; pow2 >= 8)")
+    ap.add_argument("--hbm-budget", type=int, default=None,
+                    help="KV pool budget in bytes (paged only; default = "
+                         "slots * max_seq contiguous footprint)")
     ap.add_argument("--arrival-rate", type=float, default=None,
-                    help="Poisson arrivals per decode step (continuous only)")
+                    help="Poisson arrivals per decode step "
+                         "(continuous/paged only)")
     args = ap.parse_args()
 
     from repro.configs import get_config, reduced_config
     from repro.launch.specs import make_acfg
     from repro.models.transformer import init_params
-    from repro.serve.engine import (ContinuousServeEngine, Request,
-                                    ServeEngine, poisson_arrivals)
+    from repro.serve.engine import (ContinuousServeEngine,
+                                    PagedContinuousServeEngine, Request,
+                                    ServeEngine, kv_block_bytes,
+                                    poisson_arrivals)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    cls = ContinuousServeEngine if args.continuous else ServeEngine
-    eng = cls(params, cfg, slots=args.slots, max_seq=256,
-              acfg=make_acfg(args.approx))
+    acfg = make_acfg(args.approx)
+    max_seq = 256
+    if args.paged:
+        eng = PagedContinuousServeEngine(
+            params, cfg, slots=args.slots, max_seq=max_seq,
+            block_size=args.block_size, acfg=acfg,
+            hbm_budget=args.hbm_budget)
+        bbytes = kv_block_bytes(cfg, args.block_size)
+        print(f"paged pool: {eng.n_blocks} blocks x {args.block_size} tok "
+              f"({bbytes} B/block, budget {eng.hbm_budget} B, "
+              f"{eng.n_logical} logical blocks/slot)")
+        if acfg is not None and acfg.acu is not None:
+            from repro.core.acu import AttnSpec, attn_plan
+            spec = AttnSpec(hq=cfg.n_heads, hkv=cfg.n_kv_heads,
+                            bk=args.block_size, kv_layout="paged")
+            plan = attn_plan(acfg.acu, spec, a_bits=acfg.a_bits, mesh=False)
+            for k, v in plan.describe().items():
+                print(f"attn_plan.{k}: {v}")
+    else:
+        cls = ContinuousServeEngine if args.continuous else ServeEngine
+        eng = cls(params, cfg, slots=args.slots, max_seq=max_seq, acfg=acfg)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(1, cfg.vocab_size,
                                         rng.integers(4, 12)).astype(np.int32),
                     max_new_tokens=args.new_tokens)
             for _ in range(args.requests)]
+    slotted = args.continuous or args.paged
     arrivals = None
     if args.arrival_rate is not None:
-        if not args.continuous:
-            ap.error("--arrival-rate needs --continuous")
+        if not slotted:
+            ap.error("--arrival-rate needs --continuous or --paged")
         arrivals = poisson_arrivals(len(reqs), args.arrival_rate, seed=0)
     import time
     t0 = time.monotonic()
-    done = eng.run(reqs, arrivals) if args.continuous else eng.run(reqs)
+    done = eng.run(reqs, arrivals) if slotted else eng.run(reqs)
     dt = time.monotonic() - t0
     n_tok = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s)")
-    if args.continuous:
+    if slotted:
         print(f"stats: {eng.stats}")
     for i, r in enumerate(done[:4]):
         print(f"req{i}: {list(r.prompt)[:6]}... -> {list(r.out)[:8]}...")

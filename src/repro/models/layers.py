@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.approx_ops import (ApproxConfig, approx_attention,
-                                   approx_dense, conv2d)
+                                   approx_attention_paged, approx_dense,
+                                   conv2d)
 from repro.parallel.sharding import shard
 
 Array = jnp.ndarray
@@ -220,13 +221,24 @@ def attention_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig],
                     positions: Array, *, kv: Optional[tuple] = None,
                     cache=None, cache_pos: Optional[Array] = None,
                     window: Optional[int] = None, causal: bool = True,
-                    pad_mask: Optional[Array] = None):
+                    pad_mask: Optional[Array] = None,
+                    page_table: Optional[Array] = None):
     """Full attention sub-layer: qkv proj -> rope -> attention -> out proj.
 
     ``cache``: optional (k_cache, v_cache) of shape (B, Smax, Hkv, D);
     returns (out, new_cache). ``kv``: cross-attention source (B, T, D).
     ``pad_mask``: (B, T) bool over the key length (the full cache when one is
     threaded) — False slots never contribute to any query.
+
+    ``page_table`` switches the cache to the block-paged layout: ``cache``
+    is then (k_pool, v_pool) of shape (Hkv, P, block, D) — a physical block
+    pool shared by every row — and ``page_table`` (B, n_logical) int32 maps
+    each row's logical KV blocks to pool blocks. New K/V append through the
+    table (decode: per-row scatter at ``cache_pos``; prefill: batch-1
+    block-aligned chunks of at most one block), attention reads through it
+    (fused paged kernel, or an exact gather fallback when the plan audits
+    to dense). No left-padding exists in the paged scheme, so ``pad_mask``
+    is ignored here.
     """
     b, s_len, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -252,6 +264,63 @@ def attention_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig],
     q = shard(q, "batch", None, "heads", None)
     k = shard(k, "batch", "seq_kv", "kv_heads", None)
     v = shard(v, "batch", "seq_kv", "kv_heads", None)
+
+    if page_table is not None:
+        assert cache is not None and kv is None, \
+            "paged KV needs a (k_pool, v_pool) self-attention cache"
+        kc, vc = cache
+        hkv_p, _, blk, _ = kc.shape
+        pt = jnp.asarray(page_table, jnp.int32)
+        pos = jnp.broadcast_to(
+            jnp.asarray(cache_pos, jnp.int32).reshape(-1), (b,))
+        if s_len == 1:
+            # decode: each row scatters its one new KV into its own tail
+            # block (CoW in the engine guarantees tail blocks are private)
+            phys = jnp.take_along_axis(pt, (pos // blk)[:, None], axis=1)[:, 0]
+            off = pos % blk
+            kc = kc.at[:, phys, off].set(
+                jnp.swapaxes(k[:, 0], 0, 1).astype(kc.dtype))
+            vc = vc.at[:, phys, off].set(
+                jnp.swapaxes(v[:, 0], 0, 1).astype(vc.dtype))
+        else:
+            # block-aligned chunked prefill: one request, one chunk starting
+            # on a block boundary and fitting inside a single block
+            assert b == 1 and s_len <= blk, (b, s_len, blk)
+            phys = pt[0, pos[0] // blk]
+            off = pos[0] % blk
+            kc = jax.lax.dynamic_update_slice(
+                kc, jnp.swapaxes(k[0], 0, 1)[:, None].astype(kc.dtype),
+                (0, phys, off, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, jnp.swapaxes(v[0], 0, 1)[:, None].astype(vc.dtype),
+                (0, phys, off, 0))
+        cache = (kc, vc)
+        rowinfo = jnp.stack([pos, jnp.zeros_like(pos), pos + s_len], axis=1)
+        fused = None
+        if acfg is not None and not acfg.fake_quant_only:
+            fused = approx_attention_paged(
+                q.transpose(0, 2, 1, 3), kc, vc, acfg, page_table=pt,
+                rowinfo=rowinfo, causal=causal, window=window,
+                softcap=cfg.softcap_attn)
+        if fused is not None:
+            out = fused.transpose(0, 2, 1, 3).astype(q.dtype)
+        else:
+            # exact fallback: gather the referenced blocks back into a
+            # contiguous (B, n_logical*block, Hkv, D) view — exact math is
+            # layout-independent, and positions >= kv_len are masked out
+            n_log = pt.shape[1]
+            kg = jnp.moveaxis(kc[:, pt].reshape(hkv_p, b, n_log * blk, hd),
+                              0, 2)
+            vg = jnp.moveaxis(vc[:, pt].reshape(hkv_p, b, n_log * blk, hd),
+                              0, 2)
+            pm = jnp.arange(n_log * blk)[None, :] < (pos + s_len)[:, None]
+            out = gqa_attention(q, kg, vg, causal=causal,
+                                softcap=cfg.softcap_attn, window=window,
+                                q_offset=pos, chunk=cfg.attn_chunk,
+                                impl=cfg.attn_impl, pad_mask=pm)
+        out = out.reshape(b, s_len, h * hd)
+        out = approx_dense(out, p["wo"], p.get("bo"), acfg)
+        return out, cache
 
     q_offset = 0
     if cache is not None:

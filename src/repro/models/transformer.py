@@ -191,7 +191,7 @@ def _norm(x, p, cfg: ModelConfig):
 
 
 def _apply_block(x, blk, kind, cfg, acfg, positions, cache, cache_pos, decode,
-                 pad_mask=None):
+                 pad_mask=None, page_table=None):
     """One layer; returns (x, new_cache_entry)."""
     new_cache = cache
     if kind.startswith("attn"):
@@ -200,7 +200,8 @@ def _apply_block(x, blk, kind, cfg, acfg, positions, cache, cache_pos, decode,
         attn_cache = cache["attn"] if cache is not None else None
         a, attn_cache = L.attention_block(
             h, blk["attn"], cfg, acfg, positions, cache=attn_cache,
-            cache_pos=cache_pos, window=window, pad_mask=pad_mask)
+            cache_pos=cache_pos, window=window, pad_mask=pad_mask,
+            page_table=page_table)
         if cfg.post_norm:
             a = _norm(a, blk["post_norm1"], cfg)
         if cfg.parallel_block:
@@ -242,7 +243,8 @@ def apply_model(params: dict, tokens: Array, cfg: ModelConfig, *,
                 acfg: Optional[ApproxConfig] = None, cache: Optional[dict] = None,
                 cache_pos: int | Array = 0, decode: bool = False,
                 last_only: bool = False, pos_offset: Optional[Array] = None,
-                pad_mask: Optional[Array] = None):
+                pad_mask: Optional[Array] = None,
+                page_table: Optional[Array] = None):
     """Token ids -> logits. With ``cache``, also threads KV/SSM state.
 
     cache: {"groups": pytree stacked (n_groups, ...)}; returns (logits, cache).
@@ -252,6 +254,11 @@ def apply_model(params: dict, tokens: Array, cfg: ModelConfig, *,
     sees positions 0..len-1 regardless of wave padding — and ``pad_mask``
     (B, T) over the key length so pad slots never contribute attention mass
     (attention layers only; recurrent blocks still ingest pads).
+
+    ``page_table`` (B, n_logical) int32 switches attention caches to the
+    block-paged layout (:func:`init_paged_cache`): one physical pool per
+    layer shared by all rows, the same table threaded to every attention
+    layer (the engine allocates blocks per slot, not per layer).
     """
     b, s = tokens.shape
     x = L.embed(tokens, params["embed"])
@@ -276,7 +283,7 @@ def apply_model(params: dict, tokens: Array, cfg: ModelConfig, *,
             blk_cache = None if gc is None else gc[f"b{i}"]
             x, blk_cache = _apply_block(x, gp[f"b{i}"], kind, cfg, acfg,
                                         positions, blk_cache, cache_pos, decode,
-                                        pad_mask)
+                                        pad_mask, page_table)
             if new_gc is not None:
                 new_gc = {**new_gc, f"b{i}": blk_cache}
         return x, new_gc
@@ -339,4 +346,31 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                 wkv=jnp.zeros((g, batch, cfg.rwkv_n_heads, hd, hd), jnp.float32),
                 cm_shift=jnp.zeros((g, batch, 1, cfg.d_model), dtype),
             )}
+    return {"groups": groups}
+
+
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     dtype=None) -> dict:
+    """Block-paged decode cache: per attention layer one physical pool
+    ``(n_groups, Hkv, n_blocks, block_size, head_dim)`` shared by every
+    sequence; rows address it through the ``page_table`` threaded into
+    :func:`apply_model`. Physical block 0 is the engine's permanently-zero
+    *null block* (page tables default to it, so unallocated logical blocks
+    gather zeros — matching what a contiguous cache holds past its fill).
+    Only attention layers page; recurrent state is O(1) per slot and keeps
+    its dense layout.
+    """
+    dtype = dtype or cfg.param_dtype
+    g = cfg.n_groups
+    groups = {}
+    for i, kind in enumerate(cfg.pattern):
+        if kind.startswith("attn"):
+            shape = (g, cfg.n_kv_heads, n_blocks, block_size, cfg.head_dim)
+            # distinct arrays: an aliased (pool, pool) pair breaks buffer
+            # donation in the serve engine's jitted steps
+            groups[f"b{i}"] = {"attn": (jnp.zeros(shape, dtype),
+                                        jnp.zeros(shape, dtype))}
+        else:
+            raise NotImplementedError("paged cache covers attention-only "
+                                      f"patterns; got {kind!r}")
     return {"groups": groups}

@@ -124,6 +124,69 @@ def wrap_attn(attn_call: Callable[..., Array], ctx: MeshContext,
     return fn
 
 
+def wrap_attn_paged(attn_call: Callable[..., Array], ctx: MeshContext,
+                    part: GemmPartition, *, hq: int, hkv: int
+                    ) -> Callable[..., Array]:
+    """Shard a paged approximate attention plan
+    ``fn(q, k_pool, v_pool, qs, ks, vs, rowinfo, page_table) ->
+    (B, Hq, Sq, D) f32``.
+
+    Same geometry as :func:`wrap_attn` — batch rows over ``part.rows``,
+    KV heads over ``part.cols`` in whole GQA groups, no collectives — with
+    the paged twists: the ``(Hkv, P, bk, D)`` physical pools shard over
+    ``part.cols`` on their head axis and REPLICATE over the row axes (every
+    batch shard reads the same pool), while the ``(B, n_logical)`` page
+    table shards with the batch rows like ``rowinfo`` and replicates over
+    the head axis — the table is head-independent by construction (one
+    pool row per KV head, same block ids). The local fold keeps the global
+    ``rep``: with ``hql = hq/n_cols`` local query heads and
+    ``hkv_loc = hkv/n_cols`` local pool rows, the kernel's
+    ``(b // rep) % hkv_loc`` lands each local query head on its own KV
+    head for every batch index. Padded batch rows carry rowinfo
+    ``[0, 0, 0]`` and an all-zeros page table (physical block 0 — the
+    engine's permanently-zero null block): every key masked, finite
+    garbage, sliced off here.
+    """
+    mesh = ctx.mesh
+    assert hq % hkv == 0 and hkv % part.n_cols == 0, (hq, hkv, part.n_cols)
+
+    def fn(q: Array, k_pool: Array, v_pool: Array, qs, ks, vs,
+           rowinfo: Array, page_table: Array) -> Array:
+        b = q.shape[0]
+        pb = (-b) % part.n_rows
+        if pb:
+            q = jnp.pad(q, ((0, pb), (0, 0), (0, 0), (0, 0)))
+            rowinfo = jnp.pad(rowinfo, ((0, pb), (0, 0)))
+            page_table = jnp.pad(page_table, ((0, pb), (0, 0)))
+        qs_a = jnp.asarray(qs, jnp.float32).reshape(1)
+        ks_a = jnp.asarray(ks, jnp.float32).reshape(1)
+        vs_a = jnp.asarray(vs, jnp.float32).reshape(1)
+
+        rows = part._dim(part.rows)
+        cols = part._dim(part.cols)
+
+        def local(q_blk, kp_blk, vp_blk, qs_b, ks_b, vs_b, info_blk, pt_blk):
+            bl, hql = q_blk.shape[0], q_blk.shape[1]
+            info = jnp.repeat(info_blk, hql, axis=0)     # (bl*hql, 3)
+            pt = jnp.repeat(pt_blk, hql, axis=0)         # (bl*hql, n_log)
+            out = attn_call(
+                q_blk.reshape(bl * hql, *q_blk.shape[2:]),
+                kp_blk, vp_blk, qs_b, ks_b, vs_b, info, pt)
+            return out.reshape(bl, hql, *out.shape[1:])
+
+        out = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(rows, cols, None, None),
+                      P(cols, None, None, None), P(cols, None, None, None),
+                      P(None), P(None), P(None),
+                      P(rows, None), P(rows, None)),
+            out_specs=P(rows, cols, None, None), check_rep=False,
+        )(q, k_pool, v_pool, qs_a, ks_a, vs_a, rowinfo, page_table)
+        return out[:b]
+
+    return fn
+
+
 def wrap_unfused(base_fn: Callable[[Array, Array], Array], ctx: MeshContext,
                  part: GemmPartition, m00: int) -> Callable[[Array, Array], Array]:
     """Shard an unfused integer-operand GEMM ``fn(a, w) -> acc``.

@@ -263,3 +263,202 @@ def test_sharded_attn_bit_exact(b, hq, hkv):
         plan = attn_plan(acu, spec)
         out = plan(q, k, v, *s)
     assert jnp.array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# paged KV: block-pool gather == contiguous layout, bitwise
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_attention.approx import approx_flash_attention_paged
+from repro.kernels.flash_attention.ref import approx_attention_paged_ref
+
+
+def _paged_setup(b, hkv, rep, sq, d, kv_lens, bk, seed=0):
+    """Contiguous per-row K/V plus the same values scattered into a shared
+    physical block pool through a shuffled per-row page table. Block 0 is
+    left unreferenced (the engine's null block)."""
+    rng = np.random.default_rng(seed)
+    hq = hkv * rep
+    n_logical = max(-(-kl // bk) for kl in kv_lens)
+    sk = n_logical * bk
+    q, k, v, s = _qkv(b * hq, sq, sk, d, b * hkv, seed=seed + 1)
+    n_phys = 1 + b * n_logical
+    phys = 1 + rng.permutation(b * n_logical).reshape(b, n_logical)
+    kp = np.zeros((hkv, n_phys, bk, d), np.float32)
+    vp = np.zeros((hkv, n_phys, bk, d), np.float32)
+    for bi in range(b):
+        for h in range(hkv):
+            for j in range(n_logical):
+                kp[h, phys[bi, j]] = k[bi * hkv + h, j * bk:(j + 1) * bk]
+                vp[h, phys[bi, j]] = v[bi * hkv + h, j * bk:(j + 1) * bk]
+    info = np.stack([np.repeat([kl - sq for kl in kv_lens], hq),
+                     np.zeros(b * hq, np.int64),
+                     np.repeat(kv_lens, hq)], axis=1).astype(np.int32)
+    pt = np.repeat(phys, hq, axis=0).astype(np.int32)
+    return (q, k, v, s, jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(info), jnp.asarray(pt))
+
+
+PAGED_CASES = [
+    # (b, hkv, rep, sq, d, kv_lens, causal, window, softcap, bq, bk)
+    (2, 2, 1, 1, 32, (48, 33), True, None, None, 32, 16),   # decode, partial
+    (1, 2, 2, 64, 32, (64,), True, None, None, 32, 32),     # prefill + GQA
+    (2, 1, 4, 1, 24, (17, 40), True, 9, 20.0, 32, 8),       # window+softcap
+    (3, 2, 2, 8, 16, (64, 23, 8), True, None, None, 32, 16),  # chunk rows
+    (2, 2, 2, 1, 32, (31, 64), False, None, None, 32, 16),  # non-causal
+]
+
+
+@pytest.mark.parametrize("b,hkv,rep,sq,d,kv_lens,causal,window,softcap,bq,bk",
+                         PAGED_CASES)
+def test_paged_matches_contiguous_and_oracle_bitwise(
+        b, hkv, rep, sq, d, kv_lens, causal, window, softcap, bq, bk):
+    """The tentpole contract: reading KV through a per-row page table over a
+    shared block pool is invisible — the paged kernel equals its unfused jnp
+    oracle AND the contiguous kernel on the gathered values, bit for bit,
+    across GQA, windows, partially-filled tail blocks and per-row extents."""
+    lut = _lut()
+    q, k, v, (qs, ks, vs), kp, vp, info, pt = _paged_setup(
+        b, hkv, rep, sq, d, kv_lens, bk, seed=sq + bk)
+    kw = dict(causal=causal, window=window, softcap=softcap)
+    out = approx_flash_attention_paged(q, kp, vp, lut, 128, qs, ks, vs,
+                                       rowinfo=info, page_table=pt, rep=rep,
+                                       bq=bq, **kw)
+    ref = approx_attention_paged_ref(q, kp, vp, lut, 128, qs, ks, vs,
+                                     rowinfo=info, page_table=pt, rep=rep,
+                                     bq=bq, **kw)
+    cont = approx_flash_attention(q, k, v, lut, 128, qs, ks, vs,
+                                  rowinfo=info, bq=bq, bk=bk, **kw)
+    assert out.shape == (b * hkv * rep, sq, d)
+    assert jnp.array_equal(out, ref), float(jnp.max(jnp.abs(out - ref)))
+    assert jnp.array_equal(out, cont), float(jnp.max(jnp.abs(out - cont)))
+
+
+def test_paged_outer_jit_bitwise():
+    """Embedding the paged kernel call in an outer jit (the paged engine's
+    decode step) must not perturb a single bit vs the direct call."""
+    lut = _lut()
+    b, hkv, rep, sq, d, bk = 2, 2, 2, 1, 32, 16
+    q, _, _, (qs, ks, vs), kp, vp, info, pt = _paged_setup(
+        b, hkv, rep, sq, d, (48, 33), bk, seed=21)
+    fn = lambda q, kp, vp, qs, ks, vs, info, pt: approx_flash_attention_paged(
+        q, kp, vp, lut, 128, qs, ks, vs, rowinfo=info, page_table=pt,
+        rep=rep, bq=32)
+    direct = fn(q, kp, vp, qs, ks, vs, info, pt)
+    jitted = jax.jit(fn)(q, kp, vp, qs, ks, vs, info, pt)
+    assert jnp.array_equal(direct, jitted)
+
+
+def test_paged_unreferenced_blocks_are_dead():
+    """Physical blocks no page table row points at (the null block) and pool
+    content past a row's kv_len must be unreachable: perturbing them cannot
+    change a single bit of the output."""
+    lut = _lut()
+    b, hkv, rep, sq, d, bk = 2, 2, 2, 1, 32, 16
+    q, _, _, (qs, ks, vs), kp, vp, info, pt = _paged_setup(
+        b, hkv, rep, sq, d, (33, 48), bk, seed=9)
+    kw = dict(rowinfo=info, page_table=pt, rep=rep, bq=32)
+    out = approx_flash_attention_paged(q, kp, vp, lut, 128, qs, ks, vs, **kw)
+    # null block (never referenced) + masked tail of row 0's last block
+    # (kv_len=33 -> only position 0 of logical block 2 is live)
+    tail_phys = int(pt[0, 2])
+    kp2 = kp.at[:, 0].set(99.0).at[:, tail_phys, 1:].set(-77.0)
+    vp2 = vp.at[:, 0].set(-99.0).at[:, tail_phys, 1:].set(77.0)
+    out2 = approx_flash_attention_paged(q, kp2, vp2, lut, 128, qs, ks, vs,
+                                        **kw)
+    assert jnp.array_equal(out[:hkv * rep], out2[:hkv * rep])
+
+
+def test_attn_plan_paged_routes_and_audits():
+    """kv_layout is a planning axis: paged specs route to fused_attn_paged,
+    audit to dense with a gather note when the ACU can't fuse, and honor /
+    reject route pins exactly like the contiguous axis."""
+    spec = AttnSpec(hq=8, hkv=2, kv_layout="paged", bk=16)
+    plan = attn_plan(make_acu(MULT, use_pallas=True), spec)
+    assert plan.route == "fused_attn_paged" and plan.fn is not None
+    d = plan.describe()
+    assert d["kv_layout"] == "paged (block=16)"
+
+    dense = attn_plan(make_acu(MULT), spec)          # no pallas -> dense
+    assert dense.route == "dense" and dense.fn is None
+    assert any("gathers pool blocks" in r for r in dense.report)
+    with pytest.raises(ValueError, match="route unavailable"):
+        attn_plan(make_acu(MULT), spec, route="fused_attn_paged")
+    # pinning the contiguous fused route on a paged spec is a mismatch
+    with pytest.raises(ValueError):
+        attn_plan(make_acu(MULT, use_pallas=True), spec, route="fused_attn")
+    with pytest.raises(ValueError, match="kv_layout"):
+        attn_plan(make_acu(MULT, use_pallas=True),
+                  AttnSpec(hq=8, hkv=2, kv_layout="ragged"))
+
+
+def test_attn_plan_paged_fn_matches_contiguous_plan():
+    """The paged plan's (B, Hq, S, D) fn == the contiguous plan on the same
+    values in a contiguous layout, bitwise — the pool indirection composes
+    with head folding and the plan-level reshapes."""
+    acu = make_acu(MULT, use_pallas=True)
+    b, hkv, rep, sq, d, bk = 2, 2, 2, 8, 16, 16
+    hq = hkv * rep
+    kv_lens = (64, 23)
+    q, k, v, s, kp, vp, info, pt = _paged_setup(b, hkv, rep, sq, d, kv_lens,
+                                                bk, seed=13)
+    qs4 = q.reshape(b, hq, sq, d)
+    sk = k.shape[1]
+    paged = attn_plan(acu, AttnSpec(hq=hq, hkv=hkv, bq=32, bk=bk,
+                                    kv_layout="paged"), mesh=False)
+    cont = attn_plan(acu, AttnSpec(hq=hq, hkv=hkv, bq=32, bk=bk), mesh=False)
+    # plan-level rowinfo/page_table are per batch row, not per folded head
+    info_b = info[::hq]
+    pt_b = pt[::hq]
+    out = paged(qs4, kp, vp, *s, info_b, pt_b)
+    ref = cont(qs4, k.reshape(b, hkv, sk, d), v.reshape(b, hkv, sk, d), *s,
+               info_b)
+    assert jnp.array_equal(out, ref)
+
+
+def test_approx_attention_paged_helper_routes():
+    """approx_ops.approx_attention_paged: fused plan -> output matching the
+    paged oracle with gathered-block scales, dense -> None."""
+    from repro.core.approx_ops import approx_attention_paged
+    b, hkv, rep, sq, d, bk = 1, 2, 2, 1, 16, 16
+    hq = hkv * rep
+    q, _, _, _, kp, vp, info, pt = _paged_setup(b, hkv, rep, sq, d, (20,),
+                                                bk, seed=17)
+    q4 = q.reshape(b, hq, sq, d)
+    info_b, pt_b = info[::hq], pt[::hq]
+    fused_cfg = ApproxConfig(acu=make_acu(MULT, use_pallas=True, fused=True))
+    out = approx_attention_paged(q4, kp, vp, fused_cfg, page_table=pt_b,
+                                 rowinfo=info_b)
+    assert out is not None and out.shape == (b, hq, sq, d)
+    dense_cfg = ApproxConfig(acu=make_acu(MULT))
+    assert approx_attention_paged(q4, kp, vp, dense_cfg, page_table=pt_b,
+                                  rowinfo=info_b) is None
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+@pytest.mark.parametrize("b,hq,hkv", [(4, 8, 4), (2, 4, 1), (3, 8, 2)])
+def test_sharded_paged_attn_bit_exact(b, hq, hkv):
+    """Paged plan under the 2x4 host mesh (batch rows over ("data",), KV
+    heads over ("model",), pool + page table replicated where needed) ==
+    the single-device paged plan bit for bit, batch/head counts that do not
+    divide the mesh axes included."""
+    from repro.launch.mesh import make_host_multi_mesh
+    from repro.parallel.sharding import use_mesh
+    mesh = make_host_multi_mesh((2, 4))
+    acu = make_acu(MULT, use_pallas=True)
+    rep = hq // hkv
+    bk = 16
+    kv_lens = tuple(17 + 11 * i for i in range(b))
+    q, _, _, s, kp, vp, info, pt = _paged_setup(b, hkv, rep, 1, 16, kv_lens,
+                                                bk, seed=b + hq)
+    q4 = q.reshape(b, hq, 1, 16)
+    info_b, pt_b = info[::hq], pt[::hq]
+    spec = AttnSpec(hq=hq, hkv=hkv, bq=32, bk=bk, kv_layout="paged")
+    ref = attn_plan(acu, spec, mesh=False)(q4, kp, vp, *s, info_b, pt_b)
+    with use_mesh(mesh):
+        plan = attn_plan(acu, spec)
+        assert plan.route == "fused_attn_paged"
+        out = plan(q4, kp, vp, *s, info_b, pt_b)
+    assert jnp.array_equal(out, ref)

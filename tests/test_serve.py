@@ -7,8 +7,9 @@ import pytest
 
 from repro.configs import reduced_config
 from repro.models.transformer import apply_model, init_cache, init_params
-from repro.serve.engine import (ContinuousServeEngine, Request, ServeEngine,
-                                poisson_arrivals)
+from repro.serve.engine import (ContinuousServeEngine,
+                                PagedContinuousServeEngine, Request,
+                                ServeEngine, kv_block_bytes, poisson_arrivals)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -203,6 +204,157 @@ def test_continuous_approx_matches_straightline_decode():
                                 acfg=acfg)
     done = eng.run(_reqs([(prompt, n_new)]))
     assert list(done[0].out) == ref
+
+
+# ---------------------------------------------------------------------------
+# paged KV + prefix reuse
+# ---------------------------------------------------------------------------
+
+def _fused_acfg():
+    from repro.core.acu import make_acu
+    from repro.core.approx_ops import ApproxConfig
+    return ApproxConfig(acu=make_acu("mul8s_1L2H", use_pallas=True,
+                                     fused=True))
+
+
+def test_paged_matches_reference_exact():
+    """Paged scheduling (block pool, chunked prefill, per-slot page tables)
+    is invisible on the exact path: greedy tokens equal the incremental
+    per-sequence reference, mixed prompt lengths included."""
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    specs = [([5, 17, 3, 99], 6), ([7, 11, 2], 4),
+             ([5, 17, 3, 99, 23, 41, 8, 1, 64, 12], 5), ([9, 9], 7)]
+    eng = PagedContinuousServeEngine(params, cfg, slots=2, max_seq=32,
+                                     block_size=8)
+    done = eng.run(_reqs(specs))
+    for (p, n), r in zip(specs, done):
+        assert list(r.out) == greedy_reference(
+            params, cfg, np.asarray(p, np.int32), n)
+    assert eng.stats["tokens"] == sum(n for _, n in specs)
+
+
+def test_paged_prefix_reuse_bitwise():
+    """The prefix-cache contract on the ACU route: a warm admission (full or
+    partial prefix hit) emits tokens bit-identical to a cold run in a fresh
+    engine — shared blocks hold exactly the KV a cold prefill would write,
+    and the CoW'd full-prompt tail snapshot replays the cached first token."""
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    acfg = _fused_acfg()
+    rng = np.random.default_rng(2)
+    base = rng.integers(1, cfg.vocab_size, 20).astype(np.int32).tolist()
+    ext = base + rng.integers(1, cfg.vocab_size, 5).astype(np.int32).tolist()
+
+    def mk():
+        return PagedContinuousServeEngine(params, cfg, slots=2, max_seq=64,
+                                          block_size=8, acfg=acfg)
+
+    cold_a = list(mk().run(_reqs([(base, 6)]))[0].out)
+    cold_b = list(mk().run(_reqs([(ext, 6)]))[0].out)
+    eng = mk()
+    done = eng.run(_reqs([(base, 6), (base, 6), (ext, 6)]))
+    assert list(done[0].out) == cold_a
+    assert list(done[1].out) == cold_a          # full-prompt hit: zero prefill
+    assert list(done[2].out) == cold_b          # partial hit: replayed tail
+    assert eng.stats["full_prompt_hits"] == 1
+    assert eng.stats["prefix_hit_blocks"] > 0
+
+
+def test_over_length_rejected_both_engines():
+    """Regression: a prompt longer than max_seq must be rejected at
+    admission with an empty output (not crash an assert mid-run), and must
+    not disturb the requests sharing its batch."""
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    ok = [5, 17, 3]
+    ref = greedy_reference(params, cfg, np.asarray(ok, np.int32), 4)
+    too_long = np.arange(1, 20, dtype=np.int32)     # 19 > max_seq = 16
+    for mk in (lambda: ContinuousServeEngine(params, cfg, slots=2,
+                                             max_seq=16),
+               lambda: PagedContinuousServeEngine(params, cfg, slots=2,
+                                                  max_seq=16, block_size=8)):
+        eng = mk()
+        done = eng.run([Request(prompt=too_long, max_new_tokens=4),
+                        Request(prompt=np.asarray(ok, np.int32),
+                                max_new_tokens=4)])
+        assert len(done[0].out) == 0
+        assert eng.stats["rejected"] == 1
+        assert list(done[1].out) == ref
+
+
+def test_paged_preemption_resumes_exactly():
+    """Memory pressure: when the pool cannot grow a decoding row, the
+    youngest request is preempted keeping its emitted tokens and re-queued
+    with prompt+emitted — greedy decode is deterministic, so every output
+    still equals the never-preempted reference."""
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(1, cfg.vocab_size, 15).astype(np.int32)
+               for _ in range(4)]
+    refs = [greedy_reference(params, cfg, p, 20) for p in prompts]
+    # 7 blocks total = null + scratch + 5 usable; each finished request
+    # spans 5 blocks (35 tokens / 8), so two slots cannot both finish
+    # without preempting
+    eng = PagedContinuousServeEngine(
+        params, cfg, slots=2, max_seq=40, block_size=8, prefix_cache=False,
+        hbm_budget=7 * kv_block_bytes(cfg, 8))
+    done = eng.run([Request(prompt=p, max_new_tokens=20) for p in prompts])
+    for r, ref in zip(done, refs):
+        assert list(r.out) == ref
+    assert eng.stats["preemptions"] > 0
+
+
+def test_paged_packs_more_rows_than_contiguous():
+    """The point of paging: under the HBM budget of two contiguous rows, the
+    paged engine still serves four short requests concurrently (occupancy
+    above two slots) because rows only pin the blocks they actually use."""
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    budget = 2 * (64 // 8) * kv_block_bytes(cfg, 8)
+    eng = PagedContinuousServeEngine(params, cfg, slots=4, max_seq=64,
+                                     block_size=8, hbm_budget=budget)
+    specs = [([i + 1, i + 2, i + 3], 6) for i in range(4)]
+    done = eng.run(_reqs(specs))
+    for (p, n), r in zip(specs, done):
+        assert list(r.out) == greedy_reference(
+            params, cfg, np.asarray(p, np.int32), n)
+    assert eng.stats["occupancy"] > 2.0
+    assert eng.stats["peak_blocks"] <= 2 * (64 // 8)
+
+
+@pytest.mark.tier2
+def test_paged_memory_pressure_trace():
+    """Long staggered trace under real pressure on the ACU route: 10
+    requests sharing a 32-token prefix against a budget of two contiguous
+    rows for four slots — evictions and preemptions fire, yet every request
+    gets its exact budget and the shared prefix keeps hitting."""
+    cfg = reduced_config("smollm-135m")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(6)
+    shared = rng.integers(1, cfg.vocab_size, 32).astype(np.int32)
+    reqs = [Request(prompt=np.concatenate(
+                [shared, rng.integers(1, cfg.vocab_size, 4).astype(np.int32)]),
+                    max_new_tokens=8) for _ in range(10)]
+    budget = 2 * (64 // 8) * kv_block_bytes(cfg, 8)
+    eng = PagedContinuousServeEngine(params, cfg, slots=4, max_seq=64,
+                                     block_size=8, acfg=_fused_acfg(),
+                                     hbm_budget=budget)
+    done = eng.run(reqs, arrivals=poisson_arrivals(len(reqs), rate=0.5,
+                                                   seed=7))
+    assert all(len(r.out) == 8 for r in done)
+    assert eng.stats["prefix_hit_rate"] > 0.3
+    assert eng.stats["peak_blocks"] <= 2 * (64 // 8)
+    # determinism under pressure: same trace, fresh engine, same tokens
+    reqs2 = [Request(prompt=r.prompt, max_new_tokens=8) for r in reqs]
+    eng2 = PagedContinuousServeEngine(params, cfg, slots=4, max_seq=64,
+                                      block_size=8, acfg=_fused_acfg(),
+                                      hbm_budget=budget)
+    done2 = eng2.run(reqs2, arrivals=poisson_arrivals(len(reqs), rate=0.5,
+                                                      seed=7))
+    for a, b in zip(done, done2):
+        assert list(a.out) == list(b.out)
 
 
 @pytest.mark.tier2
