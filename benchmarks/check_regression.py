@@ -1,6 +1,6 @@
 """Benchmark regression gate for the adapt-bench-v1 trajectory.
 
-``python benchmarks/check_regression.py [OLD.json NEW.json] [--tol 0.10]``
+``python benchmarks/check_regression.py [OLD.json NEW.json] [--tol 0.25]``
 
 With no positional args, compares the two newest committed ``BENCH_PR<n>.json``
 records at the repo root (sorted by ``n``), so the gate self-maintains as PRs
@@ -44,6 +44,14 @@ new record is more than ``tol`` slower than the old record's:
   ``speedup_vs_wave >= 1.25``: slot-level admission/eviction must keep
   beating the wave scheduler on the skewed request mix by a real margin,
   or continuous batching has silently stopped paying for its complexity;
+* the ``train`` section's ``recovery_damped`` row (gradient-noise batch
+  damping, docs/training.md) — within-record floor from PR 9 on:
+  ``sample_efficiency >= 1.0``, i.e. the damped QAT recovery reaches the
+  fixed-batch run's final recovered accuracy using no more samples than
+  the fixed batch consumed (the whole point of the schedule; a damped run
+  that never reaches it records 0.0 and fails). These rows carry accuracy
+  curves, not timings, so they are deliberately NOT in the trajectory
+  (us_per_call) gate list;
 * the ``serve`` section's ``serve_paged`` row (paged KV + prefix reuse
   under a fixed HBM budget, docs/serving.md "Paged KV") — trajectory-gated
   µs per generated token from PR 8 on, with two within-record floors:
@@ -56,6 +64,17 @@ new record is more than ``tol`` slower than the old record's:
 Records are only comparable within the same host/backend pair; the committed
 series is produced on the dev container, so CI gates on the committed files
 rather than re-timing on shared runners.
+
+The default ``--tol`` is set to the dev container's *measured* same-code
+noise floor, not to wishful precision: re-timing the bit-identical PR 8
+commit against its own committed record showed individual rows drifting
+1.15-1.25x (conv_tiled@224: 2.00M -> 2.32M us) and the attn prefill row up
+to 1.4x across a day — the VM's effective CPU speed has minutes-scale modes
+that min-of-reps timing cannot average away. A tolerance below that floor
+just converts host noise into gate alarms. The *within-record* floors below
+are unaffected (both sides of each floor are timed in the same run, so host
+drift cancels) — they remain the tight invariants; the trajectory gate
+catches real (> noise) de-optimizations and entries silently vanishing.
 """
 from __future__ import annotations
 
@@ -107,6 +126,8 @@ FLOORS = [
      {"mode": "serve_paged"}, "speedup_vs_contiguous", 1.0),
     ("serve.paged prefix cache hitting", "serve",
      {"mode": "serve_paged"}, "prefix_hit_rate", 0.1),
+    ("train.recovery damped vs fixed-batch samples", "train",
+     {"mode": "recovery_damped"}, "sample_efficiency", 1.0),
 ]
 
 
@@ -133,8 +154,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("old", nargs="?")
     ap.add_argument("new", nargs="?")
-    ap.add_argument("--tol", type=float, default=0.10,
-                    help="allowed fractional slowdown (default 10%%)")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed fractional slowdown (default 25%% — the "
+                         "dev container's measured same-code noise floor, "
+                         "see module docstring)")
     args = ap.parse_args(argv)
     if args.old is None or args.new is None:
         args.old, args.new = latest_pair()

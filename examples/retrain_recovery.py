@@ -147,13 +147,83 @@ def fused_bwd_qat_step(acu_name: str):
     print(f"loss {l0:.5f} -> {float(loss(w)):.5f} after one fused-bwd step")
 
 
+def damped_recovery_flow(acu_name: str):
+    """Mesh-wide damped QAT recovery (docs/training.md): drop a pretrained
+    CNN onto a lossy ACU, then recover through the fused approximate
+    backward twice with the fault-tolerant ``Trainer`` — once at a fixed
+    large batch, once with gradient-noise batch damping growing the
+    effective batch from a quarter of it. Runs data-parallel on the 2x4
+    host mesh (int8 error-feedback compressed psum) when 8 devices are
+    available, single-device otherwise."""
+    from repro.optim.adamw import SGD
+    from repro.optim.damping import DampingConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    mesh = None
+    if len(jax.devices()) >= 8:
+        from repro.launch.mesh import make_host_multi_mesh
+        mesh = make_host_multi_mesh((2, 4))
+    print(f"\n=== damped mesh-wide recovery x {acu_name} "
+          f"(mesh={'2x4' if mesh is not None else 'single-device'}) ===")
+
+    task0 = image_task(n_classes=4, size=8)
+    task = lambda b, seed: task0(b, noise=0.55, seed=seed)
+    params = init_cnn(KEY, n_classes=4, width=8, img=8)
+    apx = ApproxConfig(acu=make_acu(acu_name, AcuMode.LUT, use_pallas=True,
+                                    fused=True), approx_bwd=True)
+
+    def xent(p, b, acfg=None):
+        logits = cnn_forward(p, b["image"], acfg)
+        return (jax.nn.logsumexp(logits, -1) -
+                jnp.take_along_axis(logits, b["label"][:, None], -1)[:, 0]
+                ).mean()
+
+    pre = jax.jit(lambda p, b: jax.tree.map(
+        lambda w, g: w - 3e-3 * g, p, jax.grad(xent)(p, b)))
+    it = iter(task(64, seed=1))
+    for _ in range(60):
+        b = next(it)
+        params = pre(params, {k: jnp.asarray(v) for k, v in b.items()})
+
+    eb = next(iter(task(256, seed=99)))
+    eimg, elab = jnp.asarray(eb["image"]), jnp.asarray(eb["label"])
+    acc = jax.jit(lambda p: jnp.mean(
+        jnp.argmax(cnn_forward(p, eimg, apx), -1) == elab))
+    print(f"dropped onto {acu_name}: acc {float(acc(params)):.3f}")
+
+    def recover(damping, batch, n_steps):
+        tr = Trainer(lambda p, b: xent(p, b, apx), SGD(lr=3e-3),
+                     TrainerConfig(mesh=mesh, log_every=10**9,
+                                   damping=damping), donate=False)
+        p0 = jax.tree.map(jnp.copy, params)
+        p, _ = tr.fit(p0, SGD(lr=3e-3).init(p0),
+                      ({k: jnp.asarray(v) for k, v in bt.items()}
+                       for bt in task(batch, seed=2)), n_steps)
+        return p, tr
+
+    p_fix, tr_fix = recover(None, 32, 40)
+    print(f"fixed batch=32, 40 steps ({tr_fix.consumed * 32} samples): "
+          f"acc {float(acc(p_fix)):.3f}")
+    p_dmp, tr_dmp = recover(
+        DampingConfig(accum_max=4, warmup_updates=2, ema=0.5), 8, 60)
+    print(f"damped batch=8->accum {tr_dmp.damp_state.accum}x, 60 steps "
+          f"({tr_dmp.consumed * 8} samples): acc {float(acc(p_dmp)):.3f} "
+          f"(B_noise~{tr_dmp.damp_state.b_noise:.0f})")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--acu", default="mul8s_1L2H")
     ap.add_argument("--skip-imagenet-scale", action="store_true",
                     help="skip the 224^2 fused-backward QAT step")
+    ap.add_argument("--damped-acu", default="mul8s_trunc3",
+                    help="lossy ACU for the damped mesh-wide recovery demo")
+    ap.add_argument("--skip-damped", action="store_true",
+                    help="skip the damped mesh-wide recovery demo")
     args = ap.parse_args()
     cnn_flow(args.acu)
     lstm_flow(args.acu)
     if not args.skip_imagenet_scale:
         fused_bwd_qat_step(args.acu)
+    if not args.skip_damped:
+        damped_recovery_flow(args.damped_acu)

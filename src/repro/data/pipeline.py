@@ -126,31 +126,75 @@ def shard_batch(batch: dict, sharding=None) -> dict:
 
 class Prefetcher:
     """Bounded-depth background prefetch: a persistently slow producer can
-    never stall consumers by more than ``depth`` steps (straggler bound)."""
+    never stall consumers by more than ``depth`` steps (straggler bound).
+
+    Producer exceptions propagate: the daemon thread enqueues the exception
+    as a sentinel item and ``__next__`` re-raises it on the consumer thread
+    (it used to die silently in the thread, leaving ``__next__`` blocked on
+    ``q.get()`` forever). Exhaustion likewise flows through as a sentinel ->
+    ``StopIteration``. ``close()`` reliably unblocks a producer stuck on a
+    full queue: the producer only ever waits on ``put`` with a timeout and
+    re-checks the stop flag, and ``close`` drains the queue until the thread
+    exits.
+    """
+
+    _END = object()
 
     def __init__(self, it: Iterator[dict], depth: int = 2, sharding=None):
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self.it = it
         self.sharding = sharding
         self._stop = threading.Event()
+        self._err: BaseException | None = None
+        self._done = False
         self.t = threading.Thread(target=self._run, daemon=True)
         self.t.start()
 
+    def _put(self, item) -> bool:
+        """Stop-aware bounded put; False when the prefetcher was closed."""
+        while not self._stop.is_set():
+            try:
+                self.q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _run(self):
-        for b in self.it:
-            if self._stop.is_set():
-                return
-            self.q.put(shard_batch(b, self.sharding))
+        try:
+            for b in self.it:
+                if self._stop.is_set():
+                    return
+                if not self._put(("item", shard_batch(b, self.sharding))):
+                    return
+        except BaseException as e:  # noqa: BLE001 — must reach the consumer
+            self._put(("error", e))
+        else:
+            self._put(("end", None))
 
     def __iter__(self):
         return self
 
     def __next__(self) -> dict:
-        return self.q.get()
+        if self._err is not None:
+            raise self._err
+        if self._done:
+            raise StopIteration
+        kind, val = self.q.get()
+        if kind == "item":
+            return val
+        if kind == "error":
+            self._err = val
+            raise val
+        self._done = True
+        raise StopIteration
 
     def close(self):
         self._stop.set()
-        try:
-            self.q.get_nowait()
-        except queue.Empty:
-            pass
+        # drain so a producer blocked on a full queue sees the stop flag
+        while self.t.is_alive():
+            try:
+                self.q.get_nowait()
+            except queue.Empty:
+                pass
+            self.t.join(timeout=0.05)

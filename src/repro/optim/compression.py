@@ -38,8 +38,15 @@ def compress(g: jnp.ndarray, amax: jnp.ndarray | None = None
     g = g.astype(jnp.float32)
     if amax is None:
         amax = jnp.max(jnp.abs(g))
-    scale = jnp.maximum(amax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    bound = jnp.maximum(amax, 1e-12)
+    scale = bound * (1.0 / 127.0)   # multiply form: see inv_scale note below
+    # quantize by MULTIPLYING with the inverse scale, not dividing by scale:
+    # XLA fusion rewrites x/s to x*(1/s) in some contexts, so a divide-form
+    # code can flip at rounding boundaries between the eager and jitted
+    # paths — the multiply form lowers identically everywhere, which the
+    # sharded==single-device bitwise pins (tests/test_damping.py) rely on.
+    inv_scale = 127.0 / bound
+    q = jnp.clip(jnp.round(g * inv_scale), -127, 127).astype(jnp.int8)
     return q, scale
 
 
@@ -47,7 +54,7 @@ def decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     return q.astype(jnp.float32) * scale
 
 
-def compressed_psum(grads, ef: EFState, axis_name: str):
+def compressed_psum(grads, ef: EFState, axis_name, *, with_stats: bool = False):
     """Error-feedback int8 all-reduce over ``axis_name`` (inside shard_map).
 
     Scales are psum-maxed first so codes are commensurable across workers;
@@ -55,19 +62,45 @@ def compressed_psum(grads, ef: EFState, axis_name: str):
     :func:`compress`/:func:`decompress` pair as the standalone API, so the
     wire format is actual int8 codes and the round-trip bound proven by the
     standalone tests holds verbatim inside the psum path.
+
+    The collective sums the INT32-widened codes and applies ``scale / n``
+    once afterwards: integer addition is associative, so the psum'd mean is
+    bitwise independent of the reduction order (the float-psum-of-decompressed
+    form it replaces was not) — this is what lets the damped mesh step match
+    a single-device oracle exactly (optim/damping.py). It also quarters the
+    wire bytes relative to psumming decompressed fp32.
+
+    ``with_stats=True`` additionally returns a :class:`~repro.optim.damping.
+    NoiseStats`-shaped dict of free gradient-noise statistics: the mean
+    per-worker |g|^2 (RAW shard gradients, before the residual is folded
+    in), the |mean|^2 of the transmitted mean, and the mean residual energy
+    — the small/large-batch estimator pair plus the second noise signal,
+    with no extra gradient passes and only two extra scalar psums.
     """
+    n = jax.lax.psum(1.0, axis_name)
+
     def one(g, r):
-        g = g.astype(jnp.float32) + r
+        g_raw = g.astype(jnp.float32)
+        g = g_raw + r
         amax = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name)
         q, scale = compress(g, amax)
-        sent = decompress(q, scale)
-        new_r = g - sent
-        summed = jax.lax.psum(sent, axis_name) / jax.lax.psum(1.0, axis_name)
-        return summed, new_r
+        new_r = g - decompress(q, scale)
+        q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        summed = q_sum.astype(jnp.float32) * (scale / n)
+        return summed, new_r, g_raw
 
     flat_g, tdef = jax.tree.flatten(grads)
     flat_r = jax.tree.leaves(ef.residual)
     out = [one(g, r) for g, r in zip(flat_g, flat_r)]
     summed = tdef.unflatten([o[0] for o in out])
     resid = tdef.unflatten([o[1] for o in out])
-    return summed, EFState(residual=resid)
+    new_ef = EFState(residual=resid)
+    if not with_stats:
+        return summed, new_ef
+    sq = lambda leaves: sum(jnp.sum(jnp.square(x)) for x in leaves)
+    stats = {
+        "gsq_small": jax.lax.psum(sq([o[2] for o in out]), axis_name) / n,
+        "gsq_big": sq([o[0] for o in out]),
+        "resid_sq": jax.lax.psum(sq([o[1] for o in out]), axis_name) / n,
+    }
+    return summed, new_ef, stats

@@ -1,0 +1,192 @@
+"""Gradient-noise batch damping for QAT recovery (the adadamp regime).
+
+Approximate gradients are noisy early in recovery: the ACU's multiplier error
+acts as extra per-sample gradient noise on top of sampling noise, and both
+shrink as the model adapts to the approximate forward/backward. Following
+McCandlish et al. ("An Empirical Model of Large-Batch Training") and adadamp,
+the *gradient noise scale*
+
+    B_noise = S / |G|^2,   with   E[|G_B|^2] = |G|^2 + S / B
+
+is the batch size at which sampling noise stops dominating; training is
+sample-efficient while the effective batch tracks ~B_noise. The two-point
+estimator needs gradient norms at two batch sizes (B_small < B_big):
+
+    |G|^2 ~= (B_big |G_big|^2 - B_small |G_small|^2) / (B_big - B_small)
+    S     ~= (|G_small|^2 - |G_big|^2) / (1/B_small - 1/B_big)
+
+Both pairs are FREE in this codebase — no extra gradient passes:
+
+* the microbatch ``lax.scan`` in ``train/trainer.py`` already holds each
+  per-microbatch gradient before accumulating it (B_small = microbatch rows,
+  B_big = full accumulated batch);
+* the mesh's ``compressed_psum`` (``optim/compression.py``) already holds
+  each worker's local shard gradient next to the psum'd mean (B_small =
+  shard rows, B_big = global batch) — ``compressed_psum(..., with_stats=
+  True)`` exports exactly that pair;
+* the error-feedback residual energy from the same psum is a second noise
+  signal: what int8 dropped this step is gradient content the optimizer has
+  not seen yet, so it blends into S with ``DampingConfig.residual_weight``.
+
+The schedule side is deliberately host-side and integer-valued: the trainer
+grows its accumulation factor (whole data batches per optimizer step), so
+every distinct effective batch is one more jit cache entry, not a recompile
+per step. State round-trips through the checkpoint manifest ``extra`` as
+plain JSON so a kill-and-resume replays the identical schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_sqnorm(tree) -> jnp.ndarray:
+    """Sum of squared entries over every leaf (fp32)."""
+    return sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+               for g in jax.tree.leaves(tree))
+
+
+class NoiseStats(NamedTuple):
+    """One step's raw small/large-batch gradient-norm pair.
+
+    ``gsq_small`` is the MEAN over the small-batch estimates (microbatches or
+    workers) of |g_i|^2; ``gsq_big`` is |mean_i g_i|^2; ``resid_sq`` is the
+    error-feedback residual energy (0 when compression is off).
+    """
+
+    gsq_small: jnp.ndarray
+    gsq_big: jnp.ndarray
+    b_small: int
+    b_big: int
+    resid_sq: jnp.ndarray = jnp.float32(0.0)
+
+
+def noise_scale(gsq_small: float, gsq_big: float, b_small: int, b_big: int
+                ) -> tuple[float, float]:
+    """Unbiased (S, |G|^2) estimates from a two-batch-size norm pair.
+
+    Per-step estimates are noisy and either can go negative — consumers EMA
+    them separately (``DampingState``) and clamp only at the ratio.
+    """
+    assert b_big > b_small > 0, (b_small, b_big)
+    g2 = (b_big * gsq_big - b_small * gsq_small) / (b_big - b_small)
+    s = (gsq_small - gsq_big) / (1.0 / b_small - 1.0 / b_big)
+    return float(s), float(g2)
+
+
+def microbatch_noise_stats(micro_sqsum: jnp.ndarray, grads_mean,
+                           b_small: int, b_big: int) -> NoiseStats:
+    """Stats from the trainer's accumulation scan: ``micro_sqsum`` is the
+    scan-accumulated sum of per-microbatch |g_i|^2 over ``n`` microbatches
+    (so mean = sum / n with n = b_big // b_small)."""
+    n = b_big // b_small
+    return NoiseStats(gsq_small=micro_sqsum / n,
+                      gsq_big=tree_sqnorm(grads_mean),
+                      b_small=b_small, b_big=b_big)
+
+
+# ---------------------------------------------------------------------------
+# schedule
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DampingConfig:
+    """Batch-damping policy. ``accum`` counts whole data batches folded into
+    one optimizer step, so effective batch = accum * batch_size."""
+
+    accum_min: int = 1
+    accum_max: int = 16
+    ema: float = 0.8              # EMA decay for the S and |G|^2 estimates
+    check_every: int = 1          # steps between schedule updates
+    warmup_updates: int = 2       # estimates folded in before first growth
+    grow_only: bool = True        # monotone schedule (QAT recovery posture)
+    max_growth: int = 2           # accum can at most double per update
+    residual_weight: float = 0.0  # EF residual energy blended into S
+    target_frac: float = 1.0      # aim effective batch = frac * B_noise
+
+
+@dataclasses.dataclass
+class DampingState:
+    """EMA'd noise estimates + the current integer schedule position.
+
+    JSON-plain on purpose: ``to_dict``/``from_dict`` round-trip through the
+    checkpoint manifest ``extra`` so a resumed run replays the exact
+    schedule (bitwise: the fields are Python floats, not arrays).
+    """
+
+    accum: int = 1
+    updates: int = 0
+    ema_s: float = 0.0
+    ema_g2: float = 0.0
+    ema_resid: float = 0.0
+    b_noise: float = 0.0          # last smoothed S/|G|^2 (diagnostics)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DampingState":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+
+def init_state(cfg: DampingConfig) -> DampingState:
+    return DampingState(accum=cfg.accum_min)
+
+
+def update_state(state: DampingState, cfg: DampingConfig, stats: NoiseStats,
+                 batch_size: int) -> DampingState:
+    """Fold one step's stats into the EMAs and move the integer schedule.
+
+    Host-side float math on host-side floats: given identical stats the
+    transition is deterministic, which is what makes the damped schedule
+    checkpoint-replayable.
+    """
+    s, g2 = noise_scale(float(stats.gsq_small), float(stats.gsq_big),
+                        int(stats.b_small), int(stats.b_big))
+    resid = float(stats.resid_sq)
+    if cfg.residual_weight:
+        # what int8 dropped is gradient content the step didn't apply —
+        # count it as extra per-sample noise at the small batch size
+        s = s + cfg.residual_weight * resid * int(stats.b_small)
+    k = state.updates + 1
+    # debiased EMA (Adam-style) so early estimates aren't pulled toward 0
+    ema_s = cfg.ema * state.ema_s + (1 - cfg.ema) * s
+    ema_g2 = cfg.ema * state.ema_g2 + (1 - cfg.ema) * g2
+    ema_resid = cfg.ema * state.ema_resid + (1 - cfg.ema) * resid
+    bias = 1.0 - cfg.ema ** k
+    b_noise = max(ema_s / bias, 0.0) / max(ema_g2 / bias, 1e-20)
+
+    accum = state.accum
+    if k >= cfg.warmup_updates:
+        want = cfg.target_frac * b_noise / max(batch_size, 1)
+        target = int(min(max(round(want), cfg.accum_min), cfg.accum_max))
+        if target > state.accum:                      # rate-limited growth
+            accum = min(target, state.accum * cfg.max_growth)
+        elif target < state.accum and not cfg.grow_only:
+            accum = max(target, state.accum // cfg.max_growth, cfg.accum_min)
+    return DampingState(accum=accum, updates=k, ema_s=ema_s, ema_g2=ema_g2,
+                        ema_resid=ema_resid, b_noise=b_noise)
+
+
+# ---------------------------------------------------------------------------
+# mesh-side stats (see also compressed_psum(with_stats=True))
+# ---------------------------------------------------------------------------
+
+def shard_noise_stats(grads, grads_mean, axis_name, b_local: int,
+                      n_workers: int) -> NoiseStats:
+    """Inside ``shard_map``: the per-worker vs psum'd-mean pair.
+
+    ``grads`` is this worker's local shard gradient, ``grads_mean`` the
+    already-psum'd mean (both free — the mesh computes them anyway). Only
+    one scalar psum is added. ``gsq_big`` is computed on the replicated
+    mean, so every worker (and a single-device oracle fed the same mean)
+    reduces it in the identical order. ``n_workers`` is static (the mesh
+    axis product) so the batch sizes stay Python ints.
+    """
+    local = tree_sqnorm(grads)
+    small = jax.lax.psum(local, axis_name) / jnp.float32(n_workers)
+    return NoiseStats(gsq_small=small, gsq_big=tree_sqnorm(grads_mean),
+                      b_small=b_local, b_big=int(b_local) * int(n_workers))

@@ -50,18 +50,36 @@ def save(ckpt_dir: str, step: int, tree, *, extra: Optional[dict] = None,
 
 class AsyncSaver:
     """Single-slot background writer: a save in flight never blocks training;
-    a newer snapshot supersedes a queued older one."""
+    a newer snapshot supersedes a queued older one.
+
+    The pending slot and the drainer-liveness decision share ONE lock:
+    ``_drain`` only exits after clearing ``_running`` *while holding the
+    lock*, and ``submit`` respawns whenever ``_running`` is false — so a
+    submit can never observe a drainer that has already decided to exit but
+    still reads as alive (which used to silently drop the newest snapshot).
+    ``wait`` re-checks after every join for the same reason: a concurrent
+    submit may have spawned a fresh thread while we were joining a stale
+    handle.
+
+    ``last_saved_step`` is the newest step whose ``save`` has durably
+    completed (None before the first) — the trainer's replay-buffer trim
+    point: anything newer than the last *durable* checkpoint may still be
+    needed for an exact failure-resume.
+    """
 
     def __init__(self):
         self._lock = threading.Lock()
         self._pending: Optional[tuple] = None
         self._thread: Optional[threading.Thread] = None
+        self._running = False
+        self.last_saved_step: Optional[int] = None
 
     def submit(self, ckpt_dir: str, step: int, tree, extra=None, keep: int = 3):
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         with self._lock:
             self._pending = (ckpt_dir, step, host_tree, extra, keep)
-            if self._thread is None or not self._thread.is_alive():
+            if not self._running:
+                self._running = True
                 self._thread = threading.Thread(target=self._drain, daemon=True)
                 self._thread.start()
 
@@ -69,13 +87,20 @@ class AsyncSaver:
         while True:
             with self._lock:
                 if self._pending is None:
+                    self._running = False
                     return
                 job, self._pending = self._pending, None
             save(job[0], job[1], job[2], extra=job[3], keep=job[4])
+            with self._lock:
+                self.last_saved_step = job[1]
 
     def wait(self):
-        t = self._thread
-        if t is not None:
+        while True:
+            with self._lock:
+                t = self._thread
+                done = not self._running and self._pending is None
+            if t is None or (done and not t.is_alive()):
+                return
             t.join()
 
 

@@ -41,6 +41,24 @@ def test_async_saver(tmp_path):
     assert C.latest_step(str(tmp_path)) == 4
 
 
+def test_async_saver_submit_drain_race(tmp_path):
+    """Stress the submit/drain handoff: the drainer used to decide to exit
+    (pending empty) while still reading as alive, so a submit landing in that
+    window parked its snapshot in the pending slot with no thread to write it
+    — ``wait()`` then returned with the newest step missing on disk. Many
+    rapid submit/wait cycles make that window land reliably."""
+    saver = C.AsyncSaver()
+    tree = {"x": jnp.ones(2)}
+    for step in range(1, 120):
+        saver.submit(str(tmp_path), step, tree, keep=3)
+        if step % 3 == 0:
+            saver.wait()
+            assert C.latest_step(str(tmp_path)) == step, step
+    saver.wait()
+    assert C.latest_step(str(tmp_path)) == 119
+    assert saver.last_saved_step == 119
+
+
 def test_restore_with_shardings(tmp_path):
     """Elastic restart: restore onto explicit (single-device) shardings."""
     tree = make_tree(jax.random.PRNGKey(2))

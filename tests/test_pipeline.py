@@ -1,0 +1,94 @@
+"""Data pipeline: determinism, sharding, and Prefetcher liveness.
+
+The Prefetcher regressions pinned here were both hangs:
+
+* a producer exception used to kill the daemon thread silently, leaving the
+  consumer blocked forever on ``q.get()`` — now the exception rides a
+  sentinel through the queue and re-raises on the consumer thread;
+* ``close()`` on a producer blocked in ``q.put`` (full queue) used to
+  deadlock — the producer now waits with a timeout and re-checks the stop
+  flag, and ``close`` drains until the thread exits.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import (MarkovLM, Prefetcher, blob_task, image_task,
+                                 shard_batch, text_cls_task)
+
+
+def test_markov_deterministic():
+    lm = MarkovLM(vocab=16, seed=3)
+    a = next(lm.batches(4, 8, seed=5))
+    b = next(MarkovLM(vocab=16, seed=3).batches(4, 8, seed=5))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_task_shapes():
+    img = next(image_task(n_classes=4, size=8)(batch=5))
+    assert img["image"].shape == (5, 3, 8, 8)
+    txt = next(text_cls_task(vocab=50)(batch=3, seq=7))
+    assert txt["tokens"].shape == (3, 7)
+    blob = next(blob_task(size=12)(batch=6))
+    assert blob["image"].shape == (6, 144)
+
+
+def test_prefetcher_yields_in_order():
+    src = ({"i": np.full((2,), i, np.int32)} for i in range(6))
+    pf = Prefetcher(src, depth=2)
+    got = [int(b["i"][0]) for b in pf]
+    assert got == list(range(6))
+    # exhaustion is persistent, not a hang
+    with pytest.raises(StopIteration):
+        next(pf)
+    pf.close()
+
+
+def test_prefetcher_propagates_producer_error():
+    """A crashing producer must surface on the consumer thread (it used to
+    leave ``__next__`` blocked forever on an empty queue)."""
+    def bad():
+        yield {"x": np.zeros(1)}
+        raise ValueError("producer exploded")
+
+    pf = Prefetcher(bad(), depth=2)
+    next(pf)
+    with pytest.raises(ValueError, match="producer exploded"):
+        # bounded wait: a regression here hangs, so run the get in the
+        # timeout discipline pytest gives the whole test
+        next(pf)
+    # and the error is sticky — later calls re-raise instead of blocking
+    with pytest.raises(ValueError, match="producer exploded"):
+        next(pf)
+    pf.close()
+
+
+def test_prefetcher_close_unblocks_full_queue():
+    """close() must terminate a producer stuck in ``put`` on a full queue."""
+    def endless():
+        i = 0
+        while True:
+            yield {"i": np.full((1,), i, np.int32)}
+            i += 1
+
+    pf = Prefetcher(endless(), depth=1)
+    time.sleep(0.1)          # let the producer fill the queue and block
+    assert pf.t.is_alive()
+    done = threading.Event()
+
+    def closer():
+        pf.close()
+        done.set()
+
+    t = threading.Thread(target=closer, daemon=True)
+    t.start()
+    assert done.wait(timeout=5.0), "close() deadlocked on a full queue"
+    assert not pf.t.is_alive()
+
+
+def test_shard_batch_no_sharding():
+    out = shard_batch({"x": np.ones((4, 2), np.float32)})
+    assert out["x"].shape == (4, 2)
