@@ -52,6 +52,13 @@ new record is more than ``tol`` slower than the old record's:
   that never reaches it records 0.0 and fails). These rows carry accuracy
   curves, not timings, so they are deliberately NOT in the trajectory
   (us_per_call) gate list;
+* the ``moe`` section's ``moe_grouped`` row (grouped ragged fused LUT-GEMM
+  for MoE expert dispatch, docs/moe.md) — trajectory-gated from PR 10 on,
+  with the within-record floor ``speedup_vs_vmapped >= 1.0``: the single
+  groupinfo-skipping grouped kernel must never fall behind the per-expert
+  vmapped composition it replaced (both sides bitwise-identical, so the
+  floor is purely about dispatch efficiency). The ``moe_exact`` row is
+  context only, for the same reason the exact-bwd train rows are;
 * the ``serve`` section's ``serve_paged`` row (paged KV + prefix reuse
   under a fixed HBM budget, docs/serving.md "Paged KV") — trajectory-gated
   µs per generated token from PR 8 on, with two within-record floors:
@@ -101,6 +108,8 @@ GATES = [
      {"mode": "attn_fused", "attn": "prefill256"}),
     ("attn.fused@decode1x256", "attn",
      {"mode": "attn_fused", "attn": "decode1x256"}),
+    ("moe.grouped@granite40x8", "moe",
+     {"mode": "moe_grouped", "E": 40, "top_k": 8}),
     ("serve.continuous", "serve",
      {"mode": "serve_continuous"}),
     ("serve.paged", "serve",
@@ -120,6 +129,9 @@ FLOORS = [
     ("attn.fused@prefill256 ~parity", "attn",
      {"mode": "attn_fused", "attn": "prefill256"},
      "speedup_vs_unfused", 0.75),
+    ("moe.grouped >= vmapped", "moe",
+     {"mode": "moe_grouped", "E": 40, "top_k": 8},
+     "speedup_vs_vmapped", 1.0),
     ("serve.continuous >= 1.25x wave", "serve",
      {"mode": "serve_continuous"}, "speedup_vs_wave", 1.25),
     ("serve.paged >= contiguous under same budget", "serve",

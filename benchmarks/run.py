@@ -23,6 +23,16 @@ sections:
   [sharded] the same routes under a 2x4 host-platform (data, model) mesh
             (needs XLA_FLAGS=--xla_force_host_platform_device_count=8;
             printed as skipped otherwise)
+  [moe]     grouped ragged fused LUT-GEMM for MoE expert dispatch: ONE
+            pallas_call over all E expert GEMMs (groupinfo skips row blocks
+            past each expert's live token count) vs the per-expert vmapped
+            composition it is bitwise-identical to, vs the exact f32 grouped
+            einsum (context), at a granite-ish skewed-routing geometry.
+            Runs after the serve section: its E=40 vmapped baseline alone
+            compiles ~E kernel instances, and that jit/heap residue would
+            tax the allocation-heavy serve rows (same rationale as
+            [recovery] running last); its own rows are a within-section
+            pair, immune to the ordering
   [recovery] damped vs fixed-batch QAT recovery accuracy-vs-samples curves
             (gradient-noise batch damping, docs/training.md); rows join the
             train record section, the damped row's sample_efficiency >= 1.0
@@ -430,6 +440,69 @@ def attn_modes(records: list | None = None):
                                 "speedup_vs_unfused": round(base / us, 3)})
 
 
+def moe_modes(records: list | None = None):
+    """Grouped ragged fused LUT-GEMM for MoE expert dispatch (docs/moe.md).
+
+    ``moe_grouped`` runs ALL E expert GEMMs as ONE ``pallas_call`` whose
+    per-expert groupinfo lets the grid skip row blocks past each expert's
+    live token count; ``moe_vmapped`` is the per-expert vmapped fused-dense
+    composition it is bitwise-identical to (one kernel instance per expert,
+    every instance walking the full capacity buffer); ``moe_exact`` is the
+    exact-f32 grouped einsum, context only — interpret-mode LUT gathers
+    cannot beat native XLA GEMMs, so the regression floor is grouped >=
+    vmapped (benchmarks/check_regression.py), not grouped vs exact.
+
+    Geometry: granite-ish routing (E=40 experts, top-8) at reduced width,
+    t=256 tokens, capacity factor 1.25 -> 64-row capacity buffers, with a
+    skewed (Zipf) routing profile so the ragged skip has something to skip
+    — the load imbalance the grouped kernel exists for. ``live_frac`` is
+    the occupied fraction of the E x cap buffer rows."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import make_acu
+    from repro.core.acu import AcuMode
+    from repro.core.approx_ops import ApproxConfig, approx_grouped_dense
+
+    cfg = ApproxConfig(acu=make_acu("mul8s_1L2H", AcuMode.LUT,
+                                    use_pallas=True, fused=True))
+    E, top_k, t, D, F = 40, 8, 256, 256, 128
+    cap = int(round(t * top_k / E * 1.25))            # 64
+    rng = np.random.default_rng(7)
+    share = 1.0 / np.arange(1, E + 1) ** 1.2          # Zipf-ish skew
+    share /= share.sum()
+    assign = rng.choice(E, size=t * top_k, p=share)
+    counts = jnp.asarray(np.minimum(np.bincount(assign, minlength=E), cap),
+                         jnp.int32)
+    x = jnp.asarray(rng.normal(size=(E, cap, D)), jnp.float32)
+    x = x * (jnp.arange(cap)[None, :] < counts[:, None])[..., None]
+    w = jnp.asarray(rng.normal(size=(E, D, F)), jnp.float32)
+    live = float(counts.sum()) / (E * cap)
+
+    fns = {
+        "moe_grouped": jax.jit(
+            lambda x, w, c: approx_grouped_dense(x, w, cfg, c)),
+        "moe_vmapped": jax.jit(
+            lambda x, w, c: approx_grouped_dense(x, w, cfg, c, route="vmap")),
+        "moe_exact": jax.jit(
+            lambda x, w, c: jnp.einsum("eck,ekn->ecn", x, w)),
+    }
+    times = {m: _time_call(lambda fn=fn: fn(x, w, counts), reps=3)
+             for m, fn in fns.items()}
+    base = times["moe_vmapped"]
+    print("mode,E,top_k,cap,D,F,live_frac,us_per_call,vs_vmapped")
+    for mode, us in times.items():
+        print(f"{mode},{E},{top_k},{cap},{D},{F},{live:.2f},{us:.0f},"
+              f"{base/us:.2f}x")
+        if records is not None:
+            row = {"mode": mode, "E": E, "top_k": top_k, "cap": cap,
+                   "D": D, "F": F, "live_frac": round(live, 3),
+                   "us_per_call": round(us, 1)}
+            if mode != "moe_exact":    # exact f32 is context only
+                row["speedup_vs_vmapped"] = round(base / us, 3)
+            records.append(row)
+
+
 def serve_modes(records: list | None = None):
     """Sustained serving throughput, wave vs continuous batching, end-to-end
     approximate decode (LUT-Pallas acfg: every GEMM and every attention
@@ -653,6 +726,7 @@ def main(argv=None):
     layer_records: list = []
     train_records: list = []
     attn_records: list = []
+    moe_records: list = []
     serve_records: list = []
     sharded_records: list = []
     section("kernels")
@@ -668,6 +742,12 @@ def main(argv=None):
     serve_modes(serve_records)
     section("sharded")
     sharded_modes(sharded_records)
+    # moe AFTER serve: the E=40 per-expert vmapped baseline compiles ~E
+    # kernel instances and that jit/heap residue taxes the allocation-heavy
+    # serve rows (same reason recovery runs last); the moe rows themselves
+    # are a within-section pair, immune to the ordering
+    section("moe")
+    moe_modes(moe_records)
     # recovery runs LAST: its two full training runs leave enough heap/jit
     # residue to tax the allocation-heavy serve rows by ~30% if it runs
     # before them (its own rows are accuracy curves, immune to that)
@@ -688,6 +768,7 @@ def main(argv=None):
             "layers": layer_records,
             "train": train_records,
             "attn": attn_records,
+            "moe": moe_records,
             "serve": serve_records,
             "sharded": sharded_records,
         }

@@ -1,8 +1,10 @@
 """AdaPT-JAX core: the paper's contribution as composable JAX modules."""
-from .acu import (Acu, AcuMode, ConvPlan, ConvSpec, MatmulPlan, conv_plan,
-                  make_acu, matmul_plan, resolve_conv_padding)
-from .approx_ops import (ApproxConfig, approx_dense, approx_matmul, conv2d,
-                         conv_plan_report, separable_conv2d)
+from .acu import (Acu, AcuMode, ConvPlan, ConvSpec, GroupedPlan, GroupedSpec,
+                  MatmulPlan, conv_plan, grouped_plan, make_acu, matmul_plan,
+                  resolve_conv_padding)
+from .approx_ops import (ApproxConfig, approx_dense, approx_grouped_dense,
+                         approx_matmul, conv2d, conv_plan_report,
+                         separable_conv2d)
 from .calibration import HistogramObserver, calibrate_activation, calibrate_weight
 from .lut import build_error_table, build_lut, factorize_error, rank_for_fidelity
 from .multipliers import REGISTRY, Multiplier, error_stats, get_multiplier
@@ -10,9 +12,11 @@ from .quantization import (QParams, acu_operand, affine_qparams, dequantize,
                            fake_quantize, quantize, symmetric_qparams)
 
 __all__ = [
-    "Acu", "AcuMode", "ConvPlan", "ConvSpec", "MatmulPlan", "conv_plan",
-    "make_acu", "matmul_plan", "resolve_conv_padding",
-    "ApproxConfig", "approx_dense", "approx_matmul", "conv_plan_report",
+    "Acu", "AcuMode", "ConvPlan", "ConvSpec", "GroupedPlan", "GroupedSpec",
+    "MatmulPlan", "conv_plan", "grouped_plan", "make_acu", "matmul_plan",
+    "resolve_conv_padding",
+    "ApproxConfig", "approx_dense", "approx_grouped_dense", "approx_matmul",
+    "conv_plan_report",
     "conv2d", "separable_conv2d", "HistogramObserver", "calibrate_activation",
     "calibrate_weight", "build_error_table", "build_lut", "factorize_error",
     "rank_for_fidelity", "REGISTRY", "Multiplier", "error_stats", "get_multiplier",

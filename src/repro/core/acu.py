@@ -1000,6 +1000,154 @@ def attn_plan(acu: Acu, spec: AttnSpec, *, a_bits: Optional[int] = None,
                     partition=partition, report=tuple(report))
 
 
+# ---------------------------------------------------------------------------
+# grouped ragged GEMM plan (MoE expert dispatch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GroupedSpec:
+    """Static geometry of one MoE grouped-GEMM site (hashable: plan cache
+    key).
+
+    ``n_experts``: expert count E; ``cap``: capacity rows per (dispatch
+    block, expert) group; ``d_in``/``d_out``: the GEMM contraction / output
+    widths; ``n_blocks``: the dispatch block count ``nb`` the MoE router
+    resolved (``models/moe._dispatch_blocks`` — its silent power-of-2
+    fallback is surfaced here so ``describe()`` reports the block layout the
+    kernel actually runs). The grouped operand has ``G = n_blocks *
+    n_experts`` groups; group ``g`` multiplies expert ``g % n_experts``.
+    """
+
+    n_experts: int
+    cap: int
+    d_in: int
+    d_out: int
+    n_blocks: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedPlan:
+    """A resolved grouped ragged GEMM route for one ACU at one MoE geometry.
+
+    ``route`` is one of
+
+    * ``"fused_grouped"`` — ONE ``pallas_call`` for all E expert GEMMs
+      (``kernels/fused_lut_grouped``): the grid walks groups x row-blocks
+      and a per-group ``groupinfo = [row_base, row_count]`` operand skips
+      row-blocks past each group's live token count; in-kernel per-tensor
+      activation quantize, shifted-code LUT gathers, int32 accumulate with
+      integer-space K-pad correction, ONE combined-scale dequant.
+      ``fn(xe, wq, xs, xz, ws, counts) -> (G, cap, d_out) f32`` with ``xe``
+      (G, cap, d_in) float dispatched activations, ``wq`` (E, d_in, d_out)
+      shifted int weight codes, ``xs``/``xz`` per-tensor activation qparams
+      SHARED across groups (the caller pins ONE scale over the whole
+      dispatched tensor so grouped == per-expert-vmap bitwise), ``ws``
+      (E, d_out) per-expert weight scales, ``counts`` (G,) int32 live rows.
+      Rows ``>= counts[g]`` are exactly 0.0 — dead capacity slots contribute
+      nothing even under biased-M00 multipliers (masking, not slicing).
+      Mesh-wrapped when a partition is active: experts over the
+      ``acu_grouped_experts`` axes (expert parallelism), dispatch blocks
+      over ``acu_grouped_rows``, opt-in ``acu_grouped_k`` contraction
+      sharding with an int32 psum before the dequant.
+    * ``"vmap"`` — the audited fallback (non-LUT mode, no Pallas routing, no
+      table): ``fn`` is None and the caller keeps the per-expert vmapped
+      ``approx_dense`` composition — which doubles as the bit-exactness
+      oracle for the fused route when driven with the same pinned shared
+      activation scale and live-row mask.
+    """
+
+    mode: AcuMode
+    bits: int
+    use_pallas: bool
+    route: str
+    spec: GroupedSpec
+    fn: Optional[Callable[..., Array]] = None
+    partition: Optional[object] = None
+    report: tuple[str, ...] = ()
+
+    def __call__(self, *args) -> Array:
+        assert self.fn is not None, f"route {self.route} has no direct kernel"
+        return self.fn(*args)
+
+    def describe(self) -> dict:
+        part = self.partition
+        return {
+            "route": self.route,
+            "mode": self.mode.value,
+            "experts": self.spec.n_experts,
+            "cap": self.spec.cap,
+            "n_blocks": self.spec.n_blocks,
+            "gemm": f"({self.spec.n_blocks}x{self.spec.n_experts}, "
+                    f"{self.spec.cap}, {self.spec.d_in}) x "
+                    f"({self.spec.n_experts}, {self.spec.d_in}, "
+                    f"{self.spec.d_out})",
+            "partition": None if part is None else
+                f"blocks{part.rows}x experts{part.cols}x k{part.k} "
+                f"({part.n_rows}x{part.n_cols}x{part.n_k} way)",
+            "report": list(self.report) + (list(part.report) if part else []),
+        }
+
+
+def grouped_plan(acu: Acu, spec: GroupedSpec, *, a_bits: Optional[int] = None,
+                 mesh=None, route: Optional[str] = None) -> GroupedPlan:
+    """Resolve one MoE grouped-GEMM site: expert geometry x (mode, bits,
+    use_pallas) x mesh -> a concrete route. Mirrors :func:`attn_plan`'s
+    silent-but-audited fallback contract: an ACU that cannot serve the fused
+    grouped kernel resolves to ``"vmap"`` (the caller keeps its per-expert
+    vmapped composition). ``route`` pins one explicitly (``"fused_grouped"``
+    raises if unavailable; ``"vmap"`` forces the per-expert path — that is
+    how the bit-exactness oracle and the bench baseline are driven).
+    """
+    a_bits = acu.bits if a_bits is None else a_bits
+    ctx = _resolve_mesh(mesh)
+    report: list[str] = []
+    if route not in (None, "fused_grouped", "vmap"):
+        raise ValueError(f"unknown grouped route {route!r}")
+
+    can_fuse = acu.mode == AcuMode.LUT and acu.use_pallas \
+        and acu.lut is not None
+    if not can_fuse and route != "vmap":
+        report.append(f"fused grouped GEMM needs LUT mode + use_pallas + a "
+                      f"built table (have mode={acu.mode.value}, "
+                      f"use_pallas={acu.use_pallas}); expert GEMMs stay on "
+                      f"the per-expert vmapped route")
+    if route == "fused_grouped" and not can_fuse:
+        raise ValueError(f"fused_grouped route unavailable: {report}")
+    if route == "vmap" or not can_fuse:
+        if route == "vmap":
+            report.append("route pinned to per-expert vmap by caller")
+        return GroupedPlan(mode=acu.mode, bits=acu.bits,
+                           use_pallas=acu.use_pallas, route="vmap", spec=spec,
+                           report=tuple(report))
+
+    from repro.kernels.fused_lut_grouped import ops as gops
+
+    def grouped_call(xe, wq, xs, xz, ws, counts, *, emit_acc=False):
+        # jnp.asarray stays inside fn: plans are cached across jit traces
+        # and a device constant created during one trace must not leak
+        # into another
+        return gops.fused_lut_grouped(xe, wq, jnp.asarray(acu.lut),
+                                      acu.offset, xs, xz, ws, counts,
+                                      bits=a_bits, interpret=acu.interpret,
+                                      emit_acc=emit_acc)
+
+    partition = None
+    fn = grouped_call
+    if ctx is not None:
+        from repro.parallel import acu_shard
+        partition = acu_shard.resolve_grouped_partition(
+            ctx, n_experts=spec.n_experts, n_blocks=spec.n_blocks)
+        if partition is not None:
+            fn = acu_shard.wrap_fused_grouped(
+                grouped_call,
+                lambda *args: grouped_call(*args, emit_acc=True),
+                ctx, partition, acu.m00(), n_experts=spec.n_experts)
+
+    return GroupedPlan(mode=acu.mode, bits=acu.bits, use_pallas=True,
+                       route="fused_grouped", spec=spec, fn=fn,
+                       partition=partition, report=tuple(report))
+
+
 def make_acu(name: str, mode: AcuMode | str = AcuMode.LUT, rank: int = 8,
              use_pallas: bool = False, interpret: bool | None = None,
              fused: bool = False) -> Acu:

@@ -15,7 +15,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .acu import Acu, AcuMode, matmul_plan
+from .acu import Acu, AcuMode, GroupedSpec, grouped_plan, matmul_plan
 from .quantization import (QParams, acu_operand, dequantize, fake_quantize,
                            pin_rounding, quantize)
 
@@ -221,6 +221,158 @@ def approx_dense(x: Array, w: Array, b: Optional[Array], cfg: Optional[ApproxCon
             y = pin_rounding(y)
         y = y + b
     return y
+
+
+# ---------------------------------------------------------------------------
+# Grouped ragged MoE GEMM: ONE pallas_call for all E expert GEMMs
+# (kernels/fused_lut_grouped), routed by core/acu.grouped_plan. The resolved
+# STE fn is cached per (acu, bits, spec, route, mesh) like the dense fns.
+# ---------------------------------------------------------------------------
+
+def _get_grouped_ste_fn(acu: Acu, a_bits: int, w_bits: int,
+                        spec: GroupedSpec, ctx, route: Optional[str] = None):
+    """Per-ACU custom_vjp grouped GEMM: approximate ragged forward, exact-f32
+    STE backward.
+
+    The forward dispatches through :func:`~repro.core.acu.grouped_plan` —
+    the ``"fused_grouped"`` route runs every expert GEMM inside one ragged
+    Pallas kernel (mesh-wrapped when a partition is active); the ``"vmap"``
+    route keeps the per-expert vmapped composition (quantize -> per-expert
+    GEMM -> dequant, fused or unfused per :func:`matmul_plan`), which doubles
+    as the fused route's bit-exactness oracle since both consume the same
+    pinned shared activation scale and mask dead capacity rows to exactly
+    zero. The backward is the exact-f32 STE on the fake-quantized residuals
+    with the incoming gradient masked to the live rows — dead capacity slots
+    emit zero forward, so nothing may flow back through them.
+    """
+    key = ("grouped", id(acu), a_bits, w_bits, spec, route,
+           _mesh_cache_key(ctx))
+    if key in _STE_CACHE:
+        return _STE_CACHE[key]
+
+    plan = grouped_plan(acu, spec, a_bits=a_bits, mesh=ctx or False,
+                        route=route)
+    E, C, nb = spec.n_experts, spec.cap, spec.n_blocks
+    if plan.route != "fused_grouped":
+        # per-expert vmapped composition (single-device inner plan — the
+        # audited fallback runs replicated, see plan.report)
+        mplan = matmul_plan(acu, a_bits=a_bits, mesh=False)
+
+    def _live(counts):
+        return jnp.arange(C)[None, :] < jnp.clip(counts, 0, C)[:, None]
+
+    @jax.custom_vjp
+    def ste_grouped(xe, w, xs, xz, ws, counts):
+        xqp = QParams(scale=xs, zero_point=xz, bits=a_bits)
+        if plan.route == "fused_grouped":
+            wqp = QParams(scale=ws.reshape(E, 1, -1),
+                          zero_point=jnp.zeros((), jnp.float32), bits=w_bits)
+            wq = acu_operand(quantize(w, wqp), wqp)
+            return plan(xe, wq, xs, xz, ws, counts)
+
+        def one(xg, wg, wsg):
+            wqp_e = QParams(scale=wsg,
+                            zero_point=jnp.zeros((), jnp.float32),
+                            bits=w_bits, axis=1)
+            wq_e = acu_operand(quantize(wg, wqp_e), wqp_e)
+            if mplan.fused:
+                return mplan(xg, wq_e, xs, xz, wsg)
+            xq = acu_operand(quantize(xg, xqp), xqp)
+            return _affine_matmul_dequant(mplan(xq, wq_e), xqp, wqp_e)
+
+        per_e = jax.vmap(one, in_axes=(0, 0, 0))
+        y = jax.vmap(per_e, in_axes=(0, None, None))(
+            xe.reshape(nb, E, C, xe.shape[-1]), w, ws)
+        y = y.reshape(nb * E, C, y.shape[-1])
+        # masking, not slicing: dead capacity rows still produce
+        # sum_k LUT[0, w] != 0 under biased-M00 multipliers
+        return jnp.where(_live(counts)[..., None], y, 0.0)
+
+    def fwd(xe, w, xs, xz, ws, counts):
+        y = ste_grouped(xe, w, xs, xz, ws, counts)
+        xqp = QParams(scale=xs, zero_point=xz, bits=a_bits)
+        wqp = QParams(scale=ws.reshape(E, 1, -1),
+                      zero_point=jnp.zeros((), jnp.float32), bits=w_bits)
+        xf = fake_quantize(xe, xqp).astype(xe.dtype)
+        wf = fake_quantize(w, wqp).astype(w.dtype)
+        return y, (xf, wf, counts)
+
+    def bwd(res, g):
+        # exact-f32 STE on the fake-quantized residuals; the incoming
+        # gradient is masked to the live rows (the forward emits exactly
+        # zero past each group's count, so dead slots carry no gradient)
+        xf, wf, counts = res
+        g = jnp.where(_live(counts)[..., None], g.astype(jnp.float32), 0.0)
+        g4 = g.reshape(nb, E, C, g.shape[-1])
+        xf4 = xf.astype(jnp.float32).reshape(nb, E, C, xf.shape[-1])
+        wff = wf.astype(jnp.float32)
+        gx = jnp.einsum("becn,ekn->beck", g4, wff)
+        gx = gx.reshape(xf.shape).astype(xf.dtype)
+        gw = jnp.einsum("beck,becn->ekn", xf4, g4).astype(wf.dtype)
+        return (gx, gw, None, None, None, None)
+
+    ste_grouped.defvjp(fwd, bwd)
+    _STE_CACHE[key] = ste_grouped
+    return ste_grouped
+
+
+def approx_grouped_dense(xe: Array, w: Array, cfg: ApproxConfig,
+                         counts: Array, xqp: Optional[QParams] = None,
+                         wqp: Optional[QParams] = None,
+                         route: Optional[str] = None) -> Array:
+    """Ragged grouped MoE GEMM through the ACU: all E expert GEMMs in one
+    dispatch.
+
+    ``xe``: (G, C, K) dispatched capacity buffers — ``G = nb * E`` groups
+    (dispatch blocks x experts, block-major) of ``C`` capacity rows; group
+    ``g`` multiplies expert ``g % E``. ``w``: (E, K, N) per-expert weights;
+    ``counts``: (G,) live rows per group — output rows ``>= counts[g]`` are
+    exactly 0.0 (dead capacity slots contribute nothing, even under
+    biased-M00 multipliers).
+
+    The activation quantizer is ONE per-tensor scale over the whole
+    dispatched tensor (not per expert): that is what makes the grouped
+    kernel and the per-expert vmapped composition bitwise identical, and it
+    matches the dispatch semantics — the rows of every group came from the
+    same layer activation tensor. Weight scales stay per-expert
+    per-out-channel. ``route`` pins the plan route (``"fused_grouped"`` /
+    ``"vmap"``); the default audited fallback applies.
+
+    No ``fake_quant_only`` route: the grouped kernel runs the integer ACU
+    GEMM, which contradicts the fake-quant contract — QAT MoE keeps the
+    per-expert :func:`approx_dense` path.
+    """
+    G, C, K = xe.shape
+    E, _, N = w.shape
+    if G % E != 0:
+        raise ValueError(f"groups {G} not a multiple of experts {E}")
+    if cfg.fake_quant_only:
+        raise ValueError("approx_grouped_dense has no fake-quant route; "
+                         "keep the per-expert approx_dense path for QAT")
+    # inline_symmetric_scale (multiply form), not symmetric_qparams: these
+    # amaxes live inside the (possibly jitted) MoE layer, and the divide
+    # form compiles to a reciprocal multiply under SPMD/jit — a 1-ulp scale
+    # drift that lands upstream of pin_rounding (see quantization.py)
+    from .quantization import inline_symmetric_scale
+    if xqp is None:
+        xqp = QParams(
+            scale=inline_symmetric_scale(
+                jnp.maximum(jnp.max(jnp.abs(xe)), 1e-6), cfg.a_bits),
+            zero_point=jnp.zeros((), jnp.float32), bits=cfg.a_bits)
+    if wqp is None:
+        wqp = QParams(
+            scale=inline_symmetric_scale(
+                jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-9), cfg.w_bits),
+            zero_point=jnp.zeros((), jnp.float32), bits=cfg.w_bits)
+    ws = jnp.broadcast_to(
+        jnp.asarray(wqp.scale, jnp.float32).reshape(E, -1), (E, N))
+    spec = GroupedSpec(n_experts=E, cap=C, d_in=K, d_out=N, n_blocks=G // E)
+    from repro.parallel.sharding import current_mesh_context
+    fn = _get_grouped_ste_fn(cfg.acu, cfg.a_bits, cfg.w_bits, spec,
+                             ctx=current_mesh_context(), route=route)
+    y = fn(xe, w, xqp.scale, xqp.zero_point, ws,
+           jnp.asarray(counts, jnp.int32))
+    return y.astype(xe.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: ragged grouped fused LUT-GEMM for MoE expert dispatch.
+
+ONE ``pallas_call`` runs all E expert GEMMs of an MoE layer. The input is the
+dispatched capacity buffer flattened to ``(G * Cp, K)`` rows, where each of
+the ``G`` groups (``G = nb * E`` dispatch blocks x experts) owns a contiguous
+strip of ``Cp`` padded capacity rows and multiplies against the weights of
+expert ``g % E``. The grid walks ``(group, row-block, n-block, k-block)`` and
+a per-group ``groupinfo = [row_base, row_count]`` operand — the same pattern
+as flash-attention's per-row ``rowinfo`` extents — tells the kernel how many
+of each group's capacity rows actually hold routed tokens, so row-blocks past
+the live count skip the quantize + LUT-gather work entirely instead of
+grinding through dead padded slots. That skip is the whole point: a capacity
+buffer at ``moe_capacity`` 1.25+ with realistic (skewed) routing is mostly
+dead rows.
+
+Inside a live block the body is the established fused recipe, verbatim from
+``fused_lut_dense``: per-tensor in-kernel activation quantization, shifted
+code LUT gathers in ``inner``-row sub-slices, int32 accumulate into a
+persistent VMEM scratch tile, integer-space K-pad correction, and ONE
+combined-scale dequant (``acc * (xs * ws)``) on the final K step. int32 adds
+are associative and the k-chunk order matches the dense kernel's, so each
+live row is bit-identical to the per-expert ``fused_lut_dense`` call.
+
+Dead rows (``row >= row_count``) write exactly 0.0. This is a deliberate
+contract, not just hygiene: a zero *input* row still produces
+``sum_k LUT[off, wq + off] != 0`` under biased-M00 multipliers (masking is
+not slicing — same lesson as the attention kernel's masked-key semantics),
+and the combine step downstream must be able to rely on dead slots
+contributing nothing.
+
+``emit_acc=True`` (the mesh contraction-sharded route) returns the raw int32
+accumulator with dead rows zeroed in integer space; the sharded wrapper psums
+partials across K shards, applies the mesh-level pad correction, dequantizes
+once, and re-masks (the uniform correction un-zeroes dead rows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import resolve_interpret
+
+
+def _kernel(x_ref, w_ref, lut_ref, xs_ref, xz_ref, ws_ref, info_ref,
+            o_ref, acc_ref, *, offset: int, n_codes: int, lo: int, hi: int,
+            inner: int, k_pad: int, emit_acc: bool):
+    m_step = pl.program_id(1)
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bm = acc_ref.shape[0]
+    count = info_ref[0, 1]                 # live rows in this group
+    live = count - m_step * bm             # live rows at/after this row-block
+
+    @pl.when(live > 0)
+    def _accumulate():
+        # fused_lut_dense recipe verbatim — only executed for row-blocks that
+        # intersect the group's live rows; dead blocks skip straight past the
+        # quantize + gather work (the ragged-dispatch win)
+        xs = xs_ref[0]                             # per-tensor activation scale
+        xz = xz_ref[0]                             # activation zero-point (code)
+        x = x_ref[...].astype(jnp.float32)         # (bm, bk)
+        q = jnp.clip(jnp.round(x / xs + xz), lo, hi).astype(jnp.int32)
+        a = q - xz.astype(jnp.int32) + offset      # shifted code, index space
+        w = w_ref[0].astype(jnp.int32) + offset    # (bk, bn): expert g % E
+        lut = lut_ref[...]                         # (n_codes * n_codes,)
+        bm_, bk = a.shape
+        bn = w.shape[1]
+
+        def body(i, acc):
+            a_sl = jax.lax.dynamic_slice(a, (0, i * inner), (bm_, inner))
+            w_sl = jax.lax.dynamic_slice(w, (i * inner, 0), (inner, bn))
+            idx = a_sl[:, :, None] * n_codes + w_sl[None, :, :]
+            prods = jnp.take(lut, idx.reshape(-1), unique_indices=False,
+                             indices_are_sorted=False).reshape(bm_, inner, bn)
+            return acc + prods.sum(axis=1)
+
+        acc_ref[...] += jax.lax.fori_loop(0, bk // inner, body,
+                                          jnp.zeros((bm_, bn), jnp.int32))
+
+    @pl.when(k_step == pl.num_programs(3) - 1)
+    def _dequant():
+        acc = acc_ref[...]
+        if k_pad:  # padded k entries each contributed LUT[off, off] = M[0, 0]
+            # applied unconditionally: dead row-blocks never accumulated, so
+            # their value here is garbage either way — the row mask below is
+            # what guarantees they emit exactly zero
+            acc = acc - k_pad * lut_ref[offset * n_codes + offset]
+        row = m_step * bm + jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
+        if emit_acc:
+            # contraction sharding: masked int32 partials leave the kernel;
+            # the wrapper psums across K shards and dequantizes after
+            o_ref[...] = jnp.where(row < count, acc, 0)
+        else:
+            # one combined-scale multiply, same association as
+            # fused_lut_dense so live rows stay bitwise identical to the
+            # per-expert route; dead rows write exactly 0.0
+            xs = xs_ref[0]
+            o_ref[...] = jnp.where(
+                row < count, acc.astype(jnp.float32) * (xs * ws_ref[0]), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("offset", "n_codes", "lo", "hi",
+                                             "k_pad", "cp", "bm", "bk", "bn",
+                                             "inner", "interpret", "emit_acc"))
+def fused_lut_grouped_kernel(x: jnp.ndarray, wq: jnp.ndarray,
+                             lut_flat: jnp.ndarray, x_scale: jnp.ndarray,
+                             x_zp: jnp.ndarray, w_scale: jnp.ndarray,
+                             info: jnp.ndarray, *, offset: int, n_codes: int,
+                             lo: int, hi: int, cp: int, k_pad: int = 0,
+                             bm: int = 128, bk: int = 128, bn: int = 128,
+                             inner: int = 32, interpret: bool | None = None,
+                             emit_acc: bool = False) -> jnp.ndarray:
+    """x: (G * cp, K) float rows, group g owning rows [g*cp, (g+1)*cp);
+    wq: (E, K, N) shifted int weight codes (group g uses expert g % E);
+    lut_flat: (n_codes**2,) int32; x_scale/x_zp: shape-(1,) f32;
+    w_scale: (E, 1, N) f32; info: (G, 2) int32 ``[row_base, row_count]``.
+    Returns (G * cp, N) float32 with rows >= row_count exactly 0.0 — or the
+    raw int32 accumulator (dead rows zeroed) with ``emit_acc=True``."""
+    Gm, K = x.shape
+    E, _, N = wq.shape
+    G = Gm // cp
+    bm, bk, bn = min(bm, cp), min(bk, K), min(bn, N)
+    inner = min(inner, bk)
+    assert Gm == G * cp and G % E == 0, (Gm, cp, E)
+    assert cp % bm == 0 and K % bk == 0 and N % bn == 0 and bk % inner == 0, (
+        f"shape {(cp, K, N)} not divisible by tile {(bm, bk, bn)}/{inner}")
+    mblocks = cp // bm
+    grid = (G, mblocks, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, offset=offset, n_codes=n_codes, lo=lo,
+                          hi=hi, inner=inner, k_pad=k_pad, emit_acc=emit_acc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda g, m, n, k: (g * mblocks + m, k)),
+            pl.BlockSpec((1, bk, bn), lambda g, m, n, k: (g % E, k, n)),
+            pl.BlockSpec((n_codes * n_codes,), lambda g, m, n, k: (0,)),
+            pl.BlockSpec((1,), lambda g, m, n, k: (0,)),
+            pl.BlockSpec((1,), lambda g, m, n, k: (0,)),
+            pl.BlockSpec((1, 1, bn), lambda g, m, n, k: (g % E, 0, n)),
+            pl.BlockSpec((1, 2), lambda g, m, n, k: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda g, m, n, k: (g * mblocks + m, n)),
+        out_shape=jax.ShapeDtypeStruct((Gm, N),
+                                       jnp.int32 if emit_acc else jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=resolve_interpret(interpret),
+    )(x, wq, lut_flat, x_scale, x_zp, w_scale, info)

@@ -153,6 +153,8 @@ def compile_cell(arch: str, shape_name: str, *, multi_pod: bool,
         bundle.meta.get("cache_report", []),
         "compile_s": round(time.monotonic() - t0, 1),
     }
+    if "moe_dispatch" in bundle.meta:   # resolved MoE dispatch geometry
+        rec["moe_dispatch"] = bundle.meta["moe_dispatch"]
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} ({rec['mesh']}, {variant}): "
               f"T_comp={total.t_compute*1e3:.2f}ms T_mem={total.t_memory*1e3:.2f}ms "

@@ -93,6 +93,13 @@ def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
     tok_spec = planner.batch_spec(mesh, b, extra_dims=1)
     tok_shard = NamedSharding(mesh, tok_spec)
     meta = {"plan_report": pplan.report, "kind": shape.kind}
+    if cfg.n_experts:
+        # static MoE dispatch geometry under this mesh (resolved block
+        # count, per-block capacity) — the dry-run surfaces it per cell
+        from repro.models.moe import dispatch_geometry
+        with use_mesh(mesh):
+            meta["moe_dispatch"] = dispatch_geometry(
+                cfg, b * (1 if shape.kind == "decode" else s))
 
     if shape.kind == "train":
         opt = make_optimizer(cfg)

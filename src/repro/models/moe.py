@@ -15,6 +15,14 @@ Two dispatch layouts (cfg.moe_shard_dispatch — §Perf hillclimb #1):
   gather/scatter is then shard-local; only the expert weights (TP) or the
   expert dim (EP) move across devices. Per-block capacity is the standard
   local-capacity relaxation of GShard.
+
+Expert GEMMs under an ``ApproxConfig`` run as ONE grouped ragged fused
+LUT-GEMM per projection (``approx_grouped_dense`` — docs/moe.md): all
+``nb * E`` capacity buffers walk a single ``pallas_call`` whose groupinfo
+lets it skip row-blocks past each group's live token count, instead of
+launching E (or nb*E) separate kernels that all run ``cap`` rows. QAT
+(``fake_quant_only``) keeps the per-expert vmapped path — fake-quant has no
+LUT kernel to fuse.
 """
 from __future__ import annotations
 
@@ -23,28 +31,66 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.approx_ops import ApproxConfig, approx_dense
+from repro.core.approx_ops import ApproxConfig, approx_dense, approx_grouped_dense
 from repro.parallel.sharding import current_mesh_context, shard
 
 Array = jnp.ndarray
 
 
 def _route(xf: Array, router: Array, k: int):
+    """Router products: full softmax probs (T, E) plus renormalized top-k
+    weights/indices (T, k). One softmax serves both dispatch and the
+    load-balancing aux loss (``moe_block`` stats) — callers reuse these
+    instead of re-running the router."""
     gate_logits = xf.astype(jnp.float32) @ router.astype(jnp.float32)
     probs = jax.nn.softmax(gate_logits, axis=-1)               # (T, E)
     top_p, top_e = jax.lax.top_k(probs, k)                     # (T, k)
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
-    return top_p, top_e
+    return probs, top_p, top_e
 
 
-def _expert_ffn(xe: Array, p: dict, cfg, acfg, block_axes):
-    """xe: (..., E, C, D) -> (..., E, C, D) through the gated expert FFN."""
+def _aux_loss(probs: Array, top_e: Array, n_experts: int) -> Array:
+    """Switch-style load-balancing loss from routing products already in
+    hand: E * sum(frac_tokens_per_expert * mean_router_prob_per_expert)."""
+    frac_tokens = jax.nn.one_hot(top_e, n_experts).mean(
+        axis=tuple(range(top_e.ndim)))
+    frac_probs = probs.reshape(-1, n_experts).mean(0)
+    return n_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def _expert_ffn(xe: Array, p: dict, cfg, acfg, block_axes,
+                counts: Optional[Array] = None):
+    """xe: (..., E, C, D) -> (..., E, C, D) through the gated expert FFN.
+
+    ``counts`` (matching xe's leading block/expert dims) gives the live row
+    count of each capacity buffer; with an approx config the three
+    projections run as grouped ragged fused LUT-GEMMs that skip row-blocks
+    past the counts. Rows at or beyond a buffer's count come back exactly
+    0.0 from the grouped path (dead-row contract, see docs/moe.md).
+    """
     if acfg is None:
         gate = jnp.einsum("...ecd,edf->...ecf", xe, p["w_gate"])
         up = jnp.einsum("...ecd,edf->...ecf", xe, p["w_up"])
         h = jax.nn.silu(gate) * up
         h = shard(h, *block_axes, "experts", None, "expert_mlp")
         return jnp.einsum("...ecf,efd->...ecd", h, p["w_down"])
+
+    if not acfg.fake_quant_only:
+        # grouped ragged fused LUT-GEMM: one kernel per projection over all
+        # nb*E capacity buffers, ragged-skipping past each live count
+        lead = xe.shape[:-3]
+        e_dim, cap, d = xe.shape[-3:]
+        xg = xe.reshape(-1, cap, d)                      # (G, C, D)
+        g = xg.shape[0]
+        if counts is None:
+            cnt = jnp.full((g,), cap, jnp.int32)
+        else:
+            cnt = jnp.asarray(counts, jnp.int32).reshape(g)
+        gate = approx_grouped_dense(xg, p["w_gate"], acfg, cnt)
+        up = approx_grouped_dense(xg, p["w_up"], acfg, cnt)
+        h = jax.nn.silu(gate) * up
+        y = approx_grouped_dense(h, p["w_down"], acfg, cnt)
+        return y.reshape(*lead, e_dim, cap, d)
 
     def one(xe_e, wg, wu, wd):
         h = jax.nn.silu(approx_dense(xe_e, wg, None, acfg)) * \
@@ -74,16 +120,38 @@ def _dispatch_blocks(cfg, t: int) -> int:
     return max(nb, 1)
 
 
-def moe_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig]) -> Array:
-    """x: (B, S, D) -> (B, S, D).
+def dispatch_geometry(cfg, t: int) -> dict:
+    """Static dispatch geometry for ``t`` tokens under the active mesh
+    context: resolved block count (after the divisibility fallback), tokens
+    per block, and the per-block capacity. Pure shape arithmetic — safe to
+    call at trace/lowering time (the dry-run surfaces it per MoE cell)."""
+    e, k = cfg.n_experts, cfg.moe_top_k
+    nb = _dispatch_blocks(cfg, t)
+    tb = t // nb
+    cap = int(max(1, round(tb * k / e * cfg.moe_capacity)))
+    return {"n_blocks": nb, "tokens_per_block": tb, "capacity": cap,
+            "n_experts": e, "top_k": k,
+            "capacity_factor": cfg.moe_capacity}
+
+
+def moe_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig],
+              *, return_stats: bool = False):
+    """x: (B, S, D) -> (B, S, D), or ``(out, stats)`` with
+    ``return_stats=True``.
 
     p: router (D, E); w_gate/w_up (E, D, F); w_down (E, F, D).
+
+    stats (all computed from products the block already has in hand):
+      ``aux_loss``      Switch-style load-balancing loss (reuses the routing
+                        softmax — bitwise-identical to ``router_aux_loss``).
+      ``dropped_frac``  fraction of the T*k routed assignments dropped by
+                        the capacity limit (f32 scalar).
     """
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.moe_top_k
     t = b * s
     xf = x.reshape(t, d)
-    top_p, top_e = _route(xf, p["router"], k)
+    probs, top_p, top_e = _route(xf, p["router"], k)
 
     nb = _dispatch_blocks(cfg, t)
     tb = t // nb                 # tokens per block
@@ -97,6 +165,10 @@ def moe_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig]) -> Array:
     slot = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=2)[..., 0]
     keep = slot < cap                                          # (nb, TBk)
     dest = jnp.where(keep, flat_e * cap + slot, e * cap)       # (nb, TBk)
+
+    # live rows per capacity buffer: slots 0..count-1 are occupied (cumsum
+    # order packs kept tokens densely) — the grouped GEMM's groupinfo
+    counts = jnp.minimum(onehot.sum(axis=1), cap)              # (nb, E)
 
     # scatter token indices into per-block buffers (trash slot at the end)
     tok_in_block = jnp.arange(tb * k, dtype=jnp.int32) // k    # (TBk,)
@@ -113,7 +185,7 @@ def moe_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig]) -> Array:
     xe = xe.reshape(nb, e, cap, d)
     xe = shard(xe, "expert_blocks", "experts", None, None)
 
-    ye = _expert_ffn(xe, p, cfg, acfg, ("expert_blocks",))
+    ye = _expert_ffn(xe, p, cfg, acfg, ("expert_blocks",), counts=counts)
     ye = shard(ye, "expert_blocks", "experts", None, None)
 
     # combine (block-local gather + routed weights)
@@ -122,15 +194,19 @@ def moe_block(x: Array, p: dict, cfg, acfg: Optional[ApproxConfig]) -> Array:
     yk = jnp.take_along_axis(yeb, src[..., None], axis=1)      # (nb, TBk, D)
     yk = jnp.where(keep[..., None], yk, 0.0).reshape(t, k, d)
     out = (yk * top_p[:, :, None].astype(yk.dtype)).sum(axis=1)
-    return out.reshape(b, s, d)
+    out = out.reshape(b, s, d)
+    if not return_stats:
+        return out
+    stats = {
+        "aux_loss": _aux_loss(probs, top_e, e),
+        "dropped_frac": 1.0 - keep.mean(dtype=jnp.float32),
+    }
+    return out, stats
 
 
 def router_aux_loss(x: Array, router: Array, n_experts: int, top_k: int) -> Array:
-    """Switch-style load-balancing auxiliary loss."""
-    t = x.shape[0] * x.shape[1]
-    logits = x.reshape(t, -1).astype(jnp.float32) @ router.astype(jnp.float32)
-    probs = jax.nn.softmax(logits, -1)
-    _, top_e = jax.lax.top_k(probs, top_k)
-    frac_tokens = jax.nn.one_hot(top_e, n_experts).mean(axis=(0, 1))
-    frac_probs = probs.mean(0)
-    return n_experts * jnp.sum(frac_tokens * frac_probs)
+    """Switch-style load-balancing auxiliary loss (standalone API — shares
+    ``_route``/``_aux_loss`` with ``moe_block``'s stats)."""
+    xf = x.reshape(x.shape[0] * x.shape[1], -1)
+    probs, _, top_e = _route(xf, router, top_k)
+    return _aux_loss(probs, top_e, n_experts)

@@ -30,7 +30,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from .planner import (GemmPartition, acu_attn_partition, acu_conv_partition,
-                      acu_gemm_partition)
+                      acu_gemm_partition, acu_grouped_partition)
 from .sharding import MeshContext
 
 Array = jnp.ndarray
@@ -59,6 +59,16 @@ def resolve_attn_partition(ctx: MeshContext, *, hq: int, hkv: int
     KV heads with whole GQA groups per shard), or None when every axis is
     trivial."""
     part, _ = acu_attn_partition(ctx, hq=hq, hkv=hkv)
+    return part if part.total > 1 else None
+
+
+def resolve_grouped_partition(ctx: MeshContext, *, n_experts: int,
+                              n_blocks: int) -> Optional[GemmPartition]:
+    """The ``acu_grouped`` partition for the active mesh (rows = dispatch
+    blocks, cols = whole experts per shard, k = opt-in contraction), or None
+    when every axis is trivial."""
+    part, _ = acu_grouped_partition(ctx, n_experts=n_experts,
+                                    n_blocks=n_blocks)
     return part if part.total > 1 else None
 
 
@@ -322,6 +332,89 @@ def wrap_fused_bwd(bwd_call: Callable[..., Array],
             out_specs=part.out_spec(), check_rep=False,
         )(a_p, b_p, sa_a, sb_a)
         return out[:M, :N]
+
+    return fn
+
+
+def wrap_fused_grouped(grouped_call: Callable[..., Array],
+                       acc_call: Callable[..., Array], ctx: MeshContext,
+                       part: GemmPartition, m00: int, *, n_experts: int
+                       ) -> Callable[..., Array]:
+    """Shard a fused grouped ragged GEMM plan
+    ``fn(xe, wq, xs, xz, ws, counts) -> (G, C, N) f32``.
+
+    ``xe``: (G, C, K) dispatched capacity buffers with ``G = nb * E`` groups
+    laid out block-major — reshaped to (nb, E, C, K) here so dispatch blocks
+    shard over ``part.rows`` and experts over ``part.cols`` (expert
+    parallelism). Each shard keeps whole experts and whole dispatch blocks
+    (the partition resolver drops non-dividing axes), so the local group ->
+    expert mapping ``g % E_loc`` of the flattened (nb_loc * E_loc) slice is
+    exactly the global mapping restricted to the shard, the LUT and the
+    shared activation scale replicate, and the groupinfo counts ride with
+    their groups. Without K sharding each shard runs the full fused kernel
+    (dead-row masking stays in-kernel). With K sharding the kernel emits the
+    masked int32 accumulator (``acc_call``), partials psum in integer space,
+    the global K-pad correction lands once — which un-zeroes the dead rows,
+    so the live-row mask is re-applied after the dequant. Bit-exact vs the
+    single-device grouped kernel.
+    """
+    mesh = ctx.mesh
+
+    def fn(xe: Array, wq: Array, xs, xz, ws, counts: Array) -> Array:
+        G, C, K = xe.shape
+        E, _, N = wq.shape
+        assert E == n_experts and G % E == 0, (G, E, n_experts)
+        nb = G // E
+        assert nb % part.n_rows == 0 and E % part.n_cols == 0, (
+            f"partition {part.n_rows}x{part.n_cols} does not divide "
+            f"blocks={nb} experts={E} (resolver should have dropped axes)")
+        pk = (-K) % part.n_k
+        x4 = xe.reshape(nb, E, C, K)
+        if pk:  # 0.0 quantizes to the zero-point -> shifted code 0
+            x4 = jnp.pad(x4, ((0, 0), (0, 0), (0, 0), (0, pk)))
+            wq = jnp.pad(wq, ((0, 0), (0, pk), (0, 0)))
+        ws_e = jnp.broadcast_to(
+            jnp.asarray(ws, jnp.float32).reshape(E, -1), (E, N))
+        xs_a = jnp.asarray(xs, jnp.float32).reshape(1)
+        xz_a = jnp.asarray(xz, jnp.float32).reshape(1)
+        cnt = jnp.asarray(counts, jnp.int32).reshape(nb, E)
+
+        rows = part._dim(part.rows)
+        cols = part._dim(part.cols)
+        kdim = part._dim(part.k)
+
+        if not part.k:
+            def local(x_blk, wq_blk, xs_b, xz_b, ws_blk, cnt_blk):
+                nbl, el = x_blk.shape[0], x_blk.shape[1]
+                out = grouped_call(
+                    x_blk.reshape(nbl * el, *x_blk.shape[2:]), wq_blk,
+                    xs_b, xz_b, ws_blk, cnt_blk.reshape(-1))
+                return out.reshape(nbl, el, *out.shape[1:])
+        else:
+            def local(x_blk, wq_blk, xs_b, xz_b, ws_blk, cnt_blk):
+                nbl, el = x_blk.shape[0], x_blk.shape[1]
+                acc = acc_call(
+                    x_blk.reshape(nbl * el, *x_blk.shape[2:]), wq_blk,
+                    xs_b, xz_b, ws_blk, cnt_blk.reshape(-1))
+                acc = jax.lax.psum(acc, part.k)
+                if pk and m00:
+                    acc = acc - jnp.asarray(pk * m00, acc.dtype)
+                # same single combined-scale multiply as the kernel's in-VMEM
+                # dequant; then re-mask — the uniform pad correction gave the
+                # dead rows (zeroed in integer space per shard) -pk*m00
+                deq = (acc.reshape(nbl, el, *acc.shape[1:]).astype(jnp.float32)
+                       * (xs_b[0] * ws_blk)[None, :, None, :])
+                live = (jnp.arange(deq.shape[2])[None, None, :]
+                        < cnt_blk[:, :, None])
+                return jnp.where(live[..., None], deq, 0.0)
+
+        out = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(rows, cols, None, kdim), P(cols, kdim, None),
+                      P(None), P(None), P(cols, None), P(rows, cols)),
+            out_specs=P(rows, cols, None, None), check_rep=False,
+        )(x4, wq, xs_a, xz_a, ws_e, cnt)
+        return out.reshape(G, C, N)
 
     return fn
 

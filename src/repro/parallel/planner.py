@@ -397,6 +397,48 @@ def acu_attn_partition(ctx, *, hq: int, hkv: int
     return part, report
 
 
+def acu_grouped_partition(ctx, *, n_experts: int, n_blocks: int
+                          ) -> tuple[GemmPartition, list[str]]:
+    """Resolve the ``acu_grouped_rows`` / ``acu_grouped_experts`` /
+    ``acu_grouped_k`` logical rules for one MoE grouped ragged GEMM site:
+    ``cols`` shards the expert dim (expert parallelism — each shard runs the
+    grouped kernel over its expert slice with its slice of the groupinfo),
+    ``rows`` the dispatch-block dim ``nb`` (token parallelism: dispatch
+    blocks are independent capacity buffers), ``k`` the contraction (opt-in;
+    the masked int32 partial accumulators psum before dequant). Same
+    audited-fallback discipline as the attention partition: expert/block
+    axes that do not divide their dim are dropped (reported) rather than
+    padded — a fractional expert per shard would split a group's contiguous
+    capacity strip.
+    """
+    report: list[str] = []
+    k = ctx.axes_for("acu_grouped_k")
+    used = set(k)
+    cols = tuple(a for a in ctx.axes_for("acu_grouped_experts")
+                 if a not in used)
+    if len(cols) != len(ctx.axes_for("acu_grouped_experts")):
+        report.append("acu_grouped_experts overlaps acu_grouped_k -> shared "
+                      "axes dropped from experts (contraction sharding wins)")
+    while cols and n_experts % ctx.axis_prod(cols) != 0:
+        cols = cols[:-1]
+        report.append(f"experts {n_experts} %% acu_grouped_experts axes != 0 "
+                      f"-> experts {'partially sharded' if cols else 'replicated'} "
+                      f"(each shard needs whole experts)")
+    used.update(cols)
+    rows = tuple(a for a in ctx.axes_for("acu_grouped_rows") if a not in used)
+    while rows and n_blocks % ctx.axis_prod(rows) != 0:
+        rows = rows[:-1]
+        report.append(f"dispatch blocks {n_blocks} %% acu_grouped_rows axes "
+                      f"!= 0 -> blocks "
+                      f"{'partially sharded' if rows else 'replicated'}")
+    part = GemmPartition(rows=rows, cols=cols, k=k,
+                         n_rows=ctx.axis_prod(rows),
+                         n_cols=ctx.axis_prod(cols),
+                         n_k=ctx.axis_prod(k),
+                         report=tuple(report))
+    return part, report
+
+
 def opt_state_specs(param_plan: Plan, opt_state) -> Any:
     """Optimizer moments shard exactly like their params; scalars replicate."""
     pspecs = param_plan.specs

@@ -65,6 +65,14 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     # in KV and bit-exactness forbids re-associating the float rescale.
     "acu_attn_rows": ("pod", "data"),  # batch rows (B)
     "acu_attn_heads": ("model",),      # KV heads (GQA groups stay whole)
+    # ---- grouped ragged MoE GEMM (core/acu.py grouped_plan routes): experts
+    # shard over "model" (expert parallelism — each shard runs the grouped
+    # kernel over its expert slice, groupinfo rides with the groups), dispatch
+    # blocks over the token axes; "acu_grouped_k" opts in to contraction
+    # sharding (int32 psum of the masked partial accumulators before dequant).
+    "acu_grouped_rows": ("pod", "data"),  # dispatch blocks (nb)
+    "acu_grouped_experts": ("model",),    # experts (E)
+    "acu_grouped_k": (),                  # contraction dim; empty = replicated
 }
 
 
